@@ -1,0 +1,129 @@
+"""Ch. 7 (Tables 7.6/7.7, Figs. 7.11-7.12): approximate CNN accelerators.
+Trains a small CNN on a synthetic 4-class task (exact fp32), then runs
+inference through the approximation dispatch (conv as im2col x approx_matmul)
+at several configurations — reproducing the 0-5% accuracy-loss claim and the
+MAx-DNN fine-grained per-layer exploration."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.approx import ApproxMode, ApproxPolicy, ApproxSpec
+from repro.kernels.ops import approx_matmul
+
+# ---------------------------------------------------------------- dataset
+
+
+def make_data(n, key):
+    """16x16 images; class = quadrant containing the bright blob."""
+    ks = jax.random.split(key, 4)
+    labels = jax.random.randint(ks[0], (n,), 0, 4)
+    base = 0.9 * jax.random.normal(ks[1], (n, 16, 16))
+    # jittered blob centers + distractor blob -> non-trivial task (~90% acc)
+    jit = jax.random.randint(ks[2], (2, n), -2, 3)
+    cy = (labels // 2) * 8 + 4 + jit[0]
+    cx = (labels % 2) * 8 + 4 + jit[1]
+    yy, xx = jnp.mgrid[0:16, 0:16]
+    blob = jnp.exp(-(((yy[None] - cy[:, None, None]) ** 2
+                      + (xx[None] - cx[:, None, None]) ** 2) / 5.0))
+    dcy = jax.random.randint(ks[3], (n,), 0, 16)
+    dist = jnp.exp(-(((yy[None] - dcy[:, None, None]) ** 2
+                      + (xx[None] - dcy[:, None, None]) ** 2) / 3.0))
+    return (base + 1.3 * blob + 0.9 * dist)[..., None], labels
+
+
+# ------------------------------------------------------------------ model
+
+
+def _im2col(x, k=3):
+    B, H, W, C = x.shape
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    cols = [xp[:, dy:dy + H, dx:dx + W, :] for dy in range(k) for dx in range(k)]
+    return jnp.concatenate(cols, axis=-1)  # (B,H,W,k*k*C)
+
+
+def conv_apply(w, x, policy, path):
+    cols = _im2col(x)
+    B, H, W, D = cols.shape
+    y = approx_matmul(cols.reshape(-1, D), w, policy.spec_for(path))
+    return y.reshape(B, H, W, -1)
+
+
+def init_cnn(key):
+    ks = jax.random.split(key, 4)
+    g = jax.nn.initializers.he_normal()
+    return {
+        "c1": g(ks[0], (9 * 1, 16), jnp.float32),
+        "c2": g(ks[1], (9 * 16, 32), jnp.float32),
+        "fc1": g(ks[2], (4 * 4 * 32, 64), jnp.float32),
+        "fc2": g(ks[3], (64, 4), jnp.float32),
+    }
+
+
+def forward(params, x, policy):
+    h = jax.nn.relu(conv_apply(params["c1"], x, policy, "c1"))
+    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                              (1, 2, 2, 1), "VALID")
+    h = jax.nn.relu(conv_apply(params["c2"], h, policy, "c2"))
+    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                              (1, 2, 2, 1), "VALID")
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(approx_matmul(h, params["fc1"], policy.spec_for("fc1")))
+    return approx_matmul(h, params["fc2"], policy.spec_for("fc2"))
+
+
+def accuracy(params, x, y, policy):
+    logits = forward(params, x, policy)
+    return float((jnp.argmax(logits, -1) == y).mean())
+
+
+POLICIES = {
+    "exact": ApproxPolicy(),
+    "axq8": ApproxPolicy(default=ApproxSpec(mode=ApproxMode.AXQ, ebits=8, block=64)),
+    "axq6": ApproxPolicy(default=ApproxSpec(mode=ApproxMode.AXQ, ebits=6, block=64)),
+    "axq4": ApproxPolicy(default=ApproxSpec(mode=ApproxMode.AXQ, ebits=4, block=64)),
+    "axq3": ApproxPolicy(default=ApproxSpec(mode=ApproxMode.AXQ, ebits=3, block=64)),
+    "pr_p2r4": ApproxPolicy(default=ApproxSpec(mode=ApproxMode.PR_EMUL, p=2, r=4)),
+    "pr_p1r2": ApproxPolicy(default=ApproxSpec(mode=ApproxMode.PR_EMUL, p=1, r=2)),
+    "rad16": ApproxPolicy(default=ApproxSpec(mode=ApproxMode.RAD_EMUL, k=4)),
+    "pow2_w": ApproxPolicy(default=ApproxSpec(mode=ApproxMode.POW2_W)),
+    # MAx-DNN fine-grained: first conv exact, rest aggressive
+    "maxdnn_mixed": ApproxPolicy(rules=[
+        (r"c1", ApproxSpec()),
+        (r".*", ApproxSpec(mode=ApproxMode.AXQ, ebits=5, block=64)),
+    ]),
+}
+
+
+def rows():
+    out = []
+    key = jax.random.PRNGKey(0)
+    xtr, ytr = make_data(2048, key)
+    xte, yte = make_data(1024, jax.random.fold_in(key, 1))
+    params = init_cnn(jax.random.fold_in(key, 2))
+    exact = ApproxPolicy()
+
+    def loss_fn(p, x, y):
+        lg = forward(p, x, exact)
+        return -jnp.take_along_axis(jax.nn.log_softmax(lg), y[:, None], 1).mean()
+
+    @jax.jit
+    def step(p, x, y):
+        l, g = jax.value_and_grad(loss_fn)(p, x, y)
+        return jax.tree.map(lambda a, b: a - 0.05 * b, p, g), l
+
+    t0 = time.perf_counter()
+    for i in range(120):
+        s = (i * 256) % 2048
+        params, l = step(params, xtr[s:s + 256], ytr[s:s + 256])
+    train_us = (time.perf_counter() - t0) * 1e6
+    base = accuracy(params, xte, yte, exact)
+    out.append(("cnn.exact_acc", round(train_us, 0), round(base, 4)))
+    for name, pol in POLICIES.items():
+        if name == "exact":
+            continue
+        acc = accuracy(params, xte, yte, pol)
+        out.append((f"cnn.{name}_acc_drop_pct", 0.0,
+                    round(100 * (base - acc), 2)))
+    return out

@@ -1,0 +1,35 @@
+"""Ch. 3 (Tables 3.3/3.4, Fig. 3.4): DLSB multiplier overheads + the
+large-size-multiplication case study, on the paper's own unit-gate model,
+plus wall-time of the bit-exact emulation."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import area_model, encodings as enc
+
+
+def rows():
+    out = []
+    t = area_model.dlsb_overhead_table()
+    for n, (d1, d2) in t.items():
+        out.append((f"dlsb.overhead_straightforward_n{n}_pct", 0.0, round(d1, 2)))
+        out.append((f"dlsb.overhead_sophisticated_n{n}_pct", 0.0, round(d2, 2)))
+    # Fig 3.4 case study: n-bit DLSB2 vs (n+1)-bit CMB as building block
+    for n in (8, 16, 32):
+        gain = 100 * (1 - area_model.area_dlsb2(n) / area_model.area_cmb(n + 2))
+        out.append((f"dlsb.large_mult_area_gain_n{n}_pct", 0.0, round(gain, 1)))
+    # emulation throughput (bit-exact DLSB product, vectorized)
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.integers(-2**15, 2**15, 1 << 16), jnp.int32)
+    b = jnp.asarray(rng.integers(-2**15, 2**15, 1 << 16), jnp.int32)
+    ap = jnp.ones_like(a) % 2
+    f = jax.jit(lambda a, ap, b, bp: enc.mult_dlsb_sophisticated(a, ap, b, bp, 16))
+    f(a, ap, b, ap).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(10):
+        f(a, ap, b, ap).block_until_ready()
+    us = (time.perf_counter() - t0) / 10 * 1e6
+    out.append(("dlsb.emul_64k_products", round(us, 1), "bit-exact"))
+    return out

@@ -1,0 +1,31 @@
+"""Kernel-level timings + correctness envelopes (CPU interpret mode — TPU is
+the target; numbers prove correctness and degree-scaling, not TPU speed)."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantization import qmm_ref
+from repro.kernels.axqmm import axqmm
+
+
+def rows():
+    out = []
+    k = jax.random.PRNGKey(0)
+    x = jax.random.normal(k, (256, 1024), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(k, 1), (1024, 256), jnp.float32)
+    exact = x @ w
+    for e in (8, 6, 4):
+        f = jax.jit(lambda x, w, e=e: axqmm(x, w, ebits=e))
+        f(x, w).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(3):
+            y = f(x, w).block_until_ready()
+        us = (time.perf_counter() - t0) / 3 * 1e6
+        rel = float(jnp.abs(y - exact).mean() / jnp.abs(exact).mean())
+        out.append((f"kern.axqmm_e{e}_relerr", round(us, 0), f"{rel:.4f}"))
+        yr = qmm_ref(x, w, block=512, ebits=e)
+        out.append((f"kern.axqmm_e{e}_vs_ref_maxdiff", 0.0,
+                    f"{float(jnp.abs(y-yr).max()):.2e}"))
+    return out

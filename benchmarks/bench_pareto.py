@@ -1,0 +1,23 @@
+"""Ch. 6 (Figs. 6.4-6.6): cooperative-approximation design space + Pareto
+front resolution."""
+from repro.core import pareto
+
+
+def rows():
+    pts = pareto.explore(n=16, num_samples=1 << 15)
+    front = pareto.front(pts)
+    out = [
+        ("pareto.space_size", 0.0, len(pts)),
+        ("pareto.front_size", 0.0, len(front)),
+        ("pareto.front_families", 0.0,
+         "+".join(sorted({p.fam for p in front}))),
+    ]
+    roup_on_front = sum(1 for p in front if p.fam == "ROUP")
+    out.append(("pareto.roup_points_on_front", 0.0, roup_on_front))
+    for budget in (0.005, 0.01, 0.02):
+        sel = pareto.best_under_error(pts, budget)
+        base = [p for p in pts if p.fam == "CMB"][0]
+        gain = 100 * (1 - sel.energy / base.energy)
+        out.append((f"pareto.best_at_mred{budget}", 0.0,
+                    f"{sel.name}:energy_gain={gain:.1f}%"))
+    return out

@@ -1,0 +1,23 @@
+"""Ch. 5 (Tables 5.2-5.4): AxFXU perforation+rounding fixed-point errors and
+AxFPU floating-point errors (fp32 via the int64-exact numpy mirror)."""
+import numpy as np
+
+from repro.core import area_model, axmult, error_analysis as ea
+
+
+def rows():
+    out = []
+    n = 16
+    base_en = area_model.energy_proxy("CMB", n)
+    for p, r in [(1, 0), (2, 0), (0, 4), (0, 8), (1, 4), (2, 4), (2, 8), (3, 8)]:
+        rep = ea.evaluate_sampled(
+            lambda a, b: axmult.np_mult_pr(a, b, n=n, p=p, r=r), n, num=1 << 18)
+        gain = 100 * (1 - area_model.energy_proxy("PR", n, p=p, r=r) / base_en)
+        out.append((f"pr.AxFXU_p{p}r{r}_mred_pct", 0.0, round(100 * rep.mred, 4)))
+        out.append((f"pr.AxFXU_p{p}r{r}_energy_gain_pct", 0.0, round(gain, 1)))
+    # AxFPU fp32 (24-bit significand): perforation/rounding on the mantissa
+    for p, r in [(0, 0), (2, 8), (4, 12), (6, 16)]:
+        rep = ea.evaluate_float(
+            lambda a, b: axmult.np_axfpu_multiply(a, b, p=p, r=r), num=1 << 17)
+        out.append((f"pr.AxFPU32_p{p}r{r}_mred", 0.0, f"{rep.mred:.3e}"))
+    return out

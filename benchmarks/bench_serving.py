@@ -1,0 +1,32 @@
+"""Serving engine throughput/latency (continuous batching; smoke-scale model
+on CPU — the decode dry-run cells carry the production-shape numbers)."""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve.engine import ServeEngine
+
+
+def rows():
+    cfg = get_config("tinyllama-1.1b-smoke")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    out = []
+    for slots in (2, 8):
+        eng = ServeEngine(model, params, slots=slots, max_len=128)
+        rng = np.random.default_rng(0)
+        t0 = time.perf_counter()
+        for _ in range(12):
+            eng.submit(rng.integers(0, cfg.vocab, 4), 16)
+        done = eng.run_until_drained()
+        dt = time.perf_counter() - t0
+        tot = sum(len(r.out_tokens) for r in done)
+        lat = [r.t_done - r.t_enqueue for r in done]
+        out.append((f"serve.slots{slots}_tok_per_s", round(dt / tot * 1e6, 0),
+                    round(tot / dt, 1)))
+        out.append((f"serve.slots{slots}_p95_latency_ms", 0.0,
+                    round(float(np.percentile(lat, 95)) * 1e3, 0)))
+    return out

@@ -1,0 +1,63 @@
+"""§Perf iteration table: baseline vs tagged hillclimb variants.
+
+Reads experiments/dryrun/pod16x16/ (baseline) and pod16x16__<tag>/ variants,
+prints the before/after roofline terms per hillclimb cell.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.roofline import ROOT, analyze_cell, fmt_s
+
+CELLS = [
+    ("mistral-nemo-12b", "decode_32k",
+     ["kv_int8", "kv_int8_bf16", "serve_bf16"]),
+    ("mistral-nemo-12b", "train_4k", ["bwd_bf16", "ring_tp", "accum4"]),
+    ("qwen2-moe-a2.7b", "train_4k", ["moe_int8", "ring_moe"]),
+]
+
+
+def load(arch: str, shape: str, tag: str = ""):
+    d = "pod16x16" + (f"__{tag}" if tag else "")
+    p = ROOT / "experiments" / "dryrun" / d / f"{arch}__{shape}.json"
+    if not p.exists():
+        return None
+    rec = json.loads(p.read_text())
+    if rec.get("status") != "ok":
+        return None
+    return analyze_cell(rec)
+
+
+def main() -> None:
+    rows = ["| cell | variant | compute | memory | collective | dominant | "
+            "roofline-frac | Δdominant |",
+            "|---|---|---|---|---|---|---|---|"]
+    for arch, shape, tags in CELLS:
+        base = load(arch, shape)
+        if base is None:
+            continue
+        base_dom = max(base["compute_s"], base["memory_s"], base["collective_s"])
+        rows.append(
+            f"| {arch} × {shape} | baseline | {fmt_s(base['compute_s'])} | "
+            f"{fmt_s(base['memory_s'])} | {fmt_s(base['collective_s'])} | "
+            f"{base['dominant']} | {base['roofline_frac']:.2%} | — |")
+        for tag in tags:
+            c = load(arch, shape, tag)
+            if c is None:
+                rows.append(f"| | {tag} | (missing) | | | | | |")
+                continue
+            dom = max(c["compute_s"], c["memory_s"], c["collective_s"])
+            delta = (dom - base_dom) / base_dom
+            rows.append(
+                f"| | {tag} | {fmt_s(c['compute_s'])} | {fmt_s(c['memory_s'])} | "
+                f"{fmt_s(c['collective_s'])} | {c['dominant']} | "
+                f"{c['roofline_frac']:.2%} | {delta:+.1%} |")
+    out = "\n".join(rows)
+    print(out)
+    (ROOT / "experiments" / "perf_table.md").write_text(out + "\n")
+
+
+if __name__ == "__main__":
+    main()

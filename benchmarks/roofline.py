@@ -1,0 +1,188 @@
+"""Roofline derivation (§Roofline deliverable): three terms per (arch x shape)
+cell from the single-pod dry-run artifacts.
+
+  compute_s    = dot_FLOPs_per_device / peak_FLOPs        (197 TFLOP/s bf16)
+  memory_s     = hbm_bytes_per_device / HBM_bw            (819 GB/s)
+  collective_s = collective_bytes_per_device / link_bw    (50 GB/s ICI)
+
+FLOP and collective numerators come from the compiled per-device HLO via the
+trip-count-aware walk in dist/hlo_analysis (XLA's cost_analysis counts while
+bodies once — scanned layers would be ~L x undercounted).
+
+Memory numerator: the raw HLO op-walk traffic proxy is kept as a diagnostic
+but NOT used for the term — the CPU backend leaves element-wise chains
+unfused (TPU XLA fuses them), so the op-walk overcounts HBM traffic by one to
+two orders of magnitude.  Instead the term uses the compiled buffer
+assignment (memory_analysis — backend-robust):
+
+  hbm_bytes = argument_bytes            (params/opt-state/cache read once)
+            + 2 * temp_bytes            (each live temp written + read)
+            + (output_bytes - alias)    (non-donated outputs written)
+
+Byte conventions: per-device; single-link ICI budget (conservative).
+
+MODEL_FLOPS (useful work): train 6*N*D, MoE 6*N_active*D, prefill 2*N*D,
+decode 2*N_active*B_newtokens; ratio MODEL/HLO flags remat & padding waste.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+DRYRUN = ROOT / "experiments" / "dryrun" / "pod16x16"
+
+PEAK_FLOPS = 197e12     # bf16 / chip (v5e-class)
+PEAK_FLOPS_INT8 = 394e12  # s8 MXU rate (2x bf16); s32 dots in the dry-run HLO
+#                          are CPU-upcast int8 paths (no other s32 GEMMs exist)
+HBM_BW = 819e9          # B/s / chip
+LINK_BW = 50e9          # B/s / link ICI
+
+
+def model_flops(rec: dict) -> float:
+    """Useful-work FLOPs per device (N recomputed from configs so model
+    fixes don't require re-running the dry-run sweep)."""
+    try:
+        import sys
+
+        sys.path.insert(0, str(ROOT / "src"))
+        from repro.configs import get_config
+
+        n_tot, n_act = get_config(rec["arch"]).param_count()
+    except Exception:
+        n_tot, n_act = rec["params_total"], rec["params_active"]
+    chips = rec["chips"]
+    if rec["kind"] == "train":
+        d = rec["seq"] * rec["global_batch"]
+        return 6.0 * n_act * d / chips
+    if rec["kind"] == "prefill":
+        d = rec["seq"] * rec["global_batch"]
+        return 2.0 * n_act * d / chips
+    # decode: one new token per sequence
+    return 2.0 * n_act * rec["global_batch"] / chips
+
+
+# ring-algorithm wire cost per byte of tensor: all-reduce moves ~2x (reduce-
+# scatter phase + all-gather phase); RS / AG / A2A / permute move ~1x.
+_WIRE_WEIGHT = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def wire_bytes(by_kind: dict) -> float:
+    return sum(_WIRE_WEIGHT.get(k, 1.0) * v for k, v in by_kind.items())
+
+
+def analyze_cell(rec: dict) -> dict:
+    h = rec["hlo_analysis"]
+    m = rec["memory"]
+    flops_dev = h["dot_flops"]
+    bytes_dev = (m["argument_bytes"] + 2 * m["temp_bytes"]
+                 + max(m["output_bytes"] - m["alias_bytes"], 0))
+    coll_dev = wire_bytes(h["collectives"]["by_kind"])
+    by_dtype = h.get("dot_flops_by_dtype") or {"f32": flops_dev}
+    compute_s = sum(
+        v / (PEAK_FLOPS_INT8 if dt in ("s8", "s32") else PEAK_FLOPS)
+        for dt, v in by_dtype.items())
+    if not by_dtype:
+        compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    coll_s = coll_dev / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec)
+    bound_s = max(terms.values())
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "kind": rec["kind"],
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": coll_s,
+        "dominant": dominant,
+        "model_flops_dev": mf,
+        "hlo_flops_dev": flops_dev,
+        "useful_ratio": mf / flops_dev if flops_dev else 0.0,
+        # roofline fraction: useful-work time at peak vs bound time
+        "roofline_frac": (mf / PEAK_FLOPS) / bound_s if bound_s else 0.0,
+        "temp_gib": rec["memory"]["temp_bytes"] / 2**30,
+        "arg_gib": rec["memory"]["argument_bytes"] / 2**30,
+        "coll_detail": h["collectives"]["by_kind"],
+    }
+
+
+SUGGESTIONS = {
+    "compute": "cut recompute (remat policy) / causal-skip attention blocks / "
+               "int8 MXU path (axqmm) halves the compute term",
+    "memory": "bf16 master-weight read path, fuse dequant, larger attention "
+              "blocks to raise arithmetic intensity",
+    "collective": "reduce-scatter+all-gather instead of all-reduce, overlap "
+                  "via async collectives, int8-compressed gradient psum, "
+                  "FSDP to trade param all-gathers for smaller grad reduces",
+}
+
+
+def load_cells(dirpath: Path = DRYRUN) -> list[dict]:
+    out = []
+    for f in sorted(dirpath.glob("*.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("status") == "ok":
+            out.append(analyze_cell(rec))
+        elif rec.get("status") == "skip":
+            out.append({"arch": rec["arch"], "shape": rec["shape"],
+                        "skip": rec["skip_reason"]})
+    return out
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:7.2f}s "
+    if x >= 1e-3:
+        return f"{x*1e3:7.2f}ms"
+    return f"{x*1e6:7.2f}us"
+
+
+def table(cells: list[dict]) -> str:
+    rows = [
+        "| arch | shape | compute | memory | collective | dominant | "
+        "useful/HLO | roofline-frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if "skip" in c:
+            rows.append(f"| {c['arch']} | {c['shape']} | — | — | — | SKIP: "
+                        f"{c['skip']} | — | — |")
+            continue
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {fmt_s(c['compute_s'])} | "
+            f"{fmt_s(c['memory_s'])} | {fmt_s(c['collective_s'])} | "
+            f"**{c['dominant']}** | {c['useful_ratio']:.2f} | "
+            f"{c['roofline_frac']:.2%} |")
+    return "\n".join(rows)
+
+
+def main() -> None:
+    cells = load_cells()
+    ok = [c for c in cells if "skip" not in c]
+    print(table(cells))
+    print()
+    for c in ok:
+        print(f"{c['arch']} x {c['shape']}: dominant={c['dominant']} -> "
+              f"{SUGGESTIONS[c['dominant']]}")
+    out = ROOT / "experiments" / "roofline.json"
+    out.write_text(json.dumps(cells, indent=2))
+    (ROOT / "experiments" / "roofline.md").write_text(table(cells) + "\n")
+    # pick the three hillclimb cells (§Perf): worst roofline fraction,
+    # most collective-bound, most paper-representative (approx-GEMM heavy
+    # train cell of the biggest dense model)
+    graded = sorted(ok, key=lambda c: c["roofline_frac"])
+    coll = sorted(ok, key=lambda c: -c["collective_s"])
+    print("\nhillclimb candidates:")
+    print("  worst roofline-frac:", graded[0]["arch"], graded[0]["shape"],
+          f"{graded[0]['roofline_frac']:.2%}")
+    print("  most collective-bound:", coll[0]["arch"], coll[0]["shape"],
+          fmt_s(coll[0]["collective_s"]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Benchmark harness — one module per dissertation table/figure (DESIGN.md §5).
+Prints ``name,us_per_call,derived`` CSV."""
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_cnn, bench_dlsb, bench_dsp, bench_dynamic,
+                            bench_kernels, bench_pareto, bench_pr, bench_rad,
+                            bench_serving)
+
+    mods = [bench_dlsb, bench_rad, bench_pr, bench_dynamic, bench_pareto,
+            bench_dsp, bench_cnn, bench_kernels, bench_serving]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    failed = []
+    for m in mods:
+        name = m.__name__.split(".")[-1]
+        if only and only not in name:
+            continue
+        try:
+            for row in m.rows():
+                print(",".join(str(x) for x in row), flush=True)
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

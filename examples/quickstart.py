@@ -1,0 +1,38 @@
+"""Quickstart: the paper's approximation techniques in 60 seconds.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import axmult, error_analysis as ea, pareto
+from repro.core.approx import ApproxMode, ApproxPolicy, ApproxSpec
+from repro.configs import get_config
+from repro.models import build_model, concrete_batch
+
+# 1. The arithmetic: a RAD-256 approximate product and its exact error profile
+rep = ea.rad_operand_marginal(16, 8)
+print(f"RAD256 16-bit multiplier: MRED={100*rep.mred:.3f}%  "
+      f"bias={rep.mean_err:+.1e}  Pr[RED<=2%]={rep.pred2:.3f}")
+
+# 2. The design space: Ch.6 cooperative Pareto front under an error budget
+pts = pareto.explore(n=16, num_samples=1 << 14)
+best = pareto.best_under_error(pts, 0.01)
+print(f"best design under MRED<=1%: {best.name} "
+      f"(energy proxy {best.energy:.0f} vs exact "
+      f"{[p for p in pts if p.fam=='CMB'][0].energy:.0f})")
+
+# 3. The system: an LM whose every matmul runs through the approximation layer
+cfg = get_config("tinyllama-1.1b-smoke")
+policy = ApproxPolicy(rules=[
+    (r".*mlp.*", ApproxSpec(mode=ApproxMode.AXQ, ebits=6, block=64)),
+])
+model = build_model(cfg, policy)
+params = model.init(jax.random.PRNGKey(0))
+batch = concrete_batch(cfg, seq=32, batch=2)
+loss_exact, _ = build_model(cfg).loss(params, batch)
+loss_approx, _ = model.loss(params, batch)
+print(f"LM loss exact={float(loss_exact):.4f} "
+      f"approx(MLP int8@6bits)={float(loss_approx):.4f}")
+print("quickstart OK")

@@ -1,0 +1,8 @@
+"""repro — `axdsp`: approximate-arithmetic DSP/AI acceleration framework in JAX.
+
+Reproduction of V. Leon, "From Circuits to SoC Processors: Arithmetic
+Approximation Techniques & Embedded Computing Methodologies for DSP
+Acceleration" (NTUA PhD dissertation, 2022), adapted to TPU-native JAX.
+See DESIGN.md.
+"""
+__version__ = "0.1.0"

@@ -1,0 +1,25 @@
+"""Core: the dissertation's arithmetic-approximation techniques as a
+composable JAX library.
+
+Layers:
+  encodings       bit-exact operand encodings (Booth, DLSB, hybrid high-radix)
+  axmult          the approximate multiplier families (RAD, PR/AxFXU, ROUP,
+                  AxFPU, DyFXU dynamic variants)
+  error_analysis  MRED/NMED/PRED evaluation harness
+  area_model      the paper's unit-gate area/energy proxy model
+  pareto          Ch. 6 cooperative-approximation design-space exploration
+  approx          per-layer approximation policy (MAx-DNN style)
+  quantization    TPU-native effective-bits block quantization (DyFXU analogue)
+  dynamic         runtime QoS controller (dynamic approximation tuning)
+"""
+
+from . import (  # noqa: F401
+    area_model,
+    axmult,
+    dynamic,
+    encodings,
+    error_analysis,
+    pareto,
+    quantization,
+)
+from .approx import EXACT, ApproxMode, ApproxPolicy, ApproxSpec, uniform  # noqa: F401

@@ -1,0 +1,63 @@
+"""Runtime approximation control — the DyFXU/DyFPU analogue at system level
+(Ch. 5 §5.2.3 "Dynamic Configuration of the Approximation Degree").
+
+The paper's circuits expose (p, r) configuration registers written at runtime;
+the gains of approximation remain available without re-synthesis at ~3% area
+overhead.  Here the same contract is: the deployed computation keeps its
+compiled XLA executable (degree is a *traced* scalar input), and this host-side
+controller moves the degree to track a quality budget — the embedded-systems
+QoS loop of the dissertation.
+
+Control law (simple, monotone, hysteresis-banded):
+  * quality signal q_t (e.g. eval loss delta vs exact probe, or logit-KL);
+  * if EMA(q) < low_water  -> increase approximation (cheaper, lossier);
+  * if EMA(q) > high_water -> decrease approximation (costlier, safer);
+  * degree clamped to the configured ladder.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass
+class QoSController:
+    """Moves an integer degree along a ladder to track an error budget.
+
+    degree semantics: index into `ladder`; entry 0 = most accurate.
+    `ladder` entries are opaque to the controller (they are ApproxSpec degree
+    kwargs, e.g. [{'ebits': 8}, {'ebits': 7}, {'ebits': 6}, {'ebits': 5}]).
+    """
+
+    ladder: list[dict]
+    low_water: float
+    high_water: float
+    ema_alpha: float = 0.1
+    cooldown_steps: int = 10
+    degree: int = 0
+    _ema: float | None = field(default=None, repr=False)
+    _cooldown: int = field(default=0, repr=False)
+    history: list[tuple[int, float, int]] = field(default_factory=list, repr=False)
+
+    def update(self, step: int, quality_signal: float) -> dict:
+        """Feed one quality observation; returns the (possibly new) degree
+        kwargs to apply at the next step."""
+        self._ema = (
+            quality_signal
+            if self._ema is None
+            else (1 - self.ema_alpha) * self._ema + self.ema_alpha * quality_signal
+        )
+        if self._cooldown > 0:
+            self._cooldown -= 1
+        elif self._ema < self.low_water and self.degree < len(self.ladder) - 1:
+            self.degree += 1          # quality headroom -> approximate harder
+            self._cooldown = self.cooldown_steps
+        elif self._ema > self.high_water and self.degree > 0:
+            self.degree -= 1          # quality violated -> back off
+            self._cooldown = self.cooldown_steps
+        self.history.append((step, float(self._ema), self.degree))
+        return self.ladder[self.degree]
+
+    @property
+    def ema(self) -> float:
+        return self._ema if self._ema is not None else 0.0

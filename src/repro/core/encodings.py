@@ -1,0 +1,282 @@
+"""Bit-level operand encodings from the dissertation (Ch. 3-6).
+
+Everything here is a *bit-exact emulation* of the paper's encoders, vectorized
+over JAX integer arrays so it can run (a) standalone for error analysis and
+(b) inside model graphs (approximate conv / matmul emulation paths).
+
+Conventions
+-----------
+* An "n-bit operand" is a signed integer in [-2^(n-1), 2^(n-1)-1], stored in an
+  int32 lane (n <= 16 keeps every intermediate product representable in int32;
+  wider studies use the numpy/int64 helpers in ``error_analysis``).
+* Bit extraction is performed on the unsigned n-bit view ``u = x & (2^n - 1)``.
+* Modified-Booth (radix-4) digits follow Table 4.1:
+      y_j = -2*b_{2j+1} + b_{2j} + b_{2j-1},   b_{-1} = 0.
+* The hybrid high-radix digit follows Eq. (4.3) and its approximation Table 4.2.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+# ---------------------------------------------------------------------------
+# Bit helpers
+# ---------------------------------------------------------------------------
+
+
+def _mask(n: int) -> int:
+    return (1 << n) - 1
+
+
+def unsigned_view(x: Array, n: int) -> Array:
+    """Unsigned n-bit view of a signed operand (two's complement)."""
+    return jnp.bitwise_and(x.astype(jnp.int32), _mask(n))
+
+
+def bit(x: Array, i: int, n: int) -> Array:
+    """i-th bit of the two's-complement n-bit representation of x."""
+    u = unsigned_view(x, n)
+    return jnp.bitwise_and(jnp.right_shift(u, i), 1)
+
+
+def to_signed(u: Array, n: int) -> Array:
+    """Interpret an unsigned n-bit value as two's complement."""
+    u = jnp.bitwise_and(u.astype(jnp.int32), _mask(n))
+    return jnp.where(u >= (1 << (n - 1)), u - (1 << n), u)
+
+
+# ---------------------------------------------------------------------------
+# Radix-4 (Modified Booth) encoding  — Table 4.1 / Eq. (3.3)-(3.5)
+# ---------------------------------------------------------------------------
+
+
+def booth_digits(b: Array, n: int) -> Array:
+    """Radix-4 Modified-Booth digits of an n-bit operand.
+
+    Returns an int32 array of shape ``b.shape + (n // 2,)`` with digit j at
+    index j (LSB digit first); each digit is in {0, +-1, +-2} and
+    ``sum_j 4^j y_j == b`` exactly (verified by tests, property of the MB
+    recoding of two's-complement numbers).
+    """
+    assert n % 2 == 0, "Modified Booth needs an even bit-width"
+    digits = []
+    for j in range(n // 2):
+        b_hi = bit(b, 2 * j + 1, n)
+        b_mid = bit(b, 2 * j, n)
+        b_lo = bit(b, 2 * j - 1, n) if j > 0 else jnp.zeros_like(b, jnp.int32)
+        digits.append(-2 * b_hi + b_mid + b_lo)
+    return jnp.stack(digits, axis=-1).astype(jnp.int32)
+
+
+def recombine_radix4(digits: Array) -> Array:
+    """Inverse of :func:`booth_digits`: sum_j 4^j y_j."""
+    m = digits.shape[-1]
+    weights = jnp.array([4**j for j in range(m)], dtype=jnp.int32)
+    return jnp.sum(digits * weights, axis=-1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Partial-product perforation — Ch. 5 (AxFXU / DyFXU), Fig. 5.1
+# ---------------------------------------------------------------------------
+
+
+def perforate_operand(b: Array, n: int, p: int) -> Array:
+    """Value of B after perforating the ``p`` least-significant radix-4
+    partial products: B' = sum_{j >= p} 4^j y_j.
+
+    p = 0 is exact.  Equivalent closed form (used by the Pallas kernel):
+    B' = B - (B mod 2^{2p}) + 2^{2p} * b_{2p-1}.
+    """
+    if p == 0:
+        return b.astype(jnp.int32)
+    assert 0 < p <= n // 2
+    low = jnp.bitwise_and(unsigned_view(b, n), _mask(2 * p))
+    carry = bit(b, 2 * p - 1, n) * (1 << (2 * p))
+    return (b.astype(jnp.int32) - low + carry).astype(jnp.int32)
+
+
+def round_operand(a: Array, r: int) -> Array:
+    """Round the multiplicand at bit ``r`` (partial-product rounding, Ch. 5):
+    A_r = (floor(A / 2^r) + a_{r-1}) * 2^r   (round-half-away-from-zero-ish,
+    implemented exactly as the hardware does: add the MSB of the dropped part).
+
+    r = 0 is exact.
+    """
+    if r == 0:
+        return a.astype(jnp.int32)
+    a = a.astype(jnp.int32)
+    rb = jnp.bitwise_and(jnp.right_shift(a, r - 1), 1)  # arithmetic shift: ok
+    return jnp.left_shift(jnp.right_shift(a, r) + rb, r)
+
+
+# ---------------------------------------------------------------------------
+# Hybrid high-radix encoding — Ch. 4 (RAD), Eq. (4.1)-(4.3), Tables 4.1/4.2
+# ---------------------------------------------------------------------------
+
+
+def highradix_digit(b: Array, n: int, k: int) -> Array:
+    """Accurate radix-2^k digit of the k LSBs (Eq. 4.3):
+    y0 = -2^(k-1) b_{k-1} + sum_{i<k-1} 2^i b_i  in [-2^(k-1), 2^(k-1)-1]."""
+    assert k % 2 == 0 and 4 <= k <= n - 2
+    low = jnp.bitwise_and(unsigned_view(b, n), _mask(k))
+    return to_signed(low, k)
+
+
+def approx_highradix_digit(y0: Array, k: int) -> Array:
+    """Approximate mapping of Table 4.2: snap y0 to the 4 largest powers of two
+    (or 0), nearest-value intervals.  Doubling avoids the fractional 2^(k-5)
+    threshold at k = 4.
+
+        2|y0| in [0,       2^(k-4))       -> 0
+        2|y0| in [2^(k-4), 3*2^(k-4))     -> 2^(k-4)
+        2|y0| in [3*2^(k-4), 3*2^(k-3))   -> 2^(k-3)
+        2|y0| in [3*2^(k-3), 3*2^(k-2))   -> 2^(k-2)
+        2|y0| >= 3*2^(k-2)                -> 2^(k-1)
+    """
+    m2 = 2 * jnp.abs(y0)
+    t = jnp.int32
+    mag = jnp.where(
+        m2 < (1 << (k - 4)),
+        jnp.zeros_like(y0),
+        jnp.where(
+            m2 < 3 * (1 << (k - 4)),
+            jnp.full_like(y0, 1 << (k - 4)),
+            jnp.where(
+                m2 < 3 * (1 << (k - 3)),
+                jnp.full_like(y0, 1 << (k - 3)),
+                jnp.where(
+                    m2 < 3 * (1 << (k - 2)),
+                    jnp.full_like(y0, 1 << (k - 2)),
+                    jnp.full_like(y0, 1 << (k - 1)),
+                ),
+            ),
+        ),
+    )
+    return (jnp.sign(y0) * mag).astype(t)
+
+
+def rad_encode(b: Array, n: int, k: int) -> Array:
+    """B-hat of the RAD multiplier: accurate radix-4 MSB part + approximate
+    radix-2^k LSB digit.  The returned value satisfies the paper's key error
+    property: rel_err(A x B-hat) = (B-hat - B)/B independent of A."""
+    y0 = highradix_digit(b, n, k)
+    y0_hat = approx_highradix_digit(y0, k)
+    high = b.astype(jnp.int32) - y0  # == sum_{j>=k/2} 4^j y_j, exact
+    return high + y0_hat
+
+
+# ---------------------------------------------------------------------------
+# DLSB (double least-significant bit) — Ch. 3
+# ---------------------------------------------------------------------------
+
+
+def dlsb_value(x: Array, xp: Array) -> Array:
+    """Value of a DLSB number X+ = <x>_2's + x_0+  (Eq. 3.1)."""
+    return x.astype(jnp.int32) + xp.astype(jnp.int32)
+
+
+def dlsb_encode_sophisticated(a: Array, ap: Array, n: int) -> tuple[Array, Array]:
+    """Sophisticated DLSB re-encoding (Eq. 3.9): A+ = (-1)^{a0+} * A' with
+    a'_i = a_i XOR a0+.  Returns (A', a0+) so that the caller can fold the
+    sign into the Booth digits (Eq. 3.11-3.13)."""
+    u = unsigned_view(a, n)
+    flip = jnp.where(ap.astype(jnp.int32) > 0, _mask(n), 0)
+    a_prime = to_signed(jnp.bitwise_xor(u, flip), n)
+    return a_prime, ap.astype(jnp.int32)
+
+
+def mult_dlsb_straightforward(a: Array, ap: Array, b: Array, bp: Array, n: int) -> Array:
+    """Straightforward DLSB multiplier (Eq. 3.6): conventional MB product of
+    A x B+ plus the extra term a0+ * B+ (digit-level emulation)."""
+    # B+ encoded with b_{-1} = b0+ in the least significant Booth digit.
+    digits = booth_digits(b, n)
+    d0 = digits[..., 0] + bp.astype(jnp.int32)  # b_{-1} := b0+
+    b_plus = recombine_radix4(
+        jnp.concatenate([d0[..., None], digits[..., 1:]], axis=-1)
+    )
+    return a.astype(jnp.int32) * b_plus + ap.astype(jnp.int32) * b_plus
+
+
+def mult_dlsb_sophisticated(a: Array, ap: Array, b: Array, bp: Array, n: int) -> Array:
+    """Sophisticated DLSB multiplier (Eq. 3.14): re-encode A+ as (-1)^{a0+}A',
+    fold the sign into the Booth digits of B+ (s'_j = s_j xor a0+)."""
+    a_prime, a0p = dlsb_encode_sophisticated(a, ap, n)
+    digits = booth_digits(b, n)
+    d0 = digits[..., 0] + bp.astype(jnp.int32)
+    digits = jnp.concatenate([d0[..., None], digits[..., 1:]], axis=-1)
+    sign = jnp.where(a0p > 0, -1, 1).astype(jnp.int32)
+    signed_digits = digits * sign[..., None]
+    return recombine_radix4(signed_digits) * a_prime
+
+
+# ---------------------------------------------------------------------------
+# Power-of-two snapping (RAD-inspired weight mode; DESIGN.md section 2.2)
+# ---------------------------------------------------------------------------
+
+
+def pow2_snap(x: Array) -> Array:
+    """Snap every element to the nearest signed power of two (or 0).
+
+    TPU-native use: weights snapped to +-2^i make the multiply a shift in an
+    edge/VPU deployment; here it is a quality-evaluation mode."""
+    ax = jnp.abs(x).astype(jnp.float32)
+    e = jnp.round(jnp.log2(jnp.maximum(ax, 1e-30)))
+    snapped = jnp.exp2(e)
+    out = jnp.sign(x).astype(jnp.float32) * snapped
+    return jnp.where(ax == 0, jnp.zeros_like(out), out)
+
+
+# ---------------------------------------------------------------------------
+# numpy mirrors (int64-exact, for wide-operand error studies; no jit)
+# ---------------------------------------------------------------------------
+
+
+def np_booth_digits(b: np.ndarray, n: int) -> np.ndarray:
+    u = (b.astype(np.int64)) & _mask(n)
+    ds = []
+    for j in range(n // 2):
+        hi = (u >> (2 * j + 1)) & 1
+        mid = (u >> (2 * j)) & 1
+        lo = ((u >> (2 * j - 1)) & 1) if j > 0 else np.zeros_like(u)
+        ds.append(-2 * hi + mid + lo)
+    return np.stack(ds, axis=-1)
+
+
+def np_perforate_operand(b: np.ndarray, n: int, p: int) -> np.ndarray:
+    if p == 0:
+        return b.astype(np.int64)
+    u = b.astype(np.int64) & _mask(n)
+    low = u & _mask(2 * p)
+    carry = ((u >> (2 * p - 1)) & 1) << (2 * p)
+    return b.astype(np.int64) - low + carry
+
+
+def np_round_operand(a: np.ndarray, r: int) -> np.ndarray:
+    if r == 0:
+        return a.astype(np.int64)
+    a = a.astype(np.int64)
+    rb = (a >> (r - 1)) & 1
+    return ((a >> r) + rb) << r
+
+
+def np_rad_encode(b: np.ndarray, n: int, k: int) -> np.ndarray:
+    u = b.astype(np.int64) & _mask(n)
+    low = u & _mask(k)
+    y0 = np.where(low >= (1 << (k - 1)), low - (1 << k), low)
+    m2 = 2 * np.abs(y0)
+    mag = np.select(
+        [
+            m2 < (1 << (k - 4)),
+            m2 < 3 * (1 << (k - 4)),
+            m2 < 3 * (1 << (k - 3)),
+            m2 < 3 * (1 << (k - 2)),
+        ],
+        [0, 1 << (k - 4), 1 << (k - 3), 1 << (k - 2)],
+        default=1 << (k - 1),
+    )
+    y0_hat = np.sign(y0) * mag
+    return b.astype(np.int64) - y0 + y0_hat

@@ -1,0 +1,86 @@
+"""Approximation-space exploration & Pareto-front extraction (Ch. 6).
+
+The dissertation's "cooperative approximation" chapter enumerates combinations
+of the technique pool, evaluates (error, resources) for each configuration,
+and keeps the Pareto-optimal set.  This module is that loop, with the error
+side computed bit-exactly (error_analysis) and the resource side from the
+paper's own unit-gate model (area_model).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from . import area_model, axmult, error_analysis
+
+
+@dataclass
+class DesignPoint:
+    name: str
+    fam: str
+    n: int
+    k: int
+    p: int
+    r: int
+    mred: float
+    nmed: float
+    area: float
+    energy: float
+    on_front: bool = False
+
+    def row(self) -> str:
+        star = "*" if self.on_front else " "
+        return (
+            f"{star} {self.name:<12} mred={self.mred:.6f} area={self.area:8.1f} "
+            f"energy={self.energy:9.1f}"
+        )
+
+
+def explore(n: int = 16, num_samples: int = 1 << 16, seed: int = 0) -> list[DesignPoint]:
+    """Evaluate the full configuration pool at bit-width n."""
+    points: list[DesignPoint] = []
+    # exact baseline
+    base_area = area_model.area_cmb(n)
+    points.append(
+        DesignPoint("CMB", "CMB", n, 0, 0, 0, 0.0, 0.0, base_area,
+                    area_model.energy_proxy("CMB", n))
+    )
+    for name, fn, meta in axmult.family_configs(n):
+        rep = error_analysis.evaluate_sampled(fn, n, num=num_samples, seed=seed)
+        fam, k, p, r = meta["fam"], meta["k"], meta["p"], meta["r"]
+        points.append(
+            DesignPoint(
+                name, fam, n, k, p, r, rep.mred, rep.nmed,
+                area_model.area_of(fam, n, k, p, r),
+                area_model.energy_proxy(fam, n, k, p, r),
+            )
+        )
+    mark_front(points, x="mred", y="energy")
+    return points
+
+
+def mark_front(points: list[DesignPoint], x: str = "mred", y: str = "energy") -> None:
+    """Mark Pareto-optimal points (minimize both x and y) in place."""
+    for pt in points:
+        pt.on_front = True
+        for other in points:
+            if other is pt:
+                continue
+            ox, oy = getattr(other, x), getattr(other, y)
+            px, py = getattr(pt, x), getattr(pt, y)
+            if ox <= px and oy <= py and (ox < px or oy < py):
+                pt.on_front = False
+                break
+
+
+def front(points: list[DesignPoint]) -> list[DesignPoint]:
+    return sorted([p for p in points if p.on_front], key=lambda p: p.mred)
+
+
+def best_under_error(points: list[DesignPoint], mred_budget: float) -> DesignPoint | None:
+    """The paper's design-selection rule: max resource gain subject to an
+    error constraint."""
+    ok = [p for p in points if p.mred <= mred_budget]
+    return min(ok, key=lambda p: p.energy) if ok else None

@@ -1,0 +1,112 @@
+"""Effective-bits block quantization — the TPU-native embodiment of
+perforation+rounding (DESIGN.md §2.1).
+
+Perforating p low partial products of an n-bit operand keeps ~(n - 2p)
+significant bits; rounding at bit r keeps (n - r).  On TPU the equivalent
+resource knob is an int8 block-quantized GEMM whose operands can be further
+degraded to e < 8 *effective bits* at runtime by round-and-mask (shift right,
+round, shift left) — no recompilation, mirroring DyFXU's runtime registers.
+
+Resource semantics on TPU v5e: s8 x s8 -> s32 runs at 2x bf16 MXU rate and
+halves operand HBM traffic; each additional dropped effective bit does not
+change MXU rate but models the paper's graceful accuracy degradation and maps
+1:1 onto its error analysis (q_eff loses exactly the perforated low bits).
+
+All functions are pure jnp (jit/vmap/pjit-safe); the Pallas kernel in
+kernels/axqmm.py consumes the same representation.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+class QTensor(NamedTuple):
+    """Block-quantized tensor: int8 values + per-block float scales.
+
+    values: (..., K) int8; scales: (..., K // block) f32 broadcasting over the
+    contraction dimension blocks.
+    """
+
+    values: Array
+    scales: Array
+    block: int
+
+    @property
+    def shape(self):
+        return self.values.shape
+
+
+def quantize_block(x: Array, block: int = 256, axis: int = -1) -> QTensor:
+    """Symmetric int8 block quantization along `axis` (the contraction dim)."""
+    if axis != -1:
+        x = jnp.moveaxis(x, axis, -1)
+    *lead, K = x.shape
+    assert K % block == 0, f"contraction dim {K} not divisible by block {block}"
+    xb = x.reshape(*lead, K // block, block)
+    amax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
+    return QTensor(q.reshape(*lead, K), scale[..., 0].astype(jnp.float32), block)
+
+
+def degrade(q: Array, ebits) -> Array:
+    """Drop to `ebits` effective bits by round-to-nearest at 2^(8-e):
+    the runtime DyFXU knob.  `ebits` may be a traced scalar (dynamic mode).
+
+    q int8 in [-127, 127]; result stays int8 (rounding may hit +-128: we
+    saturate, matching a hardware clamp).
+    """
+    shift = (8 - jnp.asarray(ebits)).astype(jnp.int32)
+    shift = jnp.maximum(shift, 0)
+    q32 = q.astype(jnp.int32)
+    half = jnp.where(shift > 0, jnp.left_shift(1, jnp.maximum(shift - 1, 0)), 0)
+    down = jnp.right_shift(q32 + half, shift)
+    out = jnp.left_shift(down, shift)
+    out = jnp.clip(out, -127, 127)
+    return jnp.where(shift > 0, out, q32).astype(jnp.int8)
+
+
+def dequantize(qt: QTensor) -> Array:
+    *lead, K = qt.values.shape
+    v = qt.values.reshape(*lead, K // qt.block, qt.block).astype(jnp.float32)
+    return (v * qt.scales[..., None]).reshape(*lead, K)
+
+
+def qmm_ref(x: Array, w: Array, block: int = 256, ebits: int = 8,
+            out_dtype=jnp.float32) -> Array:
+    """Reference block-quantized matmul x @ w with effective-bits degradation.
+
+    x: (M, K) float; w: (K, N) float.  Quantizes both along K, degrades to
+    `ebits`, accumulates per-block int32 dot products scaled by the block
+    scales.  This is the pure-jnp oracle for kernels/axqmm.py.
+    """
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2
+    nb = K // block
+    qx = quantize_block(x, block)      # values (M,K), scales (M,nb)
+    qw = quantize_block(w.T, block)    # values (N,K), scales (N,nb)
+    vx = degrade(qx.values, ebits).reshape(M, nb, block)
+    vw = degrade(qw.values, ebits).reshape(N, nb, block)
+    # per-block integer dot: (M, N, nb)
+    acc = jnp.einsum(
+        "mbk,nbk->mnb",
+        vx.astype(jnp.int32),
+        vw.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    ).astype(jnp.float32)
+    scale = qx.scales[:, None, :] * qw.scales[None, :, :]
+    return jnp.sum(acc * scale, axis=-1).astype(out_dtype)
+
+
+def pow2_weights(w: Array) -> Array:
+    """RAD-inspired power-of-two weight snapping (quality-eval mode)."""
+    from .encodings import pow2_snap
+
+    return pow2_snap(w)

@@ -1,0 +1,3 @@
+"""Pallas TPU kernels for the perf-critical compute paths + the approx-matmul
+dispatch (ops.py).  ref.py holds the pure-jnp oracles."""
+from .ops import approx_matmul  # noqa: F401

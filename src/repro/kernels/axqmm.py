@@ -1,0 +1,131 @@
+"""axqmm — block-quantized, effective-bits, runtime-degradable GEMM.
+
+The TPU-native embodiment of the dissertation's perforation+rounding
+multiplier (DESIGN.md §2.1): int8 operands with per-(row, k-block) scales; a
+*runtime* effective-bits degree e <= 8 drops low operand bits by
+round-and-shift exactly like DyFXU's runtime perforation registers — no
+recompile, the degree is a scalar-prefetch argument (SMEM).
+
+TPU mapping (VMEM/MXU co-design, the Ch. 9 scratchpad-scheduling insight):
+  * tiles (bm, bk) x (bn, bk) -> (bm, bn), multiples of 128 so the MXU
+    systolic array is fully utilized and int8 ingestion is 2x bf16 rate;
+  * quantization block == bk so each grid step consumes exactly one scale
+    column: scales ride along in VMEM, bk x smaller than the int tiles;
+  * f32 accumulator tile lives in a VMEM scratch across the K grid walk
+    (output tile revisited over k), written back once on the last k step;
+  * working set per step: bm*bk + bn*bk int8 + 2*bm*bn f32
+    = 2*128*512 + 2*128*128*4 bytes ~ 260 KiB << 16 MiB VMEM.
+
+Layout contract: w is passed K-major as (N, K) ("wT") so both operands stream
+contiguous k-blocks.  ops.py handles transpose + quantization.
+
+Validated against kernels/ref.py (pure-jnp oracle) in interpret mode on CPU
+across shape/degree sweeps (tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jnp.ndarray
+
+
+def _degrade_tile(q: Array, shift: Array) -> Array:
+    """Round-to-nearest drop of `shift` low bits (int32 lanes), saturating —
+    the runtime perforation knob.  shift is a traced int32 scalar."""
+    half = jnp.where(shift > 0, jnp.left_shift(1, jnp.maximum(shift - 1, 0)), 0)
+    down = jnp.right_shift(q + half, shift)
+    out = jnp.left_shift(down, shift)
+    return jnp.clip(out, -127, 127)
+
+
+def _axqmm_kernel(ebits_ref, qx_ref, sx_ref, qw_ref, sw_ref, out_ref, acc_ref,
+                  *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    shift = jnp.maximum(8 - ebits_ref[0], 0)
+    qx = _degrade_tile(qx_ref[...].astype(jnp.int32), shift)
+    qw = _degrade_tile(qw_ref[...].astype(jnp.int32), shift)
+    # MXU int8 path: s8 x s8 -> s32 (int32 lanes under interpret mode)
+    acc = jax.lax.dot_general(
+        qx, qw,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    scale = sx_ref[...] * sw_ref[...].T          # (bm,1)*(1,bn) -> (bm,bn)
+    acc_ref[...] += acc.astype(jnp.float32) * scale
+
+    @pl.when(k == n_k - 1)
+    def _done():
+        out_ref[...] = acc_ref[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def axqmm_quantized(qx: Array, sx: Array, qwT: Array, sw: Array,
+                    ebits: Array | int = 8, *, bm: int = 128, bn: int = 128,
+                    bk: int = 512, interpret: bool = True) -> Array:
+    """qx: (M, K) int8; sx: (M, K//bk) f32; qwT: (N, K) int8;
+    sw: (N, K//bk) f32; ebits: runtime scalar.  Returns (M, N) f32."""
+    M, K = qx.shape
+    N = qwT.shape[0]
+    assert K % bk == 0 and M % bm == 0 and N % bn == 0, (M, N, K, bm, bn, bk)
+    n_k = K // bk
+    ebits_arr = jnp.asarray(ebits, jnp.int32).reshape(1)
+    grid = (M // bm, N // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_axqmm_kernel, n_k=n_k),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda i, j, k, *prefetch: (i, k)),   # qx
+                pl.BlockSpec((bm, 1), lambda i, j, k, *prefetch: (i, k)),    # sx
+                pl.BlockSpec((bn, bk), lambda i, j, k, *prefetch: (j, k)),   # qwT
+                pl.BlockSpec((bn, 1), lambda i, j, k, *prefetch: (j, k)),    # sw
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j, k, *prefetch: (i, j)),
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+    )(ebits_arr, qx, sx, qwT, sw)
+
+
+def quantize_for_axqmm(x: Array, bk: int = 512):
+    """Per-(row, k-block) symmetric int8 quantization. x: (M, K) float."""
+    M, K = x.shape
+    assert K % bk == 0
+    xb = x.reshape(M, K // bk, bk).astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
+    return q.reshape(M, K), scale[..., 0]
+
+
+def axqmm(x: Array, w: Array, *, block: int = 512, ebits: Array | int = 8,
+          interpret: bool = True) -> Array:
+    """float x (M,K) @ float w (K,N) through the quantized kernel."""
+    M, K = x.shape
+    N = w.shape[1]
+    bk = block
+    # shrink bk to a divisor of K if needed (kernel contract)
+    while K % bk:
+        bk //= 2
+    qx, sx = quantize_for_axqmm(x, bk)
+    qw, sw = quantize_for_axqmm(w.T, bk)
+    bm = 128 if M % 128 == 0 else (64 if M % 64 == 0 else 8)
+    bn = 128 if N % 128 == 0 else (64 if N % 64 == 0 else 8)
+    if M % bm or N % bn or K % bk:
+        raise ValueError(f"axqmm shape not tileable: {(M, K, N)}")
+    return axqmm_quantized(qx, sx, qw, sw, ebits, bm=bm, bn=bn, bk=bk,
+                           interpret=interpret)

@@ -1,0 +1,119 @@
+"""Flash-style attention forward kernel (online softmax, VMEM-tiled).
+
+The prefill_32k cells are the attention-heaviest workloads in the assigned
+set; this kernel is their TPU hot-spot implementation: O(S) memory, tiles
+sized for VMEM, MXU-aligned head dims.
+
+Layout: q, k, v as (BH, S, D) — batch*heads flattened, GQA groups expanded by
+the caller (models/attention.py keeps the grouped einsum path as the XLA
+fallback; this kernel is the Pallas deployment path).
+
+Grid (bh, i, j): j innermost walks KV blocks for a fixed q block with running
+max/denominator scratch; causal blocks strictly above the diagonal are
+masked (and skipped on TPU via the mask short-circuit).
+
+VMEM working set per step: bq*D + 2*bk*D + bq*D f32 + softmax scratch
+= (128 + 2*128 + 128)*128*4 B = 256 KiB << 16 MiB.
+
+Validated in interpret mode vs models.attention.attn_full
+(tests/test_kernels.py::test_flash_attention_*).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jnp.ndarray
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+                  *, n_k: int, bq: int, bk: int, causal: bool, scale: float):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # (bq, D)
+    k = k_ref[0].astype(jnp.float32)                  # (bk, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (bq, bk)
+    if causal:
+        rows = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        cols = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(cols <= rows, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    m_ref[...] = m_new
+    v = v_ref[0].astype(jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(j == n_k - 1)
+    def _done():
+        o_ref[0, ...] = (acc_ref[...] /
+                         jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    bq: int = 128, bk: int = 128,
+                    interpret: bool = True) -> Array:
+    """q, k, v: (BH, S, D) -> (BH, S, D).  D should be 128-aligned on TPU."""
+    BH, S, D = q.shape
+    bq = min(bq, S)
+    while S % bq:
+        bq //= 2
+    bk = min(bk, S)
+    while S % bk:
+        bk //= 2
+    n_q, n_k = S // bq, S // bk
+    scale = 1.0 / math.sqrt(D)
+    kern = functools.partial(_flash_kernel, n_k=n_k, bq=bq, bk=bk,
+                             causal=causal, scale=scale)
+    return pl.pallas_call(
+        kern,
+        grid=(BH, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def flash_attention_ref(q: Array, k: Array, v: Array,
+                        causal: bool = True) -> Array:
+    """Pure-jnp oracle (same math as models.attention.attn_full, flat BH)."""
+    BH, S, D = q.shape
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,256 @@
+"""approx_matmul: the single dispatch point between model code and the
+paper's approximation techniques (DESIGN.md §3).
+
+Every Dense/einsum in the model zoo calls :func:`approx_matmul`; the
+``ApproxSpec`` decides the path:
+
+  EXACT       bf16 dot, f32 accumulation (baseline / dry-run default)
+  AXQ         block-quantized int8 GEMM w/ runtime effective-bits degree —
+              Pallas kernel on TPU (kernels/axqmm.py), pure-jnp ref on CPU
+  PR_EMUL     bit-exact AxFXU emulation: per-tensor int8 quantization, operand
+              transforms (round/perforate), exact integer matmul, dequant.
+              Because PR transforms each operand independently, the
+              approximate-multiplier matmul == exact matmul of transformed
+              operands (the paper's accelerators accumulate exactly).
+  RAD_EMUL    same with the hybrid high-radix encoding on the weight operand
+  ROUP_EMUL   cooperative combination
+  POW2_W      weights snapped to powers of two (RAD shift-only insight)
+
+Emulation lane width is limited to 8 bits in-graph (int32 accumulation stays
+exact for K <= 2^15); wider studies use core.axmult numpy mirrors.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import encodings as enc
+from repro.core.approx import ApproxMode, ApproxSpec
+from repro.core.quantization import degrade, qmm_ref
+
+Array = jnp.ndarray
+
+_USE_PALLAS = os.environ.get("REPRO_USE_PALLAS", "0") == "1"
+# §Perf lever (EXPERIMENTS.md hillclimb A1): keep the activation-gradient
+# partial sums in bf16 so GSPMD's TP all-reduces of dx move half the bytes.
+# The paper's philosophy applied to the collective layer: trade arithmetic
+# exactness of the backward reduction for wire bytes.
+_BWD_BF16 = os.environ.get("REPRO_BWD_BF16", "0") == "1"
+
+
+@jax.custom_vjp
+def _matmul_bf16_bwd(x2: Array, w: Array) -> Array:
+    # bf16 partials in fwd too: the TP psum of the projection output moves
+    # half the bytes (MXU still accumulates f32 internally on real TPU).
+    return jnp.matmul(x2.astype(jnp.bfloat16), w.astype(jnp.bfloat16),
+                      preferred_element_type=jnp.bfloat16)
+
+
+def _mm_fwd(x2, w):
+    return _matmul_bf16_bwd(x2, w), (x2, w)
+
+
+def _mm_bwd(res, g):
+    x2, w = res
+    g16 = g.astype(jnp.bfloat16)
+    # dx partials produced (and hence TP-all-reduced) in bf16
+    dx = jnp.matmul(g16, w.astype(jnp.bfloat16).T,
+                    preferred_element_type=jnp.bfloat16).astype(x2.dtype)
+    dw = jnp.matmul(x2.astype(jnp.bfloat16).T, g16,
+                    preferred_element_type=jnp.float32).astype(w.dtype)
+    return dx, dw
+
+
+_matmul_bf16_bwd.defvjp(_mm_fwd, _mm_bwd)
+
+# §Perf lever A2 (EXPERIMENTS.md iteration 2): route the TP output reductions
+# (wo / mlp-down / out_proj — weights contract over the 'model'-sharded dim)
+# through the int8 ring all-reduce: 4x wire bytes, HLO-measurable (integer
+# collectives are not float-normalized).  Forward-only; backward stays exact
+# via custom_vjp (GSPMD handles dx/dw with standard collectives).
+_RING_TP = os.environ.get("REPRO_RING_TP", "0") == "1"
+
+
+@jax.custom_vjp
+def _ring_tp_matmul(x2: Array, w: Array) -> Array:
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist import meshctx
+    from repro.dist.collectives import ring_allreduce_int8_local
+
+    mesh = meshctx.get_mesh()
+    if mesh.shape["model"] == 1:
+        return jnp.matmul(x2, w.astype(x2.dtype),
+                          preferred_element_type=jnp.float32)
+    b = meshctx.batch_axes(mesh)
+
+    def body(xl, wl):
+        acc = jnp.matmul(xl, wl.astype(xl.dtype),
+                         preferred_element_type=jnp.float32)
+        return ring_allreduce_int8_local(acc, "model")
+
+    # check_vma=False: the ring's all-gather phase leaves every shard with
+    # the full reduced value (replicated over 'model'), which the static
+    # checker cannot infer through ppermute loops.
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(b if b else None, "model"), P("model", None)),
+        out_specs=P(b if b else None, None),
+        check_vma=False,
+    )(x2, w)
+
+
+def _ring_fwd(x2, w):
+    return _ring_tp_matmul(x2, w), (x2, w)
+
+
+def _ring_bwd(res, g):
+    x2, w = res
+    dx = jnp.matmul(g, w.astype(g.dtype).T,
+                    preferred_element_type=jnp.float32).astype(x2.dtype)
+    dw = jnp.matmul(x2.astype(jnp.float32).T, g.astype(jnp.float32),
+                    preferred_element_type=jnp.float32).astype(w.dtype)
+    return dx, dw
+
+
+_ring_tp_matmul.defvjp(_ring_fwd, _ring_bwd)
+
+
+@jax.custom_vjp
+def _ring_dx_matmul(x2: Array, w: Array) -> Array:
+    """Column-sharded projection (wq/up/gate: w P(None,'model')) — no fwd
+    psum; the dx reduction in backward goes through the int8 ring."""
+    return jnp.matmul(x2, w.astype(x2.dtype), preferred_element_type=jnp.float32)
+
+
+def _ring_dx_fwd(x2, w):
+    return _ring_dx_matmul(x2, w), (x2, w)
+
+
+def _ring_dx_bwd(res, g):
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist import meshctx
+    from repro.dist.collectives import ring_allreduce_int8_local
+
+    x2, w = res
+    mesh = meshctx.get_mesh()
+    dw = jnp.matmul(x2.astype(jnp.float32).T, g.astype(jnp.float32),
+                    preferred_element_type=jnp.float32).astype(w.dtype)
+    if mesh.shape["model"] == 1:
+        dx = jnp.matmul(g, w.astype(g.dtype).T,
+                        preferred_element_type=jnp.float32).astype(x2.dtype)
+        return dx, dw
+    b = meshctx.batch_axes(mesh)
+
+    def body(gl, wl):
+        part = jnp.matmul(gl, wl.astype(gl.dtype).T,
+                          preferred_element_type=jnp.float32)
+        return ring_allreduce_int8_local(part, "model")
+
+    dx = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(b if b else None, "model"), P(None, "model")),
+        out_specs=P(b if b else None, None),
+        check_vma=False,
+    )(g, w).astype(x2.dtype)
+    return dx, dw
+
+
+_ring_dx_matmul.defvjp(_ring_dx_fwd, _ring_dx_bwd)
+
+_RING_PATHS = ("/wo", "/down", "/out_proj")
+_RING_DX_PATHS = ("/wq", "/wk", "/wv", "/up", "/gate", "unembed")
+
+
+def _quantize_per_tensor(x: Array, bits: int) -> tuple[Array, Array]:
+    qmax = (1 << (bits - 1)) - 1
+    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-30)
+    scale = amax / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int32)
+    return q, scale
+
+
+def _emul_matmul(x: Array, w: Array, spec: ApproxSpec) -> Array:
+    """Exact integer matmul of technique-transformed quantized operands."""
+    n = spec.lane_bits
+    assert n <= 8, "in-graph emulation lane limited to 8 bits (see module doc)"
+    qx, sx = _quantize_per_tensor(x, n)
+    qw, sw = _quantize_per_tensor(w, n)
+    if spec.mode == ApproxMode.PR_EMUL:
+        qx = enc.round_operand(qx, spec.r)
+        qw = enc.perforate_operand(qw, n, spec.p) if spec.p else qw
+    elif spec.mode == ApproxMode.RAD_EMUL:
+        qw = enc.rad_encode(qw, n, spec.k)
+    elif spec.mode == ApproxMode.ROUP_EMUL:
+        qx = enc.round_operand(qx, spec.r)
+        qw = enc.rad_encode(qw, n, spec.k)
+        # perforation of radix-4 digits above the high-radix digit
+        if spec.p:
+            y0 = enc.highradix_digit(qw, n, spec.k)
+            high = qw - y0
+            qw = enc.perforate_operand(high, 2 * n, spec.k // 2 + spec.p) + y0
+    acc = jnp.matmul(
+        qx.astype(jnp.int8).astype(jnp.int32),
+        qw.astype(jnp.int8).astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+    return acc.astype(jnp.float32) * (sx * sw)
+
+
+def approx_matmul(
+    x: Array,
+    w: Array,
+    spec: ApproxSpec | None = None,
+    *,
+    degree: Optional[Array] = None,
+    out_dtype=None,
+    path: str = "",
+) -> Array:
+    """x @ w through the approximation dispatch.
+
+    x: (..., K); w: (K, N).  `degree` is the runtime DyFXU knob (traced int32
+    scalar, effective bits for AXQ dynamic mode); ignored by static specs.
+    `path` lets the ring-TP lever recognize contracting-sharded projections.
+    """
+    spec = spec or ApproxSpec()
+    out_dtype = out_dtype or x.dtype
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    x2 = x.reshape(-1, K)
+
+    if spec.mode == ApproxMode.EXACT:
+        if _RING_TP and path.endswith(_RING_PATHS):
+            y = _ring_tp_matmul(x2, w)
+        elif _RING_TP and path.endswith(_RING_DX_PATHS):
+            y = _ring_dx_matmul(x2, w)
+        elif _BWD_BF16:
+            y = _matmul_bf16_bwd(x2, w)
+        else:
+            y = jnp.matmul(x2, w.astype(x2.dtype),
+                           preferred_element_type=jnp.float32)
+    elif spec.mode == ApproxMode.AXQ:
+        e = degree if (spec.dynamic and degree is not None) else spec.ebits
+        block = min(spec.block, K)
+        while K % block:
+            block //= 2
+        if _USE_PALLAS:
+            from . import axqmm  # lazy: pallas import
+
+            y = axqmm.axqmm(x2.astype(jnp.float32), w.astype(jnp.float32),
+                            block=block, ebits=e)
+        else:
+            y = qmm_ref(x2.astype(jnp.float32), w.astype(jnp.float32),
+                        block=block, ebits=e)
+    elif spec.mode in (ApproxMode.PR_EMUL, ApproxMode.RAD_EMUL, ApproxMode.ROUP_EMUL):
+        y = _emul_matmul(x2.astype(jnp.float32), w.astype(jnp.float32), spec)
+    elif spec.mode == ApproxMode.POW2_W:
+        w2 = enc.pow2_snap(w.astype(jnp.float32)).astype(x2.dtype)
+        y = jnp.matmul(x2, w2, preferred_element_type=jnp.float32)
+    else:
+        raise ValueError(spec.mode)
+    return y.reshape(*lead, w.shape[-1]).astype(out_dtype)

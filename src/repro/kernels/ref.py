@@ -1,0 +1,25 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel's tests sweep shapes/dtypes/degrees and assert_allclose against
+these references (tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import axmult
+from repro.core.quantization import qmm_ref  # noqa: F401  (axqmm oracle)
+
+Array = jnp.ndarray
+
+
+def pr_multiply_ref(a: Array, b: Array, p, r, n: int = 16) -> Array:
+    """Oracle for kernels.axmult_elem.pr_multiply: the core-library DyFXU
+    emulation (itself validated against the paper's definitions)."""
+    return axmult.pr_multiply_dynamic(a, b, n, jnp.asarray(p), jnp.asarray(r))
+
+
+def axqmm_ref(x: Array, w: Array, block: int = 512, ebits=8) -> Array:
+    """Oracle for kernels.axqmm.axqmm (block-quantized effective-bits GEMM)."""
+    return qmm_ref(x, w, block=block, ebits=ebits)

@@ -1,0 +1,28 @@
+"""Production mesh construction (spec'd by the dry-run contract).
+
+A FUNCTION, not a module-level constant — importing this module never touches
+jax device state.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.dist import meshctx
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16, 16) single-pod (256 chips) or (2, 16, 16) multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return meshctx.make_mesh(shape, axes)
+
+
+def make_mesh_for(devices: int, tp: int = 16, pods: int = 1):
+    """Elastic variant: mesh for an arbitrary surviving-device count
+    (dist/elastic.py computes the plan)."""
+    assert devices % (tp * pods) == 0
+    data = devices // (tp * pods)
+    if pods > 1:
+        return meshctx.make_mesh((pods, data, tp), ("pod", "data", "model"))
+    return meshctx.make_mesh((data, tp), ("data", "model"))

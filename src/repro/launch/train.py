@@ -1,0 +1,66 @@
+"""Production training entrypoint: builds the mesh, shards state via the
+partition rules, and runs the fault-tolerant trainer.
+
+  python -m repro.launch.train --arch tinyllama-1.1b --steps 1000 \
+      [--mesh 16x16|2x16x16|dxm] [--approx axq8|exact] [--qos]
+
+On this CPU container use smoke archs (--arch tinyllama-1.1b-smoke); on a TPU
+pod the same entrypoint drives the full configs.
+"""
+import argparse
+
+import jax
+
+from repro.configs import get_config
+from repro.core.approx import ApproxMode, ApproxPolicy, ApproxSpec
+from repro.core.dynamic import QoSController
+from repro.data.pipeline import make_pipeline
+from repro.dist import meshctx
+from repro.models import build_model
+from repro.train import step as step_mod
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b-smoke")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--mesh", default="1x1")
+    ap.add_argument("--approx", default="exact")
+    ap.add_argument("--qos", action="store_true")
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--ckpt-dir", default="checkpoints/launch_train")
+    args = ap.parse_args()
+
+    d, m = (int(x) for x in args.mesh.split("x")[:2])
+    mesh = meshctx.make_mesh((d, m), ("data", "model"))
+    meshctx.set_mesh(mesh)
+
+    cfg = get_config(args.arch)
+    policy = ApproxPolicy()
+    if args.approx.startswith("axq"):
+        policy = ApproxPolicy(default=ApproxSpec(
+            mode=ApproxMode.AXQ, ebits=int(args.approx[3:]), block=64,
+            dynamic=args.qos))
+    model = build_model(cfg, policy)
+    pipe = make_pipeline(cfg, seq_len=args.seq, global_batch=args.batch)
+    qos = QoSController(
+        ladder=[{"ebits": 8}, {"ebits": 7}, {"ebits": 6}, {"ebits": 5}],
+        low_water=-0.005, high_water=0.05) if args.qos else None
+    trainer = Trainer(
+        model,
+        step_mod.StepConfig(remat="none", total_steps=args.steps,
+                            warmup=max(args.steps // 20, 5),
+                            compress_grads=args.compress_grads),
+        TrainerConfig(total_steps=args.steps, ckpt_every=max(args.steps // 4, 10),
+                      ckpt_dir=args.ckpt_dir, qos=qos),
+        pipe, tp=m)
+    out = trainer.run()
+    print(f"[launch.train] done at step {out['final_step']}; "
+          f"preempted={out['preempted']}; stragglers={len(out['stragglers'])}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from .registry import Model, build_model, concrete_batch, input_specs  # noqa: F401

@@ -1,0 +1,274 @@
+"""GQA/MQA attention with blockwise online-softmax (memory-bounded), sliding
+windows, and single-token decode against a KV cache.
+
+Layout conventions:
+  q        (B, S, H, D)        H = padded q heads (config.padded(tp))
+  k, v     (B, S, KVr, D)      KVr = kv heads repeated/padded to TP degree
+  cache    (B, T_max, KVr, D)  per layer, bf16 (quantizable — beyond-paper opt)
+
+GQA is computed grouped — q reshaped to (B, S, KVr, G, D) — so repeated KV is
+never materialized beyond the KVr layout chosen for sharding (DESIGN.md §3).
+
+The blockwise paths bound peak memory to O(S x blk) per head group instead of
+O(S^2): prefill_32k would otherwise show multi-TB temporaries in the dry-run
+memory analysis.  Sliding-window attention (danube, recurrentgemma local
+attn) only *computes* the in-window KV blocks => sub-quadratic HLO FLOPs.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+NEG_INF = -1e30
+
+
+def repeat_kv(k: Array, target_heads: int) -> Array:
+    """(B, S, KV, D) -> (B, S, target, D) by head repetition (cheap gather)."""
+    kv = k.shape[2]
+    if kv == target_heads:
+        return k
+    assert target_heads % kv == 0
+    return jnp.repeat(k, target_heads // kv, axis=2)
+
+
+def _group_q(q: Array, kv_heads: int) -> Array:
+    """(B, S, H, D) -> (B, S, KVr, G, D)."""
+    B, S, H, D = q.shape
+    assert H % kv_heads == 0
+    return q.reshape(B, S, kv_heads, H // kv_heads, D)
+
+
+# ---------------------------------------------------------------------------
+# Full (small-seq / smoke) attention
+# ---------------------------------------------------------------------------
+
+
+def attn_full(q: Array, k: Array, v: Array, *, causal: bool,
+              window: Optional[int] = None) -> Array:
+    B, S, H, D = q.shape
+    kvh = k.shape[2]
+    qg = _group_q(q, kvh)  # (B,S,KV,G,D)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / math.sqrt(D)
+    ii = jnp.arange(S)[:, None]
+    jj = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= jj <= ii
+    if window is not None:
+        mask &= jj > ii - window
+    scores = jnp.where(mask, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v)
+    return out.reshape(B, S, H, D)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise online-softmax attention (flash-style, pure JAX)
+# ---------------------------------------------------------------------------
+
+
+def attn_blockwise(q: Array, k: Array, v: Array, *, causal: bool,
+                   window: Optional[int] = None,
+                   q_block: int = 512, kv_block: int = 512) -> Array:
+    """Memory-bounded attention.  When `window` is set and smaller than the
+    sequence, each q block only visits ceil(window/kv_block)+1 kv blocks via
+    dynamic slicing => O(S*window) compute (sub-quadratic path)."""
+    B, S, H, D = q.shape
+    kvh = k.shape[2]
+    if S <= max(q_block, 256):
+        return attn_full(q, k, v, causal=causal, window=window)
+    q_block = min(q_block, S)
+    while S % q_block:
+        q_block //= 2
+    kv_block = min(kv_block, S)
+    while S % kv_block:
+        kv_block //= 2
+    nq = S // q_block
+    scale = 1.0 / math.sqrt(D)
+    qg = _group_q(q, kvh)  # (B,S,KV,G,D)
+    G = qg.shape[3]
+
+    windowed = window is not None and window < S
+    if windowed:
+        # kv span visited per q block: window + q_block, rounded to kv_block
+        span = ((window + q_block + kv_block - 1) // kv_block) * kv_block
+        span = min(span, S)
+
+    def q_step(_, qi):
+        qb = jax.lax.dynamic_slice_in_dim(qg, qi * q_block, q_block, axis=1)
+        qb = qb.astype(jnp.float32) * scale
+        q_pos = qi * q_block + jnp.arange(q_block)
+
+        if windowed:
+            start = jnp.clip((qi + 1) * q_block - span, 0, S - span)
+            kspan = jax.lax.dynamic_slice_in_dim(k, start, span, axis=1)
+            vspan = jax.lax.dynamic_slice_in_dim(v, start, span, axis=1)
+            k_pos = start + jnp.arange(span)
+            s = jnp.einsum("bqkgd,btkd->bkgqt", qb, kspan.astype(jnp.float32))
+            m = jnp.ones((q_block, span), bool)
+            if causal:
+                m &= k_pos[None, :] <= q_pos[:, None]
+            m &= k_pos[None, :] > q_pos[:, None] - window
+            s = jnp.where(m[None, None, None], s, NEG_INF)
+            mx = jnp.max(s, axis=-1, keepdims=True)
+            p = jnp.exp(s - mx)
+            den = jnp.sum(p, axis=-1, keepdims=True)
+            ob = jnp.einsum("bkgqt,btkd->bqkgd", p / jnp.maximum(den, 1e-30),
+                            vspan.astype(jnp.float32))
+            return None, ob.astype(q.dtype)
+
+        # full causal: online softmax over kv blocks
+        nk = S // kv_block
+
+        def kv_step(carry, ki):
+            acc, mx, den = carry
+            kb = jax.lax.dynamic_slice_in_dim(k, ki * kv_block, kv_block, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(v, ki * kv_block, kv_block, axis=1)
+            k_pos = ki * kv_block + jnp.arange(kv_block)
+            s = jnp.einsum("bqkgd,btkd->bkgqt", qb, kb.astype(jnp.float32))
+            if causal:
+                m = k_pos[None, :] <= q_pos[:, None]
+                s = jnp.where(m[None, None, None], s, NEG_INF)
+            new_mx = jnp.maximum(mx, jnp.max(s, axis=-1, keepdims=True))
+            corr = jnp.exp(mx - new_mx)
+            p = jnp.exp(s - new_mx)
+            new_den = den * corr + jnp.sum(p, axis=-1, keepdims=True)
+            pv = jnp.einsum("bkgqt,btkd->bqkgd", p, vb.astype(jnp.float32))
+            # acc layout (B,q,K,G,D): corr layout (B,K,G,q,1) -> move axes
+            corr_a = jnp.moveaxis(corr, 3, 1)  # (B,q,K,G,1)
+            new_acc = acc * corr_a + pv
+            return (new_acc, new_mx, new_den), None
+
+        acc0 = jnp.zeros((B, q_block, kvh, G, D), jnp.float32)
+        mx0 = jnp.full((B, kvh, G, q_block, 1), NEG_INF, jnp.float32)
+        den0 = jnp.zeros((B, kvh, G, q_block, 1), jnp.float32)
+        (acc, mx, den), _ = jax.lax.scan(
+            kv_step, (acc0, mx0, den0), jnp.arange(nk))
+        den_a = jnp.moveaxis(den, 3, 1)
+        ob = acc / jnp.maximum(den_a, 1e-30)
+        return None, ob.astype(q.dtype)
+
+    _, blocks = jax.lax.scan(q_step, None, jnp.arange(nq))
+    # blocks: (nq, B, q_block, KV, G, D) -> (B, S, H, D)
+    out = jnp.moveaxis(blocks, 0, 1).reshape(B, S, kvh, G, D)
+    return out.reshape(B, S, H, D)
+
+
+# ---------------------------------------------------------------------------
+# Decode (one new token against the cache)
+# ---------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    k: Array          # (B, T, KVr, D)
+    v: Array          # (B, T, KVr, D)
+    length: Array     # (B,) int32 — tokens currently in cache
+
+
+class QuantKVCache(NamedTuple):
+    """int8 KV cache with per-(token, head) scales — §Perf hillclimb B2:
+    halves decode HBM residency/reads vs bf16 (the paper's operand-width
+    trade applied to the cache)."""
+
+    k: Array          # (B, T, KVr, D) int8
+    v: Array
+    ks: Array         # (B, T, KVr) f32
+    vs: Array
+    length: Array
+
+
+def _q8(x: Array):
+    """Per-(token, head) symmetric int8 quantization of (B, 1, KV, D)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def init_kv_cache(batch: int, max_len: int, kv_heads: int, head_dim: int,
+                  dtype=jnp.bfloat16) -> KVCache:
+    shape = (batch, max_len, kv_heads, head_dim)
+    return KVCache(
+        k=jnp.zeros(shape, dtype),
+        v=jnp.zeros(shape, dtype),
+        length=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def init_quant_kv_cache(batch: int, max_len: int, kv_heads: int, head_dim: int
+                        ) -> QuantKVCache:
+    shape = (batch, max_len, kv_heads, head_dim)
+    return QuantKVCache(
+        k=jnp.zeros(shape, jnp.int8), v=jnp.zeros(shape, jnp.int8),
+        ks=jnp.zeros(shape[:3], jnp.float32),
+        vs=jnp.zeros(shape[:3], jnp.float32),
+        length=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def decode_attn_quant(q1: Array, knew: Array, vnew: Array,
+                      cache: QuantKVCache, *, window: Optional[int] = None
+                      ) -> tuple[Array, QuantKVCache]:
+    """Decode against the int8 cache: quantize the new KV, dequantize tiles
+    at attention time (HBM holds int8; dequant lives in registers/VMEM)."""
+    B, _, H, D = q1.shape
+    T = cache.k.shape[1]
+    kvh = cache.k.shape[2]
+    pos = cache.length
+    slot = jnp.mod(pos, T) if (window is not None and window <= T) \
+        else jnp.minimum(pos, T - 1)
+    bidx = jnp.arange(B)
+    kq, ksn = _q8(knew)
+    vq, vsn = _q8(vnew)
+    k = cache.k.at[bidx, slot].set(kq[:, 0])
+    v = cache.v.at[bidx, slot].set(vq[:, 0])
+    ks = cache.ks.at[bidx, slot].set(ksn[:, 0])
+    vs = cache.vs.at[bidx, slot].set(vsn[:, 0])
+    qg = _group_q(q1, kvh)[:, 0]
+    kf = k.astype(jnp.float32) * ks[..., None]
+    s = jnp.einsum("bkgd,btkd->bkgt", qg.astype(jnp.float32), kf) / math.sqrt(D)
+    n_valid = jnp.minimum(pos + 1, T)
+    valid = jnp.arange(T)[None, :] < n_valid[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    vf = v.astype(jnp.float32) * vs[..., None]
+    out = jnp.einsum("bkgt,btkd->bkgd", p, vf)
+    out = out.reshape(B, 1, H, D).astype(q1.dtype)
+    return out, QuantKVCache(k, v, ks, vs, pos + 1)
+
+
+def decode_attn(q1: Array, knew: Array, vnew: Array, cache: KVCache,
+                *, window: Optional[int] = None) -> tuple[Array, KVCache]:
+    """q1: (B, 1, H, D); knew/vnew: (B, 1, KVr, D).
+
+    For windowed layers the cache is a ring buffer of size window; otherwise
+    writes at `length`.  Returns (out (B,1,H,D), new cache).
+    """
+    B, _, H, D = q1.shape
+    T = cache.k.shape[1]
+    kvh = cache.k.shape[2]
+    pos = cache.length  # (B,)
+    slot = jnp.mod(pos, T) if (window is not None and window <= T) else jnp.minimum(pos, T - 1)
+    bidx = jnp.arange(B)
+    k = cache.k.at[bidx, slot].set(knew[:, 0].astype(cache.k.dtype))
+    v = cache.v.at[bidx, slot].set(vnew[:, 0].astype(cache.v.dtype))
+    qg = _group_q(q1, kvh)[:, 0]  # (B,KV,G,D)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    # valid positions: for ring buffer all slots < min(len+1, T); else <= pos
+    n_valid = jnp.minimum(pos + 1, T)
+    valid = jnp.arange(T)[None, :] < n_valid[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, v.astype(jnp.float32))
+    out = out.reshape(B, 1, H, D).astype(q1.dtype)
+    return out, KVCache(k=k, v=v, length=pos + 1)

@@ -1,0 +1,241 @@
+"""Mixture-of-Experts block with expert parallelism over the `model` mesh axis.
+
+Routing strategy (DESIGN.md §3): inside a shard_map region, every model shard
+holds E/TP experts (weights sharded on the expert dim) and the *full* router
+(replicated weights).  Each shard gathers the tokens routed to its local
+experts into a capacity-bounded (E_local, C, d) buffer (sort-free rank-by-
+cumsum dispatch, all static shapes), runs the expert FFNs as batched GEMMs,
+scatter-adds gated outputs, and a psum over `model` combines the partial
+outputs — the same collective TP would pay for a dense FFN.  No all_to_all is
+needed because activations are replicated across `model` under TP.
+
+Compute cost therefore matches the *active* parameter count (top-k experts per
+token + shared experts), which is what the roofline's 6*N_active*D model FLOPs
+expects — a dense one-hot dispatch einsum would have inflated HLO FLOPs by
+O(E/topk).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.core.approx import ApproxPolicy
+from repro.dist import meshctx
+from repro.models.layers import act_fn, init_dense, truncated_normal
+
+Array = jnp.ndarray
+
+
+def init_moe(key, cfg: ArchConfig, tp: int):
+    m = cfg.moe
+    pd = cfg.padded(tp)
+    E = pd.n_experts
+    d = cfg.d_model
+    f = m.d_expert
+    ks = jax.random.split(key, 6)
+    params = {
+        "router": {"w": truncated_normal(ks[0], (d, E), 1.0 / math.sqrt(d))},
+        "experts": {
+            "up": truncated_normal(ks[1], (E, d, f), 1.0 / math.sqrt(d)),
+            "gate": truncated_normal(ks[2], (E, d, f), 1.0 / math.sqrt(d)),
+            "down": truncated_normal(ks[3], (E, f, d), 1.0 / math.sqrt(f)),
+        },
+    }
+    if m.n_shared:
+        fs = m.d_shared * m.n_shared
+        params["shared"] = {
+            "up": truncated_normal(ks[4], (d, fs), 1.0 / math.sqrt(d)),
+            "gate": truncated_normal(ks[5], (d, fs), 1.0 / math.sqrt(d)),
+            "down": truncated_normal(ks[0], (fs, d), 1.0 / math.sqrt(fs)),
+        }
+    return params
+
+
+import os
+
+_MOE_INT8 = os.environ.get("REPRO_MOE_INT8", "0") == "1"
+# §Perf: combine-psum through the int8 ring (straight-through backward —
+# the VJP of a psum with replicated output is the identity on the cotangent)
+_MOE_RING = os.environ.get("REPRO_RING_TP", "0") == "1"
+
+
+@jax.custom_vjp
+def _ring_psum_model(x):
+    from repro.dist.collectives import ring_allreduce_int8_local
+
+    return ring_allreduce_int8_local(x, "model")
+
+
+def _rp_fwd(x):
+    return _ring_psum_model(x), None
+
+
+def _rp_bwd(_, g):
+    return (g,)
+
+
+_ring_psum_model.defvjp(_rp_fwd, _rp_bwd)
+
+
+def _q8_lastdim(x):
+    """Per-row symmetric int8 quantization over the last dim."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale
+
+
+from functools import partial as _partial
+
+
+@_partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _int8_einsum(spec, x, w):
+    """s8 x s8 -> s32 expert GEMM (MXU int8 path, 2x bf16 rate — §Perf
+    hillclimb C1: the dissertation's operand-width trade deployed in the
+    experts).  Straight-through backward (quantization is piecewise-constant;
+    STE keeps the experts trainable)."""
+    qx, sx = _q8_lastdim(x)                        # (E,C,d), (E,C,1)
+    qw, sw = _q8_lastdim(jnp.swapaxes(w, -1, -2))  # (E,f,d), (E,f,1)
+    acc = jnp.einsum(spec, qx.astype(jnp.int8), jnp.swapaxes(qw, -1, -2),
+                     preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * sx * jnp.swapaxes(sw, -1, -2)
+
+
+def _int8_einsum_fwd(spec, x, w):
+    return _int8_einsum(spec, x, w), (x, w)
+
+
+def _int8_einsum_bwd(spec, res, g):
+    x, w = res
+    ins, out = spec.split("->")
+    a, b = ins.split(",")
+    g16 = g.astype(jnp.bfloat16)
+    dx = jnp.einsum(f"{out},{b}->{a}", g16, w.astype(jnp.bfloat16),
+                    preferred_element_type=jnp.bfloat16).astype(x.dtype)
+    dw = jnp.einsum(f"{a},{out}->{b}", x.astype(jnp.bfloat16), g16,
+                    preferred_element_type=jnp.float32).astype(w.dtype)
+    return dx, dw
+
+
+_int8_einsum.defvjp(_int8_einsum_fwd, _int8_einsum_bwd)
+
+
+def _local_expert_ffn(w, x, act):
+    """x: (E_l, C, d); w[up/gate/down]: (E_l, d, f)/(E_l, f, d)."""
+    if _MOE_INT8:
+        up = _int8_einsum("ecd,edf->ecf", x, w["up"])
+        gate = _int8_einsum("ecd,edf->ecf", x, w["gate"])
+        h = (act_fn(act)(gate) * up).astype(x.dtype)
+        return _int8_einsum("ecf,efd->ecd", h, w["down"])
+    up = jnp.einsum("ecd,edf->ecf", x, w["up"], preferred_element_type=jnp.float32)
+    gate = jnp.einsum("ecd,edf->ecf", x, w["gate"], preferred_element_type=jnp.float32)
+    h = (act_fn(act)(gate) * up).astype(x.dtype)
+    return jnp.einsum("ecf,efd->ecd", h, w["down"], preferred_element_type=jnp.float32)
+
+
+def moe_apply(params, x: Array, cfg: ArchConfig, policy: ApproxPolicy, path: str,
+              degree=None) -> tuple[Array, Array]:
+    """x: (B, S, d) -> (y (B, S, d), aux load-balance loss (scalar))."""
+    mesh = meshctx.get_mesh()
+    m = cfg.moe
+    tp = mesh.shape["model"]
+    pd = cfg.padded(tp)
+    E = pd.n_experts
+    E_local = E // tp
+    topk = m.top_k
+    bdims = meshctx.batch_axes(mesh)
+    d = cfg.d_model
+    act = cfg.act
+
+    dp = 1
+    for a in bdims:
+        dp *= mesh.shape[a]
+    B, S, _ = x.shape
+    T_local = (B // dp) * S
+    capacity = int(math.ceil(T_local * topk / E * m.capacity_factor))
+    capacity = max(capacity, 4)
+
+    # mask logits of padded experts so the router never selects them
+    n_pad = E - m.n_experts
+    pad_mask = jnp.where(jnp.arange(E) < m.n_experts, 0.0, -1e9)
+
+    def body(xs, router_w, expert_w):
+        # xs: (B_local, S, d) — replicated over model axis
+        bl, s, _ = xs.shape
+        t = bl * s
+        xt = xs.reshape(t, d)
+        logits = (xt.astype(jnp.float32) @ router_w.astype(jnp.float32)) + pad_mask
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, ids = jax.lax.top_k(probs, topk)          # (t, topk)
+        gate_vals = gate_vals / jnp.maximum(
+            jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+        # aux load-balance loss (Switch-style): E * sum_e f_e * p_e
+        me = jnp.mean(probs, axis=0)
+        ce = jnp.zeros((E,), jnp.float32).at[ids.reshape(-1)].add(
+            jnp.ones((t * topk,), jnp.float32)) / (t * topk)
+        aux = E * jnp.sum(me * ce)
+
+        # --- local dispatch --------------------------------------------
+        axis_idx = jax.lax.axis_index("model")
+        e0 = axis_idx * E_local
+        flat_ids = ids.reshape(-1)                           # (t*topk,)
+        flat_gate = gate_vals.reshape(-1)
+        local_e = flat_ids - e0                              # local expert idx
+        is_local = (local_e >= 0) & (local_e < E_local)
+        onehot = jax.nn.one_hot(jnp.where(is_local, local_e, E_local),
+                                E_local + 1, dtype=jnp.int32)[:, :E_local]
+        ranks = jnp.cumsum(onehot, axis=0) - onehot          # rank within expert
+        slot = jnp.sum(ranks * onehot, axis=-1)              # (t*topk,)
+        keep = is_local & (slot < capacity)
+        tok_idx = jnp.arange(t * topk) // topk
+
+        # scatter token rows into (E_local, C, d)
+        e_idx = jnp.where(keep, local_e, 0)
+        s_idx = jnp.where(keep, slot, 0)
+        buf = jnp.zeros((E_local, capacity, d), xt.dtype)
+        rows = jnp.where(keep[:, None], xt[tok_idx], 0).astype(xt.dtype)
+        buf = buf.at[e_idx, s_idx].add(jnp.where(keep[:, None], rows, 0))
+
+        w_local = expert_w  # already sliced by shard_map: (E_local, d, f)
+        y_buf = _local_expert_ffn(w_local, buf, act).astype(xt.dtype)
+
+        # gather back + gate + combine
+        y_rows = y_buf[e_idx, s_idx]                         # (t*topk, d)
+        y_rows = jnp.where(keep[:, None], y_rows, 0) * flat_gate[:, None].astype(xt.dtype)
+        yt = jnp.zeros((t, d), xt.dtype).at[tok_idx].add(y_rows)
+        if _MOE_RING:
+            yt = _ring_psum_model(yt)
+        else:
+            yt = jax.lax.psum(yt, "model")
+        aux = jax.lax.pmean(aux, ("model",) + tuple(bdims))
+        return yt.reshape(bl, s, d), aux
+
+    in_specs = (
+        P(bdims if bdims else None, None, None),
+        P(None, None),
+        {k: P("model", None, None) for k in ("up", "gate", "down")},
+    )
+    out_specs = (P(bdims if bdims else None, None, None), P())
+    y, aux = jax.shard_map(
+        body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_vma=False,
+    )(x, params["router"]["w"], params["experts"])
+
+    if "shared" in params:
+        from repro.models.layers import gated_mlp_apply
+
+        shared = gated_mlp_apply(
+            {"up": {"w": params["shared"]["up"]},
+             "gate": {"w": params["shared"]["gate"]},
+             "down": {"w": params["shared"]["down"]}},
+            x, policy, path + "/shared", act=act, degree=degree)
+        y = y + shared
+    return y, aux

@@ -1,0 +1,149 @@
+"""Uniform model API over all families.
+
+    model = build_model(cfg)
+    params = model.init(key, tp)
+    loss, metrics = model.loss(params, batch, tp=tp)
+    logits, aux = model.forward(params, batch, tp=tp)
+    cache = model.init_cache(tp, batch, max_len)
+    logits, cache = model.decode_step(params, cache, tokens, tp=tp)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.approx import ApproxPolicy
+from repro.models import rglru, ssm, transformer
+
+Array = jnp.ndarray
+
+
+@dataclass
+class Model:
+    cfg: ArchConfig
+    policy: ApproxPolicy = field(default_factory=ApproxPolicy)
+
+    # ---- init ----
+    def init(self, key, tp: int = 1):
+        if self.cfg.family == "hybrid":
+            return rglru.init_hybrid(key, self.cfg, tp)
+        if self.cfg.family == "ssm":
+            return ssm.init_ssm_lm(key, self.cfg, tp)
+        return transformer.init_lm(key, self.cfg, tp)
+
+    # ---- forward ----
+    def forward(self, params, batch, tp: int = 1, degree=None, remat="dots"):
+        if self.cfg.family == "hybrid":
+            return rglru.hybrid_forward(params, self.cfg, self.policy, batch,
+                                        tp, degree, remat)
+        if self.cfg.family == "ssm":
+            return ssm.ssm_forward(params, self.cfg, self.policy, batch,
+                                   tp, degree, remat)
+        return transformer.lm_forward(params, self.cfg, self.policy, batch,
+                                      tp, degree, remat)
+
+    # ---- loss ----
+    def loss(self, params, batch, tp: int = 1, degree=None, remat="dots"):
+        if self.cfg.family in ("hybrid", "ssm"):
+            logits, aux = self.forward(params, batch, tp, degree, remat)
+            labels = batch["labels"]
+            mask = (labels >= 0).astype(jnp.float32)
+            lc = jnp.maximum(labels, 0)
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            ll = jnp.take_along_axis(logp, lc[..., None], axis=-1)[..., 0]
+            ce = -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+            return ce, {"ce": ce, "aux": aux, "ntokens": jnp.sum(mask)}
+        return transformer.lm_loss(params, self.cfg, self.policy, batch,
+                                   tp, degree, remat)
+
+    # ---- decode ----
+    def init_cache(self, tp: int, batch: int, max_len: int, dtype=jnp.bfloat16,
+                   quant: Optional[bool] = None):
+        if self.cfg.encoder_only:
+            raise ValueError("encoder-only arch has no decode step")
+        if self.cfg.family == "hybrid":
+            return rglru.init_hybrid_cache(self.cfg, tp, batch, max_len, dtype)
+        if self.cfg.family == "ssm":
+            return ssm.init_ssm_cache(self.cfg, tp, batch, max_len, dtype)
+        if quant is None:
+            import os
+
+            quant = os.environ.get("REPRO_KV_INT8", "0") == "1"
+        return transformer.init_lm_cache(self.cfg, tp, batch, max_len, dtype,
+                                         quant=quant)
+
+    def decode_step(self, params, cache, tokens, tp: int = 1, degree=None):
+        if self.cfg.family == "hybrid":
+            return rglru.hybrid_decode_step(params, self.cfg, self.policy,
+                                            cache, tokens, tp, degree)
+        if self.cfg.family == "ssm":
+            return ssm.ssm_decode_step(params, self.cfg, self.policy,
+                                       cache, tokens, tp, degree)
+        return transformer.lm_decode_step(params, self.cfg, self.policy,
+                                          cache, tokens, tp, degree)
+
+    def param_count(self, params) -> int:
+        return sum(x.size for x in jax.tree_util.tree_leaves(params))
+
+
+def build_model(cfg: ArchConfig, policy: Optional[ApproxPolicy] = None) -> Model:
+    return Model(cfg, policy or ApproxPolicy())
+
+
+# ---------------------------------------------------------------------------
+# input specs — ShapeDtypeStruct stand-ins for every model input (dry-run)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ArchConfig, shape_name: str) -> dict:
+    """Abstract input batch for (arch, shape): weak-type-correct,
+    shardable, no device allocation."""
+    from repro.configs.base import SHAPES
+
+    s = SHAPES[shape_name]
+    B, S = s.global_batch, s.seq_len
+    i32 = jnp.int32
+    f32 = jnp.float32
+    sd = jax.ShapeDtypeStruct
+    if s.kind == "decode":
+        return {"tokens": sd((B, 1), i32)}
+    if cfg.frontend == "vision":
+        s_img = cfg.frontend_tokens
+        s_txt = S - s_img
+        return {
+            "tokens": sd((B, s_txt), i32),
+            "patch_embeds": sd((B, s_img, cfg.frontend_dim), f32),
+            "labels": sd((B, s_txt), i32),
+        }
+    if cfg.frontend == "audio":
+        return {
+            "frame_feats": sd((B, S, cfg.frontend_dim), f32),
+            "labels": sd((B, S), i32),
+        }
+    return {"tokens": sd((B, S), i32), "labels": sd((B, S), i32)}
+
+
+def concrete_batch(cfg: ArchConfig, seq: int, batch: int, key=None) -> dict:
+    """Small concrete random batch (smoke tests, examples)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    out: dict = {}
+    if cfg.frontend == "audio":
+        out["frame_feats"] = jax.random.normal(ks[0], (batch, seq, cfg.frontend_dim))
+        out["labels"] = jax.random.randint(ks[1], (batch, seq), 0, cfg.vocab)
+        return out
+    if cfg.frontend == "vision":
+        s_img = cfg.frontend_tokens
+        s_txt = seq - s_img
+        out["patch_embeds"] = jax.random.normal(ks[0], (batch, s_img, cfg.frontend_dim))
+        out["tokens"] = jax.random.randint(ks[1], (batch, s_txt), 0, cfg.vocab)
+        out["labels"] = jax.random.randint(ks[2], (batch, s_txt), 0, cfg.vocab)
+        return out
+    out["tokens"] = jax.random.randint(ks[0], (batch, seq), 0, cfg.vocab)
+    out["labels"] = jax.random.randint(ks[1], (batch, seq), 0, cfg.vocab)
+    return out

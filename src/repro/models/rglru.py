@@ -1,0 +1,287 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local attention,
+stacked in the (rec, rec, attn) pattern.
+
+RG-LRU (arXiv:2402.19427):
+    r_t = sigmoid(W_a x_t)                      recurrence gate
+    i_t = sigmoid(W_x x_t)                      input gate
+    a_t = exp(-c * softplus(Lambda) * r_t)      per-channel decay, c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Train/prefill uses ``jax.lax.associative_scan`` (log-depth, O(S) memory);
+decode is an O(1) state update — which is why long_500k runs for this arch.
+The layer stack scans over pattern *groups* (homogeneous params) plus an
+explicit tail for n_layers % len(pattern).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.approx import ApproxPolicy
+from repro.dist import meshctx
+from repro.models import attention as attn
+from repro.models import layers as L
+
+Array = jnp.ndarray
+_C = 8.0
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU block
+# ---------------------------------------------------------------------------
+
+
+def init_rec_block(key, cfg: ArchConfig):
+    d = cfg.d_model
+    ks = jax.random.split(key, 7)
+    lam = jax.random.uniform(ks[5], (d,), jnp.float32, 0.9**2, 0.999**2)
+    # Lambda parameterized so that a = lam^(c*r) at r=1: softplus(L) = -log(lam)/c
+    lam_param = jnp.log(jnp.expm1(-jnp.log(lam) / _C))
+    return {
+        "ln1": L.init_rmsnorm(d),
+        "ln2": L.init_rmsnorm(d),
+        "wx": L.init_dense(ks[0], d, d),          # input branch
+        "wg": L.init_dense(ks[1], d, d),          # gate branch (GeLU)
+        "conv": L.init_conv1d(ks[2], d, 4),
+        "wa": L.init_dense(ks[3], d, d),          # recurrence gate
+        "wi": L.init_dense(ks[4], d, d),          # input gate
+        "lam": lam_param,
+        "wo": L.init_dense(ks[6], d, d, scale=1.0 / math.sqrt(d)),
+        "mlp": L.init_gated_mlp(jax.random.fold_in(key, 9), d, cfg.d_ff),
+    }
+
+
+def _rglru_scan(x: Array, a: Array, h0: Array | None = None):
+    """Linear recurrence h_t = a_t h_{t-1} + b_t via associative scan.
+    x (= b_t), a: (B, S, d) f32.  Returns all h_t (B, S, d)."""
+    if h0 is not None:
+        # fold initial state into the first step
+        x = x.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, x), axis=1)
+    return h
+
+
+def rec_block_apply(bp, x: Array, cfg: ArchConfig, policy: ApproxPolicy,
+                    path: str, degree=None,
+                    state: tuple[Array, Array] | None = None):
+    """Pre-norm residual recurrent block.  state = (h (B,d), conv (B,3,d)) for
+    decode; None for train/prefill.  Returns (x_out, new_state_or_None)."""
+    h_in = L.rmsnorm_apply(bp["ln1"], x, cfg.norm_eps)
+    xb = L.dense_apply(bp["wx"], h_in, policy, path + "/wx", degree)
+    gb = L.dense_apply(bp["wg"], h_in, policy, path + "/wg", degree)
+    conv_state = state[1] if state is not None else None
+    xb, new_conv = L.conv1d_apply(bp["conv"], xb, conv_state)
+    r = jax.nn.sigmoid(
+        L.dense_apply(bp["wa"], h_in, policy, path + "/wa", degree).astype(jnp.float32))
+    i = jax.nn.sigmoid(
+        L.dense_apply(bp["wi"], h_in, policy, path + "/wi", degree).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(bp["lam"]) * r          # (B,S,d) f32
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xb.astype(jnp.float32))
+    if state is None:
+        hseq = _rglru_scan(gated_in, a)
+        new_h = hseq[:, -1]
+    else:
+        h_prev = state[0]
+        hseq = (a[:, 0] * h_prev + gated_in[:, 0])[:, None]
+        new_h = hseq[:, 0]
+    y = hseq.astype(x.dtype) * jax.nn.gelu(gb)
+    y = L.dense_apply(bp["wo"], y, policy, path + "/wo", degree)
+    x = x + y
+    h2 = L.rmsnorm_apply(bp["ln2"], x, cfg.norm_eps)
+    f = L.gated_mlp_apply(bp["mlp"], h2, policy, path + "/mlp", cfg.act, degree)
+    out = x + f
+    return out, (new_h, new_conv)
+
+
+# ---------------------------------------------------------------------------
+# local-attention block (window = cfg.local_window)
+# ---------------------------------------------------------------------------
+
+
+def init_attn_block(key, cfg: ArchConfig, tp: int):
+    from repro.models.transformer import init_block
+
+    return init_block(key, cfg, tp)
+
+
+def attn_block_apply(bp, x, cfg: ArchConfig, tp, policy, path, positions, degree=None):
+    from repro.models.transformer import block_apply
+    import dataclasses
+
+    cfg_local = dataclasses.replace(cfg, swa_window=cfg.local_window, moe=None)
+    return block_apply(bp, x, cfg_local, tp, policy, path, positions, degree)
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+
+def init_hybrid(key, cfg: ArchConfig, tp: int):
+    pat = cfg.block_pattern
+    n_groups, tail = divmod(cfg.n_layers, len(pat))
+    ks = jax.random.split(key, 5)
+    gkeys = jax.random.split(ks[0], n_groups)
+
+    def init_group(k):
+        kk = jax.random.split(k, len(pat))
+        return {
+            f"{name}{i}": (
+                init_rec_block(kk[i], cfg) if name == "rec"
+                else init_attn_block(kk[i], cfg, tp)
+            )
+            for i, name in enumerate(pat)
+        }
+
+    params = {
+        "embed": L.init_embedding(ks[1], cfg.padded(tp).vocab, cfg.d_model),
+        "groups": jax.vmap(init_group)(gkeys),
+        "ln_f": L.init_rmsnorm(cfg.d_model),
+        "unembed": L.init_dense(ks[2], cfg.d_model, cfg.padded(tp).vocab,
+                                scale=1.0 / math.sqrt(cfg.d_model)),
+    }
+    tkeys = jax.random.split(ks[3], max(tail, 1))
+    params["tail"] = [init_rec_block(tkeys[i], cfg) for i in range(tail)]
+    return params
+
+
+def hybrid_forward(params, cfg: ArchConfig, policy: ApproxPolicy, batch: dict,
+                   tp: int = 1, degree=None, remat: str = "dots"):
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    tokens = batch["tokens"]
+    x = L.embed_apply(params["embed"], tokens, dtype)
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    pat = cfg.block_pattern
+
+    def group_body(h, gp):
+        for i, name in enumerate(pat):
+            bp = gp[f"{name}{i}"]
+            if name == "rec":
+                h, _ = rec_block_apply(bp, h, cfg, policy, f"g/{name}{i}", degree)
+            else:
+                h, _ = attn_block_apply(bp, h, cfg, tp, policy, f"g/{name}{i}",
+                                        positions, degree)
+        return h, None
+
+    body = group_body
+    if remat != "none":
+        body = jax.checkpoint(
+            group_body,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    x, _ = jax.lax.scan(body, x, params["groups"])
+    for i, bp in enumerate(params["tail"]):
+        x, _ = rec_block_apply(bp, x, cfg, policy, f"tail/{i}", degree)
+    x = L.rmsnorm_apply(params["ln_f"], x, cfg.norm_eps)
+    logits = L.dense_apply(params["unembed"], x, policy, "unembed", degree)
+    return logits.astype(jnp.float32), jnp.zeros((), jnp.float32)
+
+
+class HybridCache(NamedTuple):
+    # attention caches: one per group's attn layer (+0 for tail)
+    k: Array          # (n_groups, B, W, KVr, D)
+    v: Array
+    # recurrent states: (n_rec_total, B, d) and conv tails (n_rec_total, B, 3, d)
+    h: Array
+    conv: Array
+    length: Array     # (B,)
+
+
+def init_hybrid_cache(cfg: ArchConfig, tp: int, batch: int, max_len: int,
+                      dtype=jnp.bfloat16) -> HybridCache:
+    pat = cfg.block_pattern
+    n_groups, tail = divmod(cfg.n_layers, len(pat))
+    n_rec = n_groups * sum(1 for p in pat if p == "rec") + tail
+    pd = cfg.padded(tp)
+    W = min(cfg.local_window or max_len, max_len)
+    return HybridCache(
+        k=jnp.zeros((n_groups, batch, W, pd.n_kv_rep, cfg.head_dim), dtype),
+        v=jnp.zeros((n_groups, batch, W, pd.n_kv_rep, cfg.head_dim), dtype),
+        h=jnp.zeros((n_rec, batch, cfg.d_model), jnp.float32),
+        conv=jnp.zeros((n_rec, batch, 3, cfg.d_model), dtype),
+        length=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def hybrid_decode_step(params, cfg: ArchConfig, policy: ApproxPolicy,
+                       cache: HybridCache, tokens: Array, tp: int = 1,
+                       degree=None):
+    from repro.models.transformer import _qkv
+
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    pd = cfg.padded(tp)
+    pat = cfg.block_pattern
+    n_groups = cfg.n_layers // len(pat)
+    B = tokens.shape[0]
+    x = L.embed_apply(params["embed"], tokens, dtype)
+    positions = cache.length[:, None]
+    rec_per_group = sum(1 for p in pat if p == "rec")
+
+    def group_body(carry, xs):
+        h = carry
+        gp, ck, cv, hs, cs = xs  # hs: (rec_per_group, B, d)
+        ri = 0
+        nh, nc = [], []
+        for i, name in enumerate(pat):
+            bp = gp[f"{name}{i}"]
+            if name == "rec":
+                h, (h_new, conv_new) = rec_block_apply(
+                    bp, h, cfg, policy, "g", degree,
+                    state=(hs[ri], cs[ri]))
+                nh.append(h_new)
+                nc.append(conv_new)
+                ri += 1
+            else:
+                hn = L.rmsnorm_apply(bp["ln1"], h, cfg.norm_eps)
+                import dataclasses
+
+                cfg_l = dataclasses.replace(cfg, swa_window=cfg.local_window)
+                q, k, v = _qkv(bp, hn, cfg_l, pd, policy, "g", positions, degree)
+                lc = attn.KVCache(ck, cv, cache.length)
+                o, lc2 = attn.decode_attn(q, k, v, lc, window=cfg.local_window)
+                o = o.reshape(B, 1, pd.n_heads * cfg.head_dim)
+                o = L.dense_apply(bp["wo"], o, policy, "g/wo", degree)
+                h = h + o
+                hn = L.rmsnorm_apply(bp["ln2"], h, cfg.norm_eps)
+                f = L.gated_mlp_apply(bp["mlp"], hn, policy, "g/mlp", cfg.act, degree)
+                h = h + f
+                ck, cv = lc2.k, lc2.v
+        return h, (ck, cv, jnp.stack(nh), jnp.stack(nc))
+
+    n_tail = len(params["tail"])
+    hs_groups = cache.h[: n_groups * rec_per_group].reshape(
+        n_groups, rec_per_group, B, cfg.d_model)
+    cs_groups = cache.conv[: n_groups * rec_per_group].reshape(
+        n_groups, rec_per_group, B, 3, cfg.d_model)
+    x, (nk, nv, nhs, ncs) = jax.lax.scan(
+        group_body, x, (params["groups"], cache.k, cache.v, hs_groups, cs_groups))
+    new_h = [nhs.reshape(-1, B, cfg.d_model)]
+    new_c = [ncs.reshape(-1, B, 3, cfg.d_model)]
+    for i, bp in enumerate(params["tail"]):
+        idx = n_groups * rec_per_group + i
+        x, (h_new, conv_new) = rec_block_apply(
+            bp, x, cfg, policy, "tail", degree,
+            state=(cache.h[idx], cache.conv[idx]))
+        new_h.append(h_new[None])
+        new_c.append(conv_new[None])
+    x = L.rmsnorm_apply(params["ln_f"], x, cfg.norm_eps)
+    logits = L.dense_apply(params["unembed"], x, policy, "unembed", degree)
+    new_cache = HybridCache(
+        k=nk, v=nv,
+        h=jnp.concatenate(new_h, axis=0),
+        conv=jnp.concatenate(new_c, axis=0),
+        length=cache.length + 1,
+    )
+    return logits.astype(jnp.float32), new_cache

@@ -1,0 +1,219 @@
+"""Mamba-2 (SSD, state-space duality) — chunked dual form (arXiv:2405.21060).
+
+GEMM-dominated by construction (the point of SSD), so the paper's
+approximate-multiplier technique applies to this attention-free arch through
+the same approx_matmul dispatch (DESIGN.md §4).
+
+Chunked algorithm (chunk length Q):
+  h_t = exp(A dt_t) h_{t-1} + dt_t B_t (x) X_t        (state (H, P, N))
+  y_t = C_t . h_t + D * X_t
+  intra-chunk: Y[s] += sum_{t<=s} (C_s.B_t) exp(cum_s - cum_t) dt_t X_t
+  inter-chunk: lax.scan over chunk summaries.
+
+Decode is the O(1) recurrent update — long_500k runs.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.approx import ApproxPolicy
+from repro.dist import meshctx
+from repro.models import layers as L
+
+Array = jnp.ndarray
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.headdim
+    return d_in, H, s.headdim, s.d_state
+
+
+def init_ssm_block(key, cfg: ArchConfig):
+    d = cfg.d_model
+    d_in, H, P, N = _dims(cfg)
+    s = cfg.ssm
+    ks = jax.random.split(key, 6)
+    dt = jnp.exp(
+        jax.random.uniform(ks[2], (H,), jnp.float32)
+        * (math.log(s.dt_max) - math.log(s.dt_min)) + math.log(s.dt_min))
+    return {
+        "ln": L.init_rmsnorm(d),
+        # fused input projection: [z, x, B, C, dt]
+        "in_proj": L.init_dense(ks[0], d, 2 * d_in + 2 * N + H),
+        "conv": L.init_conv1d(ks[1], d_in + 2 * N, s.conv_width),
+        "dt_bias": jnp.log(jnp.expm1(dt)),               # softplus^-1(dt)
+        "a_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "gnorm": L.init_rmsnorm(d_in),
+        "out_proj": L.init_dense(ks[3], d_in, d, scale=1.0 / math.sqrt(d_in)),
+    }
+
+
+def _split_proj(proj: Array, cfg: ArchConfig):
+    d_in, H, P, N = _dims(cfg)
+    z = proj[..., :d_in]
+    xBC = proj[..., d_in : 2 * d_in + 2 * N]
+    dt = proj[..., 2 * d_in + 2 * N :]
+    return z, xBC, dt
+
+
+def _segsum_decay(dtA: Array) -> tuple[Array, Array]:
+    """dtA: (..., Q, H) negative log-decays.  Returns (cum inclusive (...,Q,H),
+    L (..., H, Q, Q) lower-triangular exp(cum_s - cum_t))."""
+    cum = jnp.cumsum(dtA, axis=-2)                       # (..., Q, H)
+    diff = cum[..., :, None, :] - cum[..., None, :, :]   # (..., Q, Q, H) s,t
+    Q = dtA.shape[-2]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    diff = jnp.where(mask[..., None], diff, -jnp.inf)
+    Lmat = jnp.exp(diff)                                 # (..., Q, Q, H)
+    return cum, jnp.moveaxis(Lmat, -1, -3)               # (..., H, Q, Q)
+
+
+def ssm_block_apply(bp, x_res: Array, cfg: ArchConfig, policy: ApproxPolicy,
+                    path: str, degree=None,
+                    state: tuple[Array, Array] | None = None):
+    """x_res: (B, S, d).  state = (h (B,H,P,N), conv (B,w-1,C)) for decode.
+    Returns (out, new_state)."""
+    d_in, H, P, N = _dims(cfg)
+    s = cfg.ssm
+    B_, S, _ = x_res.shape
+    xln = L.rmsnorm_apply(bp["ln"], x_res, cfg.norm_eps)
+    proj = L.dense_apply(bp["in_proj"], xln, policy, path + "/in_proj", degree)
+    z, xBC, dt_raw = _split_proj(proj, cfg)
+    conv_state = state[1] if state is not None else None
+    xBC, new_conv = L.conv1d_apply(bp["conv"], jax.nn.silu(xBC), conv_state)
+    X = xBC[..., :d_in].reshape(B_, S, H, P)
+    Bm = xBC[..., d_in : d_in + N].astype(jnp.float32)
+    Cm = xBC[..., d_in + N :].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + bp["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(bp["a_log"])                                          # (H,)
+    Xf = X.astype(jnp.float32)
+
+    if state is not None:
+        # decode: one step, recurrent update
+        h_prev = state[0]                                 # (B,H,P,N)
+        a = jnp.exp(dt[:, 0] * A)                         # (B,H)
+        dBx = jnp.einsum("bh,bn,bhp->bhpn", dt[:, 0], Bm[:, 0], Xf[:, 0])
+        h = a[..., None, None] * h_prev + dBx
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0], h)
+        y = y + bp["D"][None, :, None] * Xf[:, 0]
+        y = y.reshape(B_, 1, d_in)
+        new_state = (h, new_conv)
+    else:
+        Q = min(s.chunk, S)
+        while S % Q:
+            Q //= 2
+        nc = S // Q
+        Xc = Xf.reshape(B_, nc, Q, H, P)
+        Bc = Bm.reshape(B_, nc, Q, N)
+        Cc = Cm.reshape(B_, nc, Q, N)
+        dtc = dt.reshape(B_, nc, Q, H)
+        dtA = dtc * A                                     # (B,nc,Q,H)
+        cum, Lmat = _segsum_decay(dtA)                    # cum (B,nc,Q,H)
+        # intra-chunk
+        CB = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)        # (B,nc,Q,Q) s,t
+        scores = CB[:, :, None] * Lmat                    # (B,nc,H,Q,Q)
+        dtX = dtc[..., None] * Xc                         # (B,nc,Q,H,P)
+        Y = jnp.einsum("bchst,bcthp->bcshp", scores, dtX)
+        # chunk summaries
+        decay_out = jnp.exp(cum[:, :, -1:, :] - cum)      # (B,nc,Q,H)
+        states = jnp.einsum("bcqh,bcqhp,bcqn->bchpn", decay_out * dtc, Xc, Bc)
+        chunk_decay = jnp.exp(cum[:, :, -1])              # (B,nc,H)
+
+        def chunk_scan(h, xs):
+            st, cd = xs                                   # (B,H,P,N), (B,H)
+            h_new = cd[..., None, None] * h + st
+            return h_new, h                                # emit h_prev
+
+        h0 = jnp.zeros((B_, H, P, N), jnp.float32)
+        _, h_prevs = jax.lax.scan(
+            chunk_scan, h0,
+            (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+        h_prevs = jnp.moveaxis(h_prevs, 0, 1)             # (B,nc,H,P,N)
+        decay_in = jnp.exp(cum)                           # (B,nc,Q,H)
+        Y = Y + jnp.einsum("bcqn,bchpn,bcqh->bcqhp", Cc, h_prevs, decay_in)
+        Y = Y + bp["D"][None, None, None, :, None] * Xc
+        y = Y.reshape(B_, S, d_in)
+        new_state = None
+
+    y = y.astype(x_res.dtype) * jax.nn.silu(z)
+    y = L.rmsnorm_apply(bp["gnorm"], y, cfg.norm_eps)
+    y = L.dense_apply(bp["out_proj"], y, policy, path + "/out_proj", degree)
+    return x_res + y, new_state
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+
+def init_ssm_lm(key, cfg: ArchConfig, tp: int):
+    ks = jax.random.split(key, 3)
+    lkeys = jax.random.split(ks[0], cfg.n_layers)
+    return {
+        "embed": L.init_embedding(ks[1], cfg.padded(tp).vocab, cfg.d_model),
+        "layers": jax.vmap(lambda k: init_ssm_block(k, cfg))(lkeys),
+        "ln_f": L.init_rmsnorm(cfg.d_model),
+    }
+
+
+def ssm_forward(params, cfg: ArchConfig, policy: ApproxPolicy, batch: dict,
+                tp: int = 1, degree=None, remat: str = "dots"):
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x = L.embed_apply(params["embed"], batch["tokens"], dtype)
+
+    def body(h, lp):
+        h2, _ = ssm_block_apply(lp, h, cfg, policy, "layer", degree)
+        return h2, None
+
+    fn = body
+    if remat != "none":
+        fn = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    x, _ = jax.lax.scan(fn, x, params["layers"])
+    x = L.rmsnorm_apply(params["ln_f"], x, cfg.norm_eps)
+    logits = L.unembed_apply(params["embed"], x, policy, "unembed", degree)
+    return logits.astype(jnp.float32), jnp.zeros((), jnp.float32)
+
+
+class SSMCache(NamedTuple):
+    h: Array      # (L, B, H, P, N) f32
+    conv: Array   # (L, B, w-1, C)
+    length: Array
+
+
+def init_ssm_cache(cfg: ArchConfig, tp: int, batch: int, max_len: int,
+                   dtype=jnp.bfloat16) -> SSMCache:
+    d_in, H, P, N = _dims(cfg)
+    C = d_in + 2 * N
+    w = cfg.ssm.conv_width
+    return SSMCache(
+        h=jnp.zeros((cfg.n_layers, batch, H, P, N), jnp.float32),
+        conv=jnp.zeros((cfg.n_layers, batch, w - 1, C), dtype),
+        length=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def ssm_decode_step(params, cfg: ArchConfig, policy: ApproxPolicy,
+                    cache: SSMCache, tokens: Array, tp: int = 1, degree=None):
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x = L.embed_apply(params["embed"], tokens, dtype)
+
+    def body(h, xs):
+        lp, hc, cc = xs
+        h2, (hn, cn) = ssm_block_apply(lp, h, cfg, policy, "layer", degree,
+                                       state=(hc, cc))
+        return h2, (hn, cn)
+
+    x, (nh, nc) = jax.lax.scan(body, x, (params["layers"], cache.h, cache.conv))
+    x = L.rmsnorm_apply(params["ln_f"], x, cfg.norm_eps)
+    logits = L.unembed_apply(params["embed"], x, policy, "unembed", degree)
+    return logits.astype(jnp.float32), SSMCache(nh, nc, cache.length + 1)

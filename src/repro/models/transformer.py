@@ -1,0 +1,295 @@
+"""Decoder / encoder transformer LM, config-driven, scan-over-layers.
+
+Covers the dense, MoE, VLM (stub vision frontend) and audio (encoder-only,
+stub frame frontend) families.  Hybrid (RG-LRU) and SSM live in rglru.py /
+ssm.py.  All matmuls dispatch through the approximation layer.
+
+Head/vocab/expert padding: physical dims come from ``cfg.padded(tp)``
+(DESIGN.md §3); padded q heads are extra parameters whose outputs are simply
+summed by the out-projection (initialized like any head; harmless for the
+compile-only full configs, absent for smoke configs where tp=1).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.core.approx import ApproxPolicy
+from repro.dist import meshctx
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+
+Array = jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_block(key, cfg: ArchConfig, tp: int):
+    pd = cfg.padded(tp)
+    d = cfg.d_model
+    H, KVr, D = pd.n_heads, pd.n_kv_rep, cfg.head_dim
+    ks = jax.random.split(key, 8)
+    p = {
+        "ln1": L.init_rmsnorm(d),
+        "ln2": L.init_rmsnorm(d),
+        "wq": L.init_dense(ks[0], d, H * D, bias=cfg.qkv_bias),
+        "wk": L.init_dense(ks[1], d, cfg.n_kv_heads * D, bias=cfg.qkv_bias),
+        "wv": L.init_dense(ks[2], d, cfg.n_kv_heads * D, bias=cfg.qkv_bias),
+        "wo": L.init_dense(ks[3], H * D, d, scale=1.0 / math.sqrt(H * D)),
+    }
+    if cfg.moe:
+        p["moe"] = moe_mod.init_moe(ks[4], cfg, tp)
+    else:
+        p["mlp"] = L.init_gated_mlp(ks[4], d, cfg.d_ff)
+    return p
+
+
+def init_lm(key, cfg: ArchConfig, tp: int):
+    ks = jax.random.split(key, 4)
+    pd = cfg.padded(tp)
+    layer_keys = jax.random.split(ks[0], cfg.n_layers)
+    layers = jax.vmap(lambda k: init_block(k, cfg, tp))(layer_keys)
+    params = {
+        "embed": L.init_embedding(ks[1], pd.vocab, cfg.d_model),
+        "layers": layers,
+        "ln_f": L.init_rmsnorm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = L.init_dense(
+            ks[2], cfg.d_model, pd.vocab, scale=1.0 / math.sqrt(cfg.d_model))
+    if cfg.frontend == "vision":
+        params["v_proj"] = {
+            "fc1": L.init_dense(ks[3], cfg.frontend_dim, cfg.d_model, bias=True),
+            "fc2": L.init_dense(jax.random.fold_in(ks[3], 1), cfg.d_model,
+                                cfg.d_model, bias=True),
+        }
+    elif cfg.frontend == "audio":
+        params["a_proj"] = {
+            "fc1": L.init_dense(ks[3], cfg.frontend_dim, cfg.d_model, bias=True),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# block apply
+# ---------------------------------------------------------------------------
+
+
+def _qkv(bp, x, cfg: ArchConfig, pd, policy, path, positions, degree):
+    B, S, d = x.shape
+    H, KVr, D = pd.n_heads, pd.n_kv_rep, cfg.head_dim
+    q = L.dense_apply(bp["wq"], x, policy, path + "/wq", degree).reshape(B, S, H, D)
+    k = L.dense_apply(bp["wk"], x, policy, path + "/wk", degree).reshape(
+        B, S, cfg.n_kv_heads, D)
+    v = L.dense_apply(bp["wv"], x, policy, path + "/wv", degree).reshape(
+        B, S, cfg.n_kv_heads, D)
+    if cfg.rope_theta and cfg.causal:
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)
+    k = attn.repeat_kv(k, KVr)
+    v = attn.repeat_kv(v, KVr)
+    q = L.shard_activation(q, meshctx.bspec(None, "model", None))
+    k = L.shard_activation(k, meshctx.bspec(None, "model", None))
+    v = L.shard_activation(v, meshctx.bspec(None, "model", None))
+    return q, k, v
+
+
+def block_apply(bp, x: Array, cfg: ArchConfig, tp: int, policy: ApproxPolicy,
+                path: str, positions: Array, degree=None) -> tuple[Array, Array]:
+    """Returns (x_out, aux_loss)."""
+    pd = cfg.padded(tp)
+    h = L.rmsnorm_apply(bp["ln1"], x, cfg.norm_eps)
+    q, k, v = _qkv(bp, h, cfg, pd, policy, path, positions, degree)
+    o = attn.attn_blockwise(q, k, v, causal=cfg.causal, window=cfg.swa_window)
+    o = o.reshape(x.shape[0], x.shape[1], pd.n_heads * cfg.head_dim)
+    o = L.dense_apply(bp["wo"], o, policy, path + "/wo", degree)
+    x = x + o
+    h = L.rmsnorm_apply(bp["ln2"], x, cfg.norm_eps)
+    if cfg.moe:
+        f, aux = moe_mod.moe_apply(bp["moe"], h, cfg, policy, path + "/moe", degree)
+    else:
+        f = L.gated_mlp_apply(bp["mlp"], h, policy, path + "/mlp", cfg.act, degree)
+        aux = jnp.zeros((), jnp.float32)
+    f = L.shard_activation(f, meshctx.bspec(None, None))
+    return x + f, aux
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+
+def _sinusoidal(S: int, d: int) -> Array:
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10_000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def embed_inputs(params, cfg: ArchConfig, batch: dict, dtype, policy, degree):
+    """Token (+frontend stub) embedding.  Returns (x, positions)."""
+    if cfg.frontend == "audio":
+        # encoder-only: precomputed frame features (stub conv frontend) +
+        # absolute sinusoidal positions (stands in for HuBERT's conv pos-emb)
+        fe = batch["frame_feats"].astype(dtype)   # (B, S, frontend_dim)
+        x = L.dense_apply(params["a_proj"]["fc1"], fe, policy, "a_proj/fc1", degree)
+        x = x + _sinusoidal(x.shape[1], x.shape[2]).astype(dtype)[None]
+    else:
+        tokens = batch["tokens"]
+        x = L.embed_apply(params["embed"], tokens, dtype)
+        if cfg.frontend == "vision":
+            pe = batch["patch_embeds"].astype(dtype)  # (B, S_img, frontend_dim)
+            h = L.dense_apply(params["v_proj"]["fc1"], pe, policy, "v_proj/fc1", degree)
+            h = jax.nn.gelu(h)
+            h = L.dense_apply(params["v_proj"]["fc2"], h, policy, "v_proj/fc2", degree)
+            x = jnp.concatenate([h, x], axis=1)
+    B, S = x.shape[:2]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    return x, positions
+
+
+def lm_forward(params, cfg: ArchConfig, policy: ApproxPolicy, batch: dict,
+               tp: int = 1, degree=None, remat: str = "dots") -> tuple[Array, Array]:
+    """Returns (logits (B, S, vocab_padded), aux_loss)."""
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x, positions = embed_inputs(params, cfg, batch, dtype, policy, degree)
+    x = L.shard_activation(x, meshctx.bspec(None, None))
+
+    def body(carry, lp):
+        h, aux = carry
+        h2, a = block_apply(lp, h, cfg, tp, policy, "layer", positions, degree)
+        return (h2, aux + a), None
+
+    body_fn = body
+    if remat == "full":
+        body_fn = jax.checkpoint(body)
+    elif remat == "dots":
+        body_fn = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
+                               params["layers"])
+    x = L.rmsnorm_apply(params["ln_f"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = L.unembed_apply(params["embed"], x, policy, "unembed", degree)
+    else:
+        logits = L.dense_apply(params["unembed"], x, policy, "unembed", degree)
+        logits = logits.astype(jnp.float32)
+    logits = L.shard_activation(logits, meshctx.bspec(None, "model"))
+    return logits, aux
+
+
+def lm_loss(params, cfg: ArchConfig, policy: ApproxPolicy, batch: dict,
+            tp: int = 1, degree=None, remat: str = "dots") -> tuple[Array, dict]:
+    logits, aux = lm_forward(params, cfg, policy, batch, tp, degree, remat)
+    labels = batch["labels"]  # (B, S_text) int32, -1 = ignore
+    if cfg.frontend == "vision":
+        # logits cover [img tokens | text tokens]; loss only on text part
+        logits = logits[:, -labels.shape[1]:, :]
+    mask = (labels >= 0).astype(jnp.float32)
+    labels_c = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels_c[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    ce = -jnp.sum(ll * mask) / denom
+    loss = ce + 0.01 * aux
+    return loss, {"ce": ce, "aux": aux, "ntokens": jnp.sum(mask)}
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+class LMCache(NamedTuple):
+    k: Array       # (L, B, T, KVr, D)
+    v: Array
+    length: Array  # (B,)
+
+
+class LMCacheQ(NamedTuple):
+    """int8 cache stack (§Perf hillclimb B2)."""
+
+    k: Array       # (L, B, T, KVr, D) int8
+    v: Array
+    ks: Array      # (L, B, T, KVr) f32
+    vs: Array
+    length: Array
+
+
+def init_lm_cache(cfg: ArchConfig, tp: int, batch: int, max_len: int,
+                  dtype=jnp.bfloat16, quant: bool = False):
+    pd = cfg.padded(tp)
+    T = min(max_len, cfg.swa_window) if cfg.swa_window else max_len
+    shape = (cfg.n_layers, batch, T, pd.n_kv_rep, cfg.head_dim)
+    if quant:
+        return LMCacheQ(jnp.zeros(shape, jnp.int8), jnp.zeros(shape, jnp.int8),
+                        jnp.zeros(shape[:4], jnp.float32),
+                        jnp.zeros(shape[:4], jnp.float32),
+                        jnp.zeros((batch,), jnp.int32))
+    return LMCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                   jnp.zeros((batch,), jnp.int32))
+
+
+def lm_decode_step(params, cfg: ArchConfig, policy: ApproxPolicy, cache: LMCache,
+                   tokens: Array, tp: int = 1, degree=None) -> tuple[Array, LMCache]:
+    """tokens: (B, 1).  One decode step; returns (logits (B, 1, V), cache)."""
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    pd = cfg.padded(tp)
+    B = tokens.shape[0]
+    x = L.embed_apply(params["embed"], tokens, dtype)
+    positions = cache.length[:, None]  # (B,1)
+    quant = isinstance(cache, LMCacheQ)
+
+    def body(carry, xs):
+        h = carry
+        if quant:
+            lp, ck, cv, cks, cvs = xs
+        else:
+            lp, ck, cv = xs
+        hn = L.rmsnorm_apply(lp["ln1"], h, cfg.norm_eps)
+        q, k, v = _qkv(lp, hn, cfg, pd, policy, "layer", positions, degree)
+        if quant:
+            lc = attn.QuantKVCache(ck, cv, cks, cvs, cache.length)
+            o, lc2 = attn.decode_attn_quant(q, k, v, lc, window=cfg.swa_window)
+            new = (lc2.k, lc2.v, lc2.ks, lc2.vs)
+        else:
+            lc = attn.KVCache(ck, cv, cache.length)
+            o, lc2 = attn.decode_attn(q, k, v, lc, window=cfg.swa_window)
+            new = (lc2.k, lc2.v)
+        o = o.reshape(B, 1, pd.n_heads * cfg.head_dim)
+        o = L.dense_apply(lp["wo"], o, policy, "layer/wo", degree)
+        h = h + o
+        hn = L.rmsnorm_apply(lp["ln2"], h, cfg.norm_eps)
+        if cfg.moe:
+            f, _ = moe_mod.moe_apply(lp["moe"], hn, cfg, policy, "layer/moe", degree)
+        else:
+            f = L.gated_mlp_apply(lp["mlp"], hn, policy, "layer/mlp", cfg.act, degree)
+        return h + f, new
+
+    if quant:
+        x, (nk, nv, nks, nvs) = jax.lax.scan(
+            body, x, (params["layers"], cache.k, cache.v, cache.ks, cache.vs))
+        new_cache = LMCacheQ(nk, nv, nks, nvs, cache.length + 1)
+    else:
+        x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], cache.k, cache.v))
+        new_cache = LMCache(nk, nv, cache.length + 1)
+    x = L.rmsnorm_apply(params["ln_f"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = L.unembed_apply(params["embed"], x, policy, "unembed", degree)
+    else:
+        logits = L.dense_apply(params["unembed"], x, policy, "unembed", degree)
+    return logits.astype(jnp.float32), new_cache

@@ -1,0 +1,128 @@
+"""Batched serving engine: continuous batching over a fixed-slot decode batch.
+
+Requests enter a queue; free slots are (re)filled by prefilling the prompt
+into that slot's cache region; every engine tick runs one fused serve_step
+for all slots.  Slots whose sequence hit EOS/max-len are returned and freed.
+
+This is the (b)-deliverable serving driver; serve_step itself is the unit the
+decode dry-run cells lower at production shapes.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.registry import Model
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (P,) int32
+    max_new_tokens: int = 32
+    out_tokens: list = field(default_factory=list)
+    done: bool = False
+    t_enqueue: float = 0.0
+    t_first_token: float = 0.0
+    t_done: float = 0.0
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, *, slots: int = 8,
+                 max_len: int = 512, eos_id: int = -1, tp: int = 1,
+                 greedy: bool = True):
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.tp = tp
+        self.greedy = greedy
+        self.cache = model.init_cache(tp=tp, batch=slots, max_len=max_len)
+        self.slot_req: list[Optional[Request]] = [None] * slots
+        self.slot_budget = np.zeros(slots, np.int32)
+        self.queue: list[Request] = []
+        self.done: list[Request] = []
+        self._tokens = np.zeros((slots, 1), np.int32)
+        self._decode = jax.jit(
+            lambda p, c, t: model.decode_step(p, c, t, tp=tp))
+
+    # ------------------------------------------------------------------
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> Request:
+        req = Request(rid=len(self.queue) + len(self.done),
+                      prompt=np.asarray(prompt, np.int32),
+                      max_new_tokens=max_new_tokens,
+                      t_enqueue=time.time())
+        self.queue.append(req)
+        return req
+
+    @staticmethod
+    def _merge_slot(old_cache, new_cache, slot: int):
+        """Keep `new_cache` state for `slot` only; other slots keep `old`.
+        Cache NamedTuples put batch at dim 0 for `length`, dim 1 otherwise."""
+        fields = old_cache._fields
+        merged = []
+        for name in fields:
+            o, n = getattr(old_cache, name), getattr(new_cache, name)
+            if name == "length":
+                merged.append(o.at[slot].set(n[slot]))
+            else:
+                merged.append(o.at[:, slot].set(n[:, slot]))
+        return type(old_cache)(*merged)
+
+    def _fill_slot(self, slot: int, req: Request):
+        """Prefill by teacher-forcing the prompt through decode steps, then
+        restore every other slot's cache region (slot isolation) — a
+        production engine would run a fused prefill kernel into the slot."""
+        self.slot_req[slot] = req
+        self.slot_budget[slot] = req.max_new_tokens
+        snapshot = self.cache
+        cache = self.cache
+        for t in req.prompt[:-1]:
+            toks = self._tokens.copy()
+            toks[slot, 0] = t
+            _, cache = self._decode(self.params, cache, jnp.asarray(toks))
+        self.cache = self._merge_slot(snapshot, cache, slot)
+        self._tokens[slot, 0] = int(req.prompt[-1])
+
+    def tick(self) -> int:
+        """One engine iteration; returns number of active slots."""
+        # admit
+        for s in range(self.slots):
+            if self.slot_req[s] is None and self.queue:
+                self._fill_slot(s, self.queue.pop(0))
+        active = [s for s in range(self.slots) if self.slot_req[s] is not None]
+        if not active:
+            return 0
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          jnp.asarray(self._tokens))
+        nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1), np.int32)
+        for s in active:
+            req = self.slot_req[s]
+            tok = int(nxt[s])
+            if not req.out_tokens:
+                req.t_first_token = time.time()
+            req.out_tokens.append(tok)
+            self._tokens[s, 0] = tok
+            self.slot_budget[s] -= 1
+            if tok == self.eos_id or self.slot_budget[s] <= 0:
+                req.done = True
+                req.t_done = time.time()
+                self.done.append(req)
+                self.slot_req[s] = None
+        return len(active)
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> list[Request]:
+        ticks = 0
+        while (self.queue or any(r is not None for r in self.slot_req)) \
+                and ticks < max_ticks:
+            self.tick()
+            ticks += 1
+        return self.done

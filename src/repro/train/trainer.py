@@ -1,0 +1,161 @@
+"""Trainer loop: checkpoint/restart, preemption handling, straggler watchdog,
+and runtime approximation (QoS) control — the fault-tolerance layer the
+multi-pod deployment contract requires (DESIGN.md §3).
+
+Single-process here; the multi-host contract is documented per hook:
+  * checkpoint saves are mesh-agnostic -> elastic restart (dist/elastic.py);
+  * SIGTERM/SIGINT -> synchronous checkpoint then clean exit (preemption);
+  * the step-time watchdog flags stragglers (per-host EMA vs median across
+    hosts arrives via the launcher's heartbeat file in multi-host runs);
+  * the QoS controller moves the DyFXU degree (traced scalar — no recompile)
+    to hold quality within budget while harvesting approximation gains.
+"""
+
+from __future__ import annotations
+
+import signal
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.core.dynamic import QoSController
+from repro.data.pipeline import SyntheticPipeline
+from repro.models.registry import Model
+from repro.train import step as step_mod
+
+
+@dataclass
+class StragglerWatchdog:
+    """Flags steps slower than k x the trailing median (on a real cluster the
+    launcher compares per-host EMAs; here we monitor the local step time and
+    expose the same interface)."""
+
+    factor: float = 2.0
+    window: int = 50
+    times: list = field(default_factory=list)
+    flagged: list = field(default_factory=list)
+
+    def observe(self, step: int, dt: float) -> bool:
+        self.times.append(dt)
+        if len(self.times) > self.window:
+            self.times.pop(0)
+        med = float(np.median(self.times))
+        slow = len(self.times) >= 10 and dt > self.factor * med
+        if slow:
+            self.flagged.append((step, dt, med))
+        return slow
+
+
+@dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: str = "checkpoints"
+    keep: int = 3
+    log_every: int = 10
+    async_ckpt: bool = True
+    # QoS-driven dynamic approximation (None = static degree)
+    qos: Optional[QoSController] = None
+    qos_every: int = 20
+
+
+class Trainer:
+    def __init__(self, model: Model, scfg: step_mod.StepConfig,
+                 tcfg: TrainerConfig, pipeline: SyntheticPipeline,
+                 tp: int = 1):
+        self.model = model
+        self.scfg = scfg
+        self.tcfg = tcfg
+        self.pipeline = pipeline
+        self.tp = tp
+        self.ckpt = Checkpointer(tcfg.ckpt_dir, keep=tcfg.keep)
+        self.watchdog = StragglerWatchdog()
+        self._preempted = False
+        self._step_fn = jax.jit(
+            lambda state, batch, degree: step_mod.train_step(
+                model, scfg, state, batch, tp=tp, degree=degree),
+            donate_argnums=(0,))
+        self.history: list[dict] = []
+
+    # ------------------------------------------------------------------
+
+    def _install_signal_handlers(self):
+        def handler(signum, frame):
+            self._preempted = True
+
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            try:
+                signal.signal(sig, handler)
+            except ValueError:
+                pass  # non-main thread (tests)
+
+    def init_or_restore(self, key) -> tuple[step_mod.TrainState, int]:
+        state = step_mod.init_state(self.model, key, tp=self.tp)
+        got = None
+        try:
+            like = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+            got = self.ckpt.restore_latest(like)
+        except Exception:
+            got = None
+        if got is None:
+            return state, 0
+        step, tree, extra = got
+        tree = jax.tree.map(jnp.asarray, tree)
+        print(f"[trainer] restored checkpoint at step {step}")
+        return step_mod.TrainState(*tree), step
+
+    def run(self, key=None) -> dict:
+        self._install_signal_handlers()
+        key = key if key is not None else jax.random.PRNGKey(0)
+        state, start = self.init_or_restore(key)
+        degree_kwargs = (self.tcfg.qos.ladder[self.tcfg.qos.degree]
+                         if self.tcfg.qos else {"ebits": 8})
+        degree = jnp.asarray(degree_kwargs.get("ebits", 8), jnp.int32)
+        t_last_loss = None
+        step = start
+        while step < self.tcfg.total_steps:
+            batch = {k: jnp.asarray(v)
+                     for k, v in self.pipeline.batch_at(step).items()}
+            t0 = time.time()
+            state, metrics = self._step_fn(state, batch, degree)
+            loss = float(metrics["loss"])
+            dt = time.time() - t0
+            slow = self.watchdog.observe(step, dt)
+            rec = {"step": step, "loss": loss, "time_s": dt,
+                   "grad_norm": float(metrics["grad_norm"]),
+                   "degree": int(degree), "straggler": slow}
+            self.history.append(rec)
+            if step % self.tcfg.log_every == 0:
+                print(f"[trainer] step {step} loss {loss:.4f} "
+                      f"({dt*1e3:.0f} ms){' STRAGGLER' if slow else ''}")
+            # QoS: quality signal = loss improvement rate (negative delta)
+            if self.tcfg.qos and step % self.tcfg.qos_every == 0 and step > start:
+                signal_q = (t_last_loss - loss) if t_last_loss is not None else 0.0
+                kw = self.tcfg.qos.update(step, signal_q)
+                degree = jnp.asarray(kw.get("ebits", 8), jnp.int32)
+                t_last_loss = loss
+            elif t_last_loss is None:
+                t_last_loss = loss
+            step += 1
+            if step % self.tcfg.ckpt_every == 0 or self._preempted:
+                self.ckpt.save(
+                    step, state,
+                    extra={"data_step": step, "degree": int(degree)},
+                    blocking=self._preempted or not self.tcfg.async_ckpt)
+                if self._preempted:
+                    print(f"[trainer] preempted: checkpointed at {step}, exiting")
+                    break
+        self.ckpt.wait()
+        if not self._preempted and (step % self.tcfg.ckpt_every):
+            self.ckpt.save(step, state,
+                           extra={"data_step": step, "degree": int(degree)},
+                           blocking=True)
+        return {"final_step": step, "history": self.history,
+                "preempted": self._preempted,
+                "stragglers": self.watchdog.flagged}

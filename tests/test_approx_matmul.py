@@ -1,0 +1,54 @@
+"""The model-layer dispatch: every mode runs and degrades gracefully."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.approx import ApproxMode, ApproxSpec
+from repro.kernels.ops import approx_matmul
+
+K = jax.random.PRNGKey(0)
+X = jax.random.normal(K, (32, 256), jnp.float32)
+W = jax.random.normal(jax.random.fold_in(K, 1), (256, 64), jnp.float32)
+EXACT = np.asarray(X @ W)
+
+
+def rel(y):
+    return float(np.abs(np.asarray(y) - EXACT).mean() / np.abs(EXACT).mean())
+
+
+def test_exact_mode():
+    y = approx_matmul(X, W, ApproxSpec(mode=ApproxMode.EXACT))
+    assert rel(y) < 1e-6
+
+
+@pytest.mark.parametrize("mode,kw,band", [
+    (ApproxMode.AXQ, dict(ebits=8, block=256), 0.03),
+    (ApproxMode.AXQ, dict(ebits=5, block=256), 0.25),
+    (ApproxMode.PR_EMUL, dict(p=1, r=2, lane_bits=8), 0.2),
+    (ApproxMode.RAD_EMUL, dict(k=4, lane_bits=8), 0.2),
+    (ApproxMode.ROUP_EMUL, dict(k=4, p=0, r=1, lane_bits=8), 0.3),
+    (ApproxMode.POW2_W, dict(), 0.35),
+])
+def test_modes_bounded_error(mode, kw, band):
+    y = approx_matmul(X, W, ApproxSpec(mode=mode, **kw))
+    r = rel(y)
+    assert 0 < r < band, (mode, r)
+
+
+def test_policy_path_dispatch():
+    from repro.core.approx import ApproxPolicy
+
+    pol = ApproxPolicy(rules=[(r".*mlp.*", ApproxSpec(mode=ApproxMode.AXQ, ebits=6))])
+    assert pol.spec_for("layer/mlp/up").mode == ApproxMode.AXQ
+    assert pol.spec_for("layer/wq").mode == ApproxMode.EXACT
+    pol2 = pol.with_degree(ebits=4)
+    assert pol2.spec_for("layer/mlp/up").ebits == 4
+
+
+def test_dynamic_degree_is_runtime():
+    spec = ApproxSpec(mode=ApproxMode.AXQ, dynamic=True, block=256)
+    f = jax.jit(lambda x, w, d: approx_matmul(x, w, spec, degree=d))
+    y8 = f(X, W, jnp.int32(8))
+    y4 = f(X, W, jnp.int32(4))
+    assert rel(y8) < rel(y4)

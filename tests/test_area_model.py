@@ -1,0 +1,25 @@
+"""The unit-gate model must reproduce the dissertation's Table 3.3."""
+from repro.core import area_model
+
+
+def test_table_3_3_dlsb_overheads():
+    t = area_model.dlsb_overhead_table()
+    paper = {8: (11.8, 1.4), 16: (6.7, 0.8), 32: (3.7, 0.5)}
+    for n, (d1, d2) in paper.items():
+        assert abs(t[n][0] - d1) < 0.15, (n, t[n])
+        assert abs(t[n][1] - d2) < 0.15, (n, t[n])
+
+
+def test_approximate_families_cheaper_than_exact():
+    n = 16
+    base = area_model.area_cmb(n)
+    assert area_model.area_rad(n, 8) < base
+    assert area_model.area_pr(n, 2, 4) < base
+    assert area_model.area_roup(n, 8, 1, 4) < area_model.area_rad(n, 8)
+
+
+def test_deeper_approximation_is_smaller():
+    n = 16
+    assert area_model.area_pr(n, 2, 0) < area_model.area_pr(n, 1, 0)
+    assert area_model.area_rad(n, 10) < area_model.area_rad(n, 6)
+    assert area_model.energy_proxy("PR", n, p=2) < area_model.energy_proxy("CMB", n)

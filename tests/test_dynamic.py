@@ -1,0 +1,29 @@
+from repro.core.dynamic import QoSController
+
+
+def _ladder():
+    return [{"ebits": 8}, {"ebits": 7}, {"ebits": 6}, {"ebits": 5}]
+
+
+def test_increases_approximation_when_quality_headroom():
+    c = QoSController(ladder=_ladder(), low_water=0.0, high_water=0.5,
+                      cooldown_steps=0, ema_alpha=1.0)
+    for s in range(5):
+        kw = c.update(s, -0.1)  # quality signal below low water
+    assert c.degree == 3 and kw == {"ebits": 5}
+
+
+def test_backs_off_on_violation():
+    c = QoSController(ladder=_ladder(), low_water=0.0, high_water=0.5,
+                      cooldown_steps=0, ema_alpha=1.0, degree=3)
+    c.update(0, 0.9)
+    assert c.degree == 2
+
+
+def test_cooldown_prevents_thrash():
+    c = QoSController(ladder=_ladder(), low_water=0.0, high_water=0.5,
+                      cooldown_steps=10, ema_alpha=1.0)
+    c.update(0, -1.0)
+    d1 = c.degree
+    c.update(1, -1.0)
+    assert c.degree == d1  # cooling down

@@ -1,0 +1,23 @@
+from repro.dist.elastic import plan_rescale
+
+
+def test_full_pod():
+    p = plan_rescale(256, target_global_batch=256, tp=16)
+    assert p.mesh_shape == (16, 16) and p.grad_accum == 1
+    assert p.effective_batch == 256
+
+
+def test_lost_nodes_grow_accum():
+    p = plan_rescale(128, target_global_batch=256, tp=16)
+    assert p.model == 16 and p.data == 8
+    assert p.per_step_batch * p.grad_accum >= 256
+
+
+def test_multi_pod():
+    p = plan_rescale(512, target_global_batch=256, tp=16, devices_per_pod=256)
+    assert p.pods == 2 and p.mesh_axes == ("pod", "data", "model")
+
+
+def test_tiny_survivor_degrades_tp():
+    p = plan_rescale(8, target_global_batch=64, tp=16)
+    assert p.model == 8 and p.n_devices == 8

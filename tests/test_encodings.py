@@ -1,0 +1,91 @@
+"""Bit-exact validation of the paper's encodings (Ch. 3-5 definitions)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import encodings as enc
+
+
+def signed_range(n):
+    return jnp.arange(-(1 << (n - 1)), 1 << (n - 1), dtype=jnp.int32)
+
+
+@pytest.mark.parametrize("n", [4, 8, 10, 16])
+def test_booth_recombination_identity(n):
+    if n == 16:
+        v = jnp.asarray(np.random.default_rng(0).integers(-2**15, 2**15, 4096), jnp.int32)
+    else:
+        v = signed_range(n)
+    assert (enc.recombine_radix4(enc.booth_digits(v, n)) == v).all()
+
+
+def test_dlsb_equivalence_exhaustive_8bit():
+    n = 8
+    v = signed_range(n)
+    a, b = jnp.meshgrid(v, v, indexing="ij")
+    for ap in (0, 1):
+        for bp in (0, 1):
+            apv, bpv = jnp.full_like(a, ap), jnp.full_like(b, bp)
+            ref = (a + ap) * (b + bp)
+            assert (enc.mult_dlsb_straightforward(a, apv, b, bpv, n) == ref).all()
+            assert (enc.mult_dlsb_sophisticated(a, apv, b, bpv, n) == ref).all()
+
+
+@given(st.integers(-2**15, 2**15 - 1), st.integers(-2**15, 2**15 - 1),
+       st.integers(0, 1), st.integers(0, 1))
+@settings(max_examples=200, deadline=None)
+def test_dlsb_equivalence_property_16bit(a, b, ap, bp):
+    aj = jnp.asarray([a], jnp.int32)
+    bj = jnp.asarray([b], jnp.int32)
+    apv, bpv = jnp.asarray([ap], jnp.int32), jnp.asarray([bp], jnp.int32)
+    ref = (a + ap) * (b + bp)
+    assert int(enc.mult_dlsb_sophisticated(aj, apv, bj, bpv, 16)[0]) == ref
+
+
+@pytest.mark.parametrize("p", [1, 2, 3, 4])
+def test_perforation_equals_digit_drop(p):
+    n = 10
+    v = signed_range(n)
+    d = enc.booth_digits(v, n).at[..., :p].set(0)
+    assert (enc.perforate_operand(v, n, p) == enc.recombine_radix4(d)).all()
+
+
+def test_perforation_rounding_identity_at_zero_degree():
+    v = signed_range(8)
+    assert (enc.perforate_operand(v, 8, 0) == v).all()
+    assert (enc.round_operand(v, 0) == v).all()
+
+
+@given(st.integers(-2**15, 2**15 - 1), st.integers(1, 8))
+@settings(max_examples=200, deadline=None)
+def test_rounding_is_nearest_multiple(a, r):
+    got = int(enc.round_operand(jnp.asarray([a], jnp.int32), r)[0])
+    assert got % (1 << r) == 0
+    assert abs(got - a) <= (1 << (r - 1))
+
+
+@pytest.mark.parametrize("k", [4, 6, 8])
+def test_rad_digit_set(k):
+    """Approximate high-radix digit lands in {0, +-2^(k-4..k-1)} (Table 4.2)."""
+    n = 16
+    v = jnp.asarray(np.random.default_rng(1).integers(-2**15, 2**15, 8192), jnp.int32)
+    y0 = enc.highradix_digit(v, n, k)
+    y0h = enc.approx_highradix_digit(y0, k)
+    allowed = {0} | {s * (1 << e) for s in (1, -1) for e in range(k - 4, k)}
+    assert set(np.unique(np.asarray(y0h))).issubset(allowed)
+
+
+def test_rad_jnp_matches_numpy_mirror():
+    n, k = 16, 8
+    v = np.random.default_rng(2).integers(-2**15, 2**15, 8192)
+    got = np.asarray(enc.rad_encode(jnp.asarray(v, jnp.int32), n, k))
+    ref = enc.np_rad_encode(v, n, k)
+    assert (got == ref).all()
+
+
+def test_pow2_snap():
+    x = jnp.asarray([0.0, 0.7, 1.0, 3.0, -5.0, 100.0])
+    y = np.asarray(enc.pow2_snap(x))
+    for v in y[np.nonzero(y)]:
+        assert np.log2(abs(v)) == round(np.log2(abs(v)))

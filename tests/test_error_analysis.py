@@ -1,0 +1,19 @@
+import numpy as np
+
+from repro.core import error_analysis as ea
+
+
+def test_exact_multiplier_reports_zero():
+    rep = ea.evaluate_exhaustive(lambda a, b: a * b, 6)
+    assert rep.mred == 0 and rep.error_rate == 0 and rep.pred2 == 1.0
+
+
+def test_constant_bias_detected():
+    rep = ea.evaluate_sampled(lambda a, b: a * b + 100, 8, num=4096)
+    assert rep.error_rate == 1.0 and rep.mean_err > 0
+
+
+def test_pred2_semantics():
+    rep = ea.evaluate_sampled(lambda a, b: (a * b * 1.01).astype(np.int64),
+                              8, num=4096)
+    assert rep.pred2 > 0.95  # 1% error is within 2% threshold

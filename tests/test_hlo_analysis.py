@@ -1,0 +1,36 @@
+import jax
+import jax.numpy as jnp
+
+from repro.dist.hlo_analysis import analyze_hlo, shape_bytes
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[4,4]") == 64
+    assert shape_bytes("bf16[2,3]{1,0}") == 12
+    assert shape_bytes("(f32[2], s8[8])") == 16
+
+
+def test_scan_trip_count_multiplies_flops():
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=22)
+        return y
+
+    x = jnp.ones((128, 128))
+    w = jnp.ones((128, 128))
+    txt = jax.jit(f).lower(x, w).compile().as_text()
+    rep = analyze_hlo(txt)
+    assert rep.dot_flops == 2 * 128 * 128 * 128 * 22
+
+
+def test_collective_detection_synthetic():
+    hlo = """
+HloModule m
+ENTRY %main (a: f32[16]) -> f32[16] {
+  %a = f32[16] parameter(0)
+  ROOT %ar = f32[16]{0} all-reduce(%a), replica_groups={}, to_apply=%add
+}
+"""
+    rep = analyze_hlo(hlo)
+    assert rep.collectives.bytes_by_kind["all-reduce"] == 64

@@ -1,0 +1,82 @@
+"""Per-kernel shape/dtype/degree sweeps vs pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.axmult_elem import pr_multiply
+from repro.kernels.axqmm import axqmm
+
+
+@pytest.mark.parametrize("shape", [(128, 512, 128), (256, 1024, 384),
+                                   (64, 512, 256)])
+@pytest.mark.parametrize("e", [8, 5])
+def test_axqmm_matches_ref(shape, e):
+    M, K, N = shape
+    k = jax.random.PRNGKey(M + K + N + e)
+    x = jax.random.normal(k, (M, K), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(k, 1), (K, N), jnp.float32)
+    y = axqmm(x, w, block=512, ebits=e)
+    yr = ref.axqmm_ref(x, w, block=512 if K % 512 == 0 else 256, ebits=e)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-5,
+                               atol=1e-4)
+
+
+def test_axqmm_dynamic_degree_single_executable():
+    k = jax.random.PRNGKey(0)
+    x = jax.random.normal(k, (128, 512), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(k, 1), (512, 128), jnp.float32)
+    f = jax.jit(lambda x, w, e: axqmm(x, w, ebits=e))
+    y8, y4 = f(x, w, jnp.int32(8)), f(x, w, jnp.int32(4))
+    exact = x @ w
+    assert float(jnp.abs(y8 - exact).mean()) < float(jnp.abs(y4 - exact).mean())
+
+
+@pytest.mark.parametrize("p,r", [(0, 0), (1, 2), (2, 4), (4, 8)])
+def test_pr_multiply_kernel_bit_exact(p, r):
+    rng = np.random.default_rng(p * 10 + r)
+    a = jnp.asarray(rng.integers(-2**15, 2**15, 4096), jnp.int32)
+    b = jnp.asarray(rng.integers(-2**15, 2**15, 4096), jnp.int32)
+    y = pr_multiply(a, b, p, r, n=16)
+    yr = ref.pr_multiply_ref(a, b, p, r, n=16)
+    assert (np.asarray(y) == np.asarray(yr)).all()
+
+
+@given(st.integers(0, 4), st.integers(0, 8))
+@settings(max_examples=12, deadline=None)
+def test_pr_multiply_kernel_property(p, r):
+    rng = np.random.default_rng(42)
+    a = jnp.asarray(rng.integers(-2**15, 2**15, 2048), jnp.int32)
+    b = jnp.asarray(rng.integers(-2**15, 2**15, 2048), jnp.int32)
+    y = pr_multiply(a, b, p, r, n=16)
+    yr = ref.pr_multiply_ref(a, b, p, r, n=16)
+    assert (np.asarray(y) == np.asarray(yr)).all()
+
+
+@pytest.mark.parametrize("shape", [(4, 256, 64), (2, 512, 128)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_matches_ref(shape, causal):
+    from repro.kernels.flash_attention import flash_attention, flash_attention_ref
+
+    BH, S, D = shape
+    k = jax.random.PRNGKey(S + D)
+    q = jax.random.normal(k, (BH, S, D), jnp.float32)
+    kk = jax.random.normal(jax.random.fold_in(k, 1), (BH, S, D), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(k, 2), (BH, S, D), jnp.float32)
+    y = flash_attention(q, kk, v, causal=causal, bq=128, bk=128)
+    yr = flash_attention_ref(q, kk, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=3e-5)
+
+
+def test_flash_attention_odd_blocks():
+    from repro.kernels.flash_attention import flash_attention, flash_attention_ref
+
+    k = jax.random.PRNGKey(7)
+    q = jax.random.normal(k, (2, 192, 64), jnp.float32)   # S not /128 -> bq 64
+    kk = jax.random.normal(jax.random.fold_in(k, 1), (2, 192, 64), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(k, 2), (2, 192, 64), jnp.float32)
+    y = flash_attention(q, kk, v, causal=True)
+    yr = flash_attention_ref(q, kk, v, causal=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=3e-5)

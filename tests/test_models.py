@@ -1,0 +1,167 @@
+"""Per-arch smoke tests: reduced config, one forward + one train step on CPU,
+output shapes + finite values (assignment requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_configs
+from repro.models import build_model, concrete_batch
+from repro.train import step as step_mod
+
+ARCHS = [
+    "qwen2-moe-a2.7b", "granite-moe-3b-a800m", "mistral-nemo-12b",
+    "h2o-danube-1.8b", "qwen2.5-3b", "tinyllama-1.1b", "recurrentgemma-2b",
+    "internvl2-1b", "hubert-xlarge", "mamba2-370m",
+]
+
+
+def test_all_archs_registered():
+    assert set(ARCHS) == set(list_configs())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_config(arch + "-smoke")
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0), tp=1)
+    batch = concrete_batch(cfg, seq=32, batch=2)
+    logits, aux = jax.jit(lambda p, b: m.forward(p, b, remat="none"))(params, batch)
+    S_out = 32
+    assert logits.shape[0] == 2 and logits.shape[1] == S_out
+    assert bool(jnp.isfinite(logits).all())
+    state = step_mod.init_state(m, jax.random.PRNGKey(1))
+    scfg = step_mod.StepConfig(remat="none", total_steps=10, warmup=2)
+    state2, metrics = jax.jit(
+        lambda s, b: step_mod.train_step(m, scfg, s, b))(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert 3.0 < float(metrics["loss"]) < 10.0
+    # params actually changed
+    d0 = jax.tree_util.tree_leaves(state.params)[0]
+    d1 = jax.tree_util.tree_leaves(state2.params)[0]
+    assert not np.allclose(np.asarray(d0), np.asarray(d1))
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "recurrentgemma-2b",
+                                  "mamba2-370m"])
+def test_decode_matches_forward(arch):
+    cfg = get_config(arch + "-smoke")
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0), tp=1)
+    batch = concrete_batch(cfg, seq=8, batch=2)
+    full, _ = jax.jit(lambda p, b: m.forward(p, b, remat="none"))(params, batch)
+    cache = m.init_cache(tp=1, batch=2, max_len=16)
+    step = jax.jit(lambda p, c, t: m.decode_step(p, c, t))
+    outs = []
+    for t in range(8):
+        lg, cache = step(params, cache, batch["tokens"][:, t:t + 1])
+        outs.append(np.asarray(lg[:, 0]))
+    dec = np.stack(outs, 1)
+    ref = np.asarray(full)[:, :, :dec.shape[-1]]
+    np.testing.assert_allclose(dec, ref, atol=0.35, rtol=0.1)
+
+
+def test_swa_masks_distant_tokens():
+    """Danube's sliding window: logits at position t must not depend on
+    tokens further back than the window."""
+    cfg = get_config("h2o-danube-1.8b-smoke")  # swa_window=32
+    import dataclasses
+
+    cfg = dataclasses.replace(cfg, swa_window=4)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0), tp=1)
+    b1 = concrete_batch(cfg, seq=16, batch=1)
+    b2 = {k: v.copy() for k, v in b1.items()}
+    b2["tokens"] = b2["tokens"].at[0, 0].set((b2["tokens"][0, 0] + 7) % cfg.vocab)
+    f = jax.jit(lambda p, b: m.forward(p, b, remat="none")[0])
+    l1, l2 = f(params, b1), f(params, b2)
+    # position 15 is > window away from position 0 -> unchanged
+    np.testing.assert_allclose(np.asarray(l1[0, 15]), np.asarray(l2[0, 15]),
+                               atol=1e-3)
+    assert not np.allclose(np.asarray(l1[0, 1]), np.asarray(l2[0, 1]), atol=1e-3)
+
+
+def test_blockwise_attention_matches_full():
+    from repro.models import attention as attn
+
+    k = jax.random.PRNGKey(0)
+    B, S, H, KV, D = 2, 256, 4, 2, 16
+    q = jax.random.normal(k, (B, S, H, D), jnp.float32)
+    kk = jax.random.normal(jax.random.fold_in(k, 1), (B, S, KV, D), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(k, 2), (B, S, KV, D), jnp.float32)
+    full = attn.attn_full(q, kk, v, causal=True)
+    blk = attn.attn_blockwise(q, kk, v, causal=True, q_block=64, kv_block=64)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(blk), atol=2e-5)
+    # windowed path
+    fullw = attn.attn_full(q, kk, v, causal=True, window=64)
+    blkw = attn.attn_blockwise(q, kk, v, causal=True, window=64,
+                               q_block=64, kv_block=64)
+    np.testing.assert_allclose(np.asarray(fullw), np.asarray(blkw), atol=2e-5)
+
+
+def test_quantized_kv_cache_decode():
+    """§Perf B2 feature: int8 cache decode stays close to bf16-cache decode."""
+    cfg = get_config("tinyllama-1.1b-smoke")
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0), tp=1)
+    batch = concrete_batch(cfg, seq=8, batch=2)
+    step = jax.jit(lambda p, c, t: m.decode_step(p, c, t))
+    caches = {
+        "bf16": m.init_cache(tp=1, batch=2, max_len=16, quant=False),
+        "int8": m.init_cache(tp=1, batch=2, max_len=16, quant=True),
+    }
+    outs = {}
+    for name, cache in caches.items():
+        o = []
+        for t in range(8):
+            lg, cache = step(params, cache, batch["tokens"][:, t:t + 1])
+            o.append(np.asarray(lg[:, 0]))
+        outs[name] = np.stack(o, 1)
+    diff = np.abs(outs["bf16"] - outs["int8"]).max()
+    assert diff < 0.5, diff
+
+
+def test_moe_int8_experts_train(monkeypatch):
+    """§Perf C1 feature: int8 expert path (STE backward) still learns."""
+    import importlib
+
+    import repro.models.moe as moe_mod
+
+    monkeypatch.setenv("REPRO_MOE_INT8", "1")
+    importlib.reload(moe_mod)
+    try:
+        cfg = get_config("qwen2-moe-a2.7b-smoke")
+        m = build_model(cfg)
+        state = step_mod.init_state(m, jax.random.PRNGKey(0))
+        scfg = step_mod.StepConfig(remat="none", total_steps=40, warmup=2)
+        batch = concrete_batch(cfg, seq=16, batch=2)
+        f = jax.jit(lambda s, b: step_mod.train_step(m, scfg, s, b))
+        losses = []
+        for _ in range(25):
+            state, metrics = f(state, batch)
+            losses.append(float(metrics["loss"]))
+        assert losses[-1] < losses[0] - 0.4, (losses[0], losses[-1])
+    finally:
+        monkeypatch.delenv("REPRO_MOE_INT8")
+        importlib.reload(moe_mod)
+
+
+def test_bwd_bf16_matmul_grads_close():
+    """§Perf A1 feature: bf16-reduction matmul grads ~ exact grads."""
+    from repro.kernels.ops import _matmul_bf16_bwd
+
+    k = jax.random.PRNGKey(0)
+    x = jax.random.normal(k, (16, 64), jnp.bfloat16)
+    w = jax.random.normal(jax.random.fold_in(k, 1), (64, 32), jnp.float32)
+
+    def f_ref(x, w):
+        return jnp.sum(jnp.matmul(x, w.astype(x.dtype),
+                                  preferred_element_type=jnp.float32) ** 2)
+
+    def f_ax(x, w):
+        return jnp.sum(_matmul_bf16_bwd(x, w).astype(jnp.float32) ** 2)
+
+    g_ref = jax.grad(f_ref, argnums=1)(x, w)
+    g_ax = jax.grad(f_ax, argnums=1)(x, w)
+    rel = float(jnp.abs(g_ax - g_ref).max() / jnp.abs(g_ref).max())
+    assert rel < 0.05, rel

@@ -1,0 +1,22 @@
+from repro.core import pareto
+
+
+def test_front_extraction():
+    pts = pareto.explore(n=12, num_samples=1 << 12)
+    front = pareto.front(pts)
+    assert len(front) >= 5
+    # exact design always on the front (mred 0)
+    assert any(p.fam == "CMB" for p in front)
+    # fronts are sorted & monotone: lower error => higher energy
+    for a, b in zip(front, front[1:]):
+        assert a.mred <= b.mred
+        assert a.energy >= b.energy
+
+
+def test_best_under_error_budget():
+    pts = pareto.explore(n=12, num_samples=1 << 12)
+    sel = pareto.best_under_error(pts, 0.02)
+    assert sel is not None and sel.mred <= 0.02
+    # paper's rule: picks strictly cheaper than the exact baseline
+    base = [p for p in pts if p.fam == "CMB"][0]
+    assert sel.energy < base.energy

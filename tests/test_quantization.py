@@ -1,0 +1,44 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantization as q
+
+
+def test_quant_dequant_roundtrip_error():
+    x = np.random.default_rng(0).standard_normal((8, 512)).astype(np.float32)
+    qt = q.quantize_block(jnp.asarray(x), block=256)
+    back = np.asarray(q.dequantize(qt))
+    assert np.abs(back - x).max() <= np.abs(x).max() / 127 * 1.01
+
+
+@pytest.mark.parametrize("e", [8, 7, 6, 5, 4])
+def test_degrade_keeps_int8_range_and_monotone_error(e):
+    v = jnp.arange(-127, 128, dtype=jnp.int8)
+    d = q.degrade(v, e)
+    assert int(jnp.abs(d.astype(jnp.int32)).max()) <= 127
+    if e == 8:
+        assert (d == v).all()
+
+
+def test_qmm_ref_error_monotone_in_ebits():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((32, 512)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((512, 64)), jnp.float32)
+    exact = x @ w
+    errs = []
+    for e in (8, 6, 4):
+        y = q.qmm_ref(x, w, block=256, ebits=e)
+        errs.append(float(jnp.abs(y - exact).mean()))
+    assert errs[0] < errs[1] < errs[2]
+
+
+@given(st.integers(2, 8))
+@settings(max_examples=20, deadline=None)
+def test_degrade_multiple_of_step(e):
+    v = jnp.arange(-127, 128, dtype=jnp.int8)
+    d = np.asarray(q.degrade(v, e), np.int32)
+    step = 1 << (8 - e)
+    inner = d[np.abs(d) < 127]  # saturated lanes exempt
+    assert (inner % step == 0).all()

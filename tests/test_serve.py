@@ -1,0 +1,39 @@
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve.engine import ServeEngine
+
+
+def _setup():
+    cfg = get_config("tinyllama-1.1b-smoke")
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0), tp=1)
+    return m, params
+
+
+def test_drains_queue():
+    m, params = _setup()
+    eng = ServeEngine(m, params, slots=2, max_len=64)
+    reqs = [eng.submit(np.array([1, 2, 3]), max_new_tokens=4) for _ in range(5)]
+    done = eng.run_until_drained()
+    assert len(done) == 5
+    assert all(len(r.out_tokens) == 4 for r in done)
+
+
+def test_slot_isolation():
+    """A request's output must not depend on co-batched requests."""
+    m, params = _setup()
+    prompt = np.array([5, 6, 7, 8])
+    solo = ServeEngine(m, params, slots=2, max_len=64)
+    solo.submit(prompt, max_new_tokens=5)
+    ref = solo.run_until_drained()[0].out_tokens
+
+    busy = ServeEngine(m, params, slots=2, max_len=64)
+    busy.submit(np.array([9, 10]), max_new_tokens=5)
+    busy.submit(prompt, max_new_tokens=5)
+    busy.submit(np.array([11, 12, 13]), max_new_tokens=5)
+    done = busy.run_until_drained()
+    got = [r for r in done if r.prompt.tolist() == prompt.tolist()][0].out_tokens
+    assert got == ref, (got, ref)

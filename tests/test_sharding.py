@@ -1,0 +1,77 @@
+"""Partition-rule unit tests + a subprocess micro dry-run on 8 fake devices
+(XLA device-count flag must precede jax import, hence the subprocess)."""
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import spec_for_param
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def test_param_rules():
+    assert spec_for_param("layers/wq/w", 3) == P(None, None, "model")
+    assert spec_for_param("layers/wo/w", 3) == P(None, "model", None)
+    assert spec_for_param("embed/emb", 2) == P("model", None)
+    assert spec_for_param("layers/moe/experts/up", 4) == P(None, "model", None, None)
+    assert spec_for_param("layers/ln1/scale", 2) == P(None, None)
+    assert spec_for_param("layers/mlp/up/w", 3) == P(None, None, "model")
+    assert spec_for_param("layers/wx/w", 3) == P(None, None, "model")
+
+
+def test_padded_dims():
+    from repro.configs import get_config
+
+    pd = get_config("internvl2-1b").padded(16)
+    assert pd.n_heads == 16 and pd.n_kv_rep == 16 and pd.q_group == 1
+    pd = get_config("mistral-nemo-12b").padded(16)
+    assert pd.n_heads == 32 and pd.n_kv_rep == 16 and pd.q_group == 2
+    pd = get_config("qwen2-moe-a2.7b").padded(16)
+    assert pd.n_experts == 64
+    pd = get_config("granite-moe-3b-a800m").padded(16)
+    assert pd.n_heads == 32 and pd.n_experts == 48
+    # single-device (tests): no padding
+    pd1 = get_config("internvl2-1b").padded(1)
+    assert pd1.n_heads == 14 and pd1.n_kv_rep == 2
+
+
+@pytest.mark.slow
+def test_micro_mesh_dryrun_subprocess():
+    """Lower+compile the smoke tinyllama train step on a 2x4 fake mesh."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+from functools import partial
+from repro.configs import get_config
+from repro.dist import meshctx, sharding
+from repro.models import build_model
+from repro.train import step as step_mod
+import jax.numpy as jnp
+
+mesh = meshctx.make_mesh((2, 4), ("data", "model"))
+meshctx.set_mesh(mesh)
+cfg = get_config("tinyllama-1.1b-smoke")
+m = build_model(cfg)
+state_sds = jax.eval_shape(partial(step_mod.init_state, m, tp=4), jax.random.PRNGKey(0))
+pspecs = sharding.partition_params(state_sds.params, cfg.family)
+sspecs = step_mod.TrainState(pspecs, sharding.partition_opt_state(state_sds.opt, pspecs), jax.sharding.PartitionSpec())
+batch = {"tokens": jax.ShapeDtypeStruct((4, 32), jnp.int32),
+         "labels": jax.ShapeDtypeStruct((4, 32), jnp.int32)}
+bspecs = sharding.partition_batch(batch)
+scfg = step_mod.StepConfig(remat="full")
+fn = partial(step_mod.train_step, m, scfg, tp=4)
+j = jax.jit(fn, in_shardings=(sharding.named(sspecs, mesh), sharding.named(bspecs, mesh)), donate_argnums=(0,))
+c = j.lower(state_sds, batch).compile()
+assert c.memory_analysis().temp_size_in_bytes > 0
+print("MICRO_DRYRUN_OK")
+"""
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, cwd=ROOT,
+                       env={"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin",
+                            "HOME": "/root"})
+    assert "MICRO_DRYRUN_OK" in r.stdout, r.stderr[-2000:]

@@ -1,0 +1,116 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model, concrete_batch
+from repro.train import step as step_mod
+
+
+def test_overfit_tiny_batch():
+    cfg = get_config("tinyllama-1.1b-smoke")
+    m = build_model(cfg)
+    state = step_mod.init_state(m, jax.random.PRNGKey(0))
+    scfg = step_mod.StepConfig(remat="none", total_steps=60, warmup=5)
+    batch = concrete_batch(cfg, seq=16, batch=2)
+    f = jax.jit(lambda s, b: step_mod.train_step(m, scfg, s, b))
+    losses = []
+    for _ in range(40):
+        state, metrics = f(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] - 1.0, (losses[0], losses[-1])
+
+
+def test_grad_accum_matches_full_batch():
+    cfg = get_config("tinyllama-1.1b-smoke")
+    m = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    batch = concrete_batch(cfg, seq=16, batch=4)
+    s1 = step_mod.init_state(m, key)
+    s2 = step_mod.init_state(m, key)
+    c1 = step_mod.StepConfig(remat="none", grad_accum=1, total_steps=10, warmup=0)
+    c2 = step_mod.StepConfig(remat="none", grad_accum=2, total_steps=10, warmup=0)
+    n1, m1 = jax.jit(lambda s, b: step_mod.train_step(m, c1, s, b))(s1, batch)
+    n2, m2 = jax.jit(lambda s, b: step_mod.train_step(m, c2, s, b))(s2, batch)
+    p1 = jax.tree_util.tree_leaves(n1.params)[0]
+    p2 = jax.tree_util.tree_leaves(n2.params)[0]
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), atol=2e-4)
+
+
+def test_qos_controller_integration():
+    from repro.core.dynamic import QoSController
+    from repro.data.pipeline import make_pipeline
+    from repro.train.trainer import Trainer, TrainerConfig
+    import tempfile, shutil
+
+    cfg = get_config("tinyllama-1.1b-smoke")
+    m = build_model(cfg)
+    pipe = make_pipeline(cfg, seq_len=16, global_batch=2)
+    d = tempfile.mkdtemp()
+    qos = QoSController(ladder=[{"ebits": 8}, {"ebits": 6}], low_water=-10.0,
+                        high_water=10.0, cooldown_steps=0)
+    t = Trainer(m, step_mod.StepConfig(remat="none", total_steps=20, warmup=2),
+                TrainerConfig(total_steps=8, ckpt_every=100, ckpt_dir=d,
+                              log_every=100, qos=qos, qos_every=2),
+                pipe)
+    out = t.run()
+    shutil.rmtree(d, ignore_errors=True)
+    assert out["final_step"] == 8
+    assert len(qos.history) > 0
+
+
+def test_compressed_grads_training_converges():
+    """Beyond-paper: int8 quantize-dequantize on grads (the pjit-path
+    emulation of compressed all-reduce) must not break optimization."""
+    cfg = get_config("tinyllama-1.1b-smoke")
+    m = build_model(cfg)
+    state = step_mod.init_state(m, jax.random.PRNGKey(0))
+    scfg = step_mod.StepConfig(remat="none", total_steps=40, warmup=2,
+                               compress_grads=True)
+    batch = concrete_batch(cfg, seq=16, batch=2)
+    f = jax.jit(lambda s, b: step_mod.train_step(m, scfg, s, b))
+    losses = []
+    for _ in range(30):
+        state, metrics = f(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] - 0.8, (losses[0], losses[-1])
+
+
+def test_ring_tp_training_subprocess():
+    """§Perf A2 wiring: int8-ring TP reductions keep training converging."""
+    import subprocess
+    import sys
+    from pathlib import Path
+
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ["REPRO_RING_TP"] = "1"
+import jax, jax.numpy as jnp, numpy as np
+from functools import partial
+from repro.dist import meshctx
+from repro.configs import get_config
+from repro.models import build_model
+from repro.train import step as step_mod
+mesh = meshctx.make_mesh((2, 4), ("data", "model"))
+meshctx.set_mesh(mesh)
+cfg = get_config("tinyllama-1.1b-smoke")
+m = build_model(cfg)
+state = step_mod.init_state(m, jax.random.PRNGKey(0), tp=4)
+scfg = step_mod.StepConfig(remat="none", total_steps=40, warmup=2)
+fn = jax.jit(partial(step_mod.train_step, m, scfg, tp=4))
+bt = {"tokens": jnp.asarray(np.random.default_rng(0).integers(0, 512, (4, 32)), jnp.int32)}
+bt["labels"] = bt["tokens"]
+losses = []
+for _ in range(25):
+    state, metrics = fn(state, bt)
+    losses.append(float(metrics["loss"]))
+assert losses[-1] < losses[0] - 0.5, (losses[0], losses[-1])
+print("RING_TRAIN_OK")
+"""
+    root = Path(__file__).resolve().parents[1]
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, cwd=root,
+                       env={"PYTHONPATH": str(root / "src"),
+                            "PATH": "/usr/bin:/bin", "HOME": "/root"})
+    assert "RING_TRAIN_OK" in r.stdout, r.stderr[-2000:]

@@ -1,0 +1,65 @@
+"""Fault-tolerance behaviours: preemption checkpoint, restart-resume,
+straggler flagging."""
+import shutil
+import tempfile
+
+import jax
+
+from repro.configs import get_config
+from repro.data.pipeline import make_pipeline
+from repro.models import build_model
+from repro.train import step as step_mod
+from repro.train.trainer import StragglerWatchdog, Trainer, TrainerConfig
+
+
+def _mk(tmp, total=20, ckpt_every=50):
+    cfg = get_config("tinyllama-1.1b-smoke")
+    m = build_model(cfg)
+    pipe = make_pipeline(cfg, seq_len=16, global_batch=2)
+    return Trainer(
+        m, step_mod.StepConfig(remat="none", total_steps=total, warmup=2),
+        TrainerConfig(total_steps=total, ckpt_every=ckpt_every, ckpt_dir=tmp,
+                      log_every=1000),
+        pipe)
+
+
+class _PreemptingPipeline:
+    """Raises the trainer's preemption flag at a given step (stands in for
+    SIGTERM from the cluster scheduler)."""
+
+    def __init__(self, inner, trainer_box, at_step):
+        self.inner = inner
+        self.box = trainer_box
+        self.at = at_step
+
+    def batch_at(self, step):
+        if step >= self.at:
+            self.box[0]._preempted = True
+        return self.inner.batch_at(step)
+
+
+def test_preemption_checkpoints_and_exits():
+    tmp = tempfile.mkdtemp()
+    try:
+        t = _mk(tmp, total=50, ckpt_every=100)
+        box = [t]
+        t.pipeline = _PreemptingPipeline(t.pipeline, box, at_step=3)
+        out = t.run()
+        assert out["preempted"]
+        assert out["final_step"] <= 5
+        assert t.ckpt.latest_valid_step() == out["final_step"]
+        # restart resumes from the preemption point
+        t2 = _mk(tmp, total=8, ckpt_every=100)
+        out2 = t2.run()
+        assert out2["history"][0]["step"] == out["final_step"]
+        assert out2["final_step"] == 8
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def test_straggler_watchdog_flags_outliers():
+    w = StragglerWatchdog(factor=2.0)
+    for i in range(20):
+        assert not w.observe(i, 0.1)
+    assert w.observe(20, 0.5)
+    assert w.flagged and w.flagged[0][0] == 20
