@@ -26,17 +26,16 @@ def _fir_exact(sig_q, taps_q):
 
 
 def _fir_pr(sig_q, taps_q, p, r):
-    L = len(sig_q) - len(taps_q)
+    """All taps in one batched DyFXU call: operands stacked (taps, Lpad),
+    tap rows broadcast against their shifted signal windows."""
+    T = len(taps_q)
+    L = len(sig_q) - T
     Lpad = ((L + 2047) // 2048) * 2048
-    acc = np.zeros(Lpad, np.int64)
-    for i, t in enumerate(taps_q):
-        a = np.full(Lpad, t, np.int32)
-        b = np.zeros(Lpad, np.int32)
-        b[:L] = sig_q[i:i + L]
-        prod = np.asarray(pr_multiply(jnp.asarray(a), jnp.asarray(b),
-                                      p, r, n=16))
-        acc += prod
-    return acc[:L]
+    a = np.ascontiguousarray(np.broadcast_to(taps_q[:, None], (T, Lpad)))
+    b = np.zeros((T, Lpad), np.int32)
+    b[:, :L] = np.lib.stride_tricks.sliding_window_view(sig_q, L)[:T]
+    prod = np.asarray(pr_multiply(jnp.asarray(a), jnp.asarray(b), p, r, n=16))
+    return prod.astype(np.int64).sum(axis=0)[:L]
 
 
 def rows():

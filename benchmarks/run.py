@@ -1,4 +1,4 @@
-"""Benchmark harness — one module per dissertation table/figure (DESIGN.md §5).
+"""Benchmark harness — one module per dissertation table/figure (DESIGN.md §6).
 Prints ``name,us_per_call,derived`` CSV."""
 import sys
 import traceback

@@ -1,0 +1,24 @@
+"""repro.dist — the distribution layer (DESIGN.md §5).
+
+Five modules, mirroring the paper's approximation philosophy applied to the
+interconnect instead of the multiplier datapath:
+
+  meshctx       process-global mesh registry + activation-sharding helpers
+  sharding      name-pattern partition rules for params / opt state / batches
+  collectives   approximation-as-communication: quantized + error-feedback
+                gradient compression and an int8 ring all-reduce
+  hlo_analysis  trip-count-aware HLO text walker (dot FLOPs, collective bytes)
+  elastic       surviving-device-count -> (pod, data, model) rescale planning
+
+Importing this package also installs the jax version-compatibility shims
+(``jax.shard_map`` on releases that only ship the experimental API) so model
+code and tests can use the modern spelling uniformly.
+"""
+
+from repro.dist import compat as _compat
+
+_compat.install()
+
+from repro.dist import meshctx  # noqa: E402  (shims must install first)
+
+__all__ = ["meshctx", "compat"]

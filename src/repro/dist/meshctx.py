@@ -1,0 +1,85 @@
+"""Process-global mesh registry + activation-sharding helpers.
+
+The launch entrypoints build one mesh per process (``make_mesh`` +
+``set_mesh``); model code reads it back with ``get_mesh`` wherever a sharding
+decision is needed at trace time (activation constraints, shard_map regions,
+MoE capacity math).  Single-device runs (unit tests) never call ``set_mesh``
+— ``get_mesh`` lazily returns a trivial ``(1, 1)`` ``("data", "model")`` mesh
+so every call site works unconditionally.
+
+Axis convention (DESIGN.md §5.1): the last axis is always ``"model"``
+(tensor/expert parallelism); every other axis shards the batch
+(``"data"``, and ``"pod"`` on multi-pod meshes).
+"""
+
+from __future__ import annotations
+
+import math
+from contextlib import contextmanager
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+_MESH: Optional[Mesh] = None
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> Mesh:
+    """Build a mesh of the first ``prod(shape)`` local devices.
+
+    ``shape`` and ``axes`` must align; ``axes`` must contain ``"model"``.
+    """
+    if len(shape) != len(axes):
+        raise ValueError(f"mesh shape {shape} / axes {axes} rank mismatch")
+    if "model" not in axes:
+        raise ValueError(f"mesh axes {axes} must include 'model'")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if n > len(devices):
+        raise ValueError(
+            f"mesh {tuple(shape)} needs {n} devices, have {len(devices)} "
+            "(set XLA_FLAGS=--xla_force_host_platform_device_count=N for "
+            "host-mesh dry-runs)")
+    devs = np.asarray(devices[:n]).reshape(tuple(shape))
+    return Mesh(devs, tuple(axes))
+
+
+def set_mesh(mesh: Mesh) -> Mesh:
+    """Install ``mesh`` as the process-global mesh; returns it."""
+    global _MESH
+    _MESH = mesh
+    return mesh
+
+
+def get_mesh() -> Mesh:
+    """The active mesh; a trivial single-device mesh if none was set."""
+    global _MESH
+    if _MESH is None:
+        _MESH = make_mesh((1, 1), ("data", "model"))
+    return _MESH
+
+
+@contextmanager
+def use_mesh(mesh: Mesh):
+    """Scoped ``set_mesh`` (tests / nested tools)."""
+    global _MESH
+    prev = _MESH
+    _MESH = mesh
+    try:
+        yield mesh
+    finally:
+        _MESH = prev
+
+
+def batch_axes(mesh: Optional[Mesh] = None) -> tuple[str, ...]:
+    """Every mesh axis that shards the batch dim (all but ``"model"``)."""
+    mesh = mesh or get_mesh()
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def bspec(*rest) -> P:
+    """Activation PartitionSpec: batch dim over the data axes + explicit
+    trailing dims, e.g. ``bspec(None, "model", None)`` for (B, S, H, D)."""
+    b = batch_axes()
+    return P(b if b else None, *rest)

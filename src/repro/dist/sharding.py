@@ -1,0 +1,136 @@
+"""Name-pattern partition rules (DESIGN.md §5.2).
+
+Megatron-style tensor parallelism over the ``"model"`` axis, resolved purely
+from parameter *names* so every family (dense / MoE / hybrid / VLM / audio /
+SSM) shares one rule table:
+
+  column-parallel  (output dim sharded, no fwd collective): wq/wk/wv, up,
+                   gate, in_proj, unembed, and any unrecognized dense ``w``
+  row-parallel     (contracting dim sharded, output psum): wo, down, out_proj
+  expert-parallel  (expert dim sharded): everything under ``experts/``
+  vocab-parallel   embedding table (tied unembedding shards the logits)
+  replicated       norms, biases, routers, convs, gates/decays and every
+                   other small 1-D parameter
+
+Leading dims beyond a rule's trailing pattern are layer-stacking dims from
+``scan``-over-layers inits and stay unsharded — the rules return *trailing*
+specs padded left with ``None`` to the leaf's rank.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist.meshctx import batch_axes, get_mesh
+
+# module names whose dense ``w`` contracts over the sharded dim (output
+# reduction); mirrors kernels/ops.py _RING_PATHS
+_ROW_MODULES = {"wo", "down", "out_proj"}
+# leaf names that are themselves projection matrices (MoE shared experts
+# store bare up/gate/down arrays without a dense sub-dict)
+_COL_LEAVES = {"up", "gate"}
+_ROW_LEAVES = {"down"}
+# modules that stay replicated even though they hold a ``w``
+_REPLICATED_MODULES = {"router", "conv"}
+
+
+def spec_for_param(name: str, ndim: int) -> P:
+    """PartitionSpec for a parameter with path ``name`` (/-joined) and rank
+    ``ndim``.  Unknown names are replicated (safe default)."""
+    parts = name.lower().split("/")
+    leaf = parts[-1] if parts else name
+    module = parts[-2] if len(parts) >= 2 else ""
+
+    trailing: tuple = ()
+    if module in _REPLICATED_MODULES or leaf in _REPLICATED_MODULES:
+        trailing = ()
+    elif "experts" in parts:
+        trailing = ("model", None, None)          # (E, d, f) / (E, f, d)
+    elif leaf == "emb":
+        trailing = ("model", None)                # (vocab, d) vocab-parallel
+    elif leaf == "w" and module in _ROW_MODULES or leaf in _ROW_LEAVES:
+        trailing = ("model", None)                # (K_sharded, d)
+    elif leaf == "w" or leaf in _COL_LEAVES:
+        trailing = (None, "model")                # (d, N_sharded)
+    if len(trailing) > ndim:
+        trailing = ()
+    return P(*([None] * (ndim - len(trailing)) + list(trailing)))
+
+
+def _key_str(k) -> str:
+    if isinstance(k, jax.tree_util.DictKey):
+        return str(k.key)
+    if isinstance(k, jax.tree_util.SequenceKey):
+        return str(k.idx)
+    if isinstance(k, jax.tree_util.GetAttrKey):
+        return str(k.name)
+    return str(k)
+
+
+def partition_params(params: Any, family: str = "") -> Any:
+    """PartitionSpec tree matching ``params``.  ``family`` is accepted for
+    future per-family overrides; the name rules currently cover all six."""
+    del family
+
+    def spec(path, leaf):
+        name = "/".join(_key_str(k) for k in path)
+        return spec_for_param(name, getattr(leaf, "ndim", len(leaf.shape)))
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def partition_opt_state(opt: Any, pspecs: Any) -> Any:
+    """AdamW state shards exactly like the parameters (mu/nu mirror the
+    param tree; the step counter is replicated)."""
+    from repro.optim.adamw import AdamWState
+
+    return AdamWState(step=P(), mu=pspecs, nu=pspecs)
+
+
+def partition_batch(batch: Any) -> Any:
+    """Batch leaves shard dim 0 over the data axes, rest replicated."""
+    b = batch_axes()
+    bd = tuple(b) if b else None
+
+    def spec(leaf):
+        nd = getattr(leaf, "ndim", len(leaf.shape))
+        return P(*([bd] + [None] * (nd - 1))) if nd else P()
+
+    return jax.tree.map(spec, batch)
+
+
+def partition_cache(cache: Any, family: str = "") -> Any:
+    """Decode-cache specs: KV stacks shard heads over ``model`` and batch
+    over the data axes; recurrent states shard batch (and SSM heads)."""
+    del family
+    b = batch_axes()
+    bd = tuple(b) if b else None
+
+    def spec(path, leaf):
+        name = _key_str(path[-1]) if path else ""
+        nd = getattr(leaf, "ndim", len(leaf.shape))
+        if name == "length" or nd <= 1:
+            return P(bd) if nd else P()
+        if name in ("k", "v", "ks", "vs"):
+            # (L, B, T, KVr[, D]) — heads at dim 3
+            return P(*([None, bd, None, "model", None][:nd]))
+        if name == "h" and nd == 5:
+            return P(None, bd, "model", None, None)   # SSM (L, B, H, P, N)
+        return P(*([None, bd] + [None] * (nd - 2)))   # (L, B, ...) states
+    return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+def named(specs: Any, mesh=None) -> Any:
+    """Map a PartitionSpec tree to NamedShardings on ``mesh``."""
+    mesh = mesh or get_mesh()
+
+    def to_named(s):
+        if isinstance(s, NamedSharding):
+            return s
+        return NamedSharding(mesh, s)
+
+    return jax.tree.map(to_named, specs,
+                        is_leaf=lambda x: isinstance(x, (P, NamedSharding)))

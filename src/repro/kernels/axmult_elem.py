@@ -48,10 +48,16 @@ def _pr_kernel(pr_ref, a_ref, b_ref, out_ref, *, n: int):
 def pr_multiply(a: Array, b: Array, p: Array | int, r: Array | int,
                 *, n: int = 16, block: int = 2048,
                 interpret: bool = True) -> Array:
-    """Elementwise DyFXU product of flat int32 operand arrays (n-bit values).
+    """Elementwise DyFXU product of int32 operand arrays (n-bit values).
 
-    a, b: (L,) int32 with L % block == 0 (callers pad); p, r runtime scalars.
+    a, b: same shape, total size % block == 0 (callers pad); p, r runtime
+    scalars.  N-D operands (e.g. a stacked (taps, L) FIR batch) are flattened
+    for the kernel and restored on return.
     """
+    shape = a.shape
+    assert b.shape == shape, (shape, b.shape)
+    a = a.reshape(-1)
+    b = b.reshape(-1)
     (L,) = a.shape
     assert L % block == 0, (L, block)
     pr = jnp.stack([jnp.asarray(p, jnp.int32), jnp.asarray(r, jnp.int32)])
@@ -74,4 +80,4 @@ def pr_multiply(a: Array, b: Array, p: Array | int, r: Array | int,
         out_shape=jax.ShapeDtypeStruct(a2.shape, jnp.int32),
         interpret=interpret,
     )(pr, a2, b2)
-    return out.reshape(L)
+    return out.reshape(shape)

@@ -2,3 +2,5 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# for the _hypothesis_fallback shim (tests/ has no __init__.py)
+sys.path.insert(0, os.path.dirname(__file__))

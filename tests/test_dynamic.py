@@ -27,3 +27,66 @@ def test_cooldown_prevents_thrash():
     d1 = c.degree
     c.update(1, -1.0)
     assert c.degree == d1  # cooling down
+
+
+def test_degree_pinned_at_most_approximate_end():
+    """At the ladder's last rung, sustained headroom must not run off the end."""
+    c = QoSController(ladder=_ladder(), low_water=0.0, high_water=0.5,
+                      cooldown_steps=0, ema_alpha=1.0, degree=3)
+    for s in range(10):
+        kw = c.update(s, -1.0)
+    assert c.degree == 3 and kw == {"ebits": 5}
+    assert [d for _, _, d in c.history] == [3] * 10
+
+
+def test_degree_pinned_at_exact_end():
+    """At rung 0, sustained violation must not go negative."""
+    c = QoSController(ladder=_ladder(), low_water=0.0, high_water=0.5,
+                      cooldown_steps=0, ema_alpha=1.0, degree=0)
+    for s in range(10):
+        kw = c.update(s, 5.0)
+    assert c.degree == 0 and kw == {"ebits": 8}
+
+
+def test_pinned_updates_do_not_consume_cooldown():
+    """A no-move update at a ladder end must not arm the cooldown timer: the
+    next genuine quality swing reacts immediately."""
+    c = QoSController(ladder=_ladder(), low_water=0.0, high_water=0.5,
+                      cooldown_steps=5, ema_alpha=1.0, degree=0)
+    c.update(0, 5.0)          # pinned at 0, no move
+    c.update(1, -1.0)         # headroom appears
+    assert c.degree == 1      # reacts without waiting out a phantom cooldown
+
+
+def test_cooldown_blocks_oscillation():
+    """Alternating head-room/violation signals inside one cooldown window
+    produce exactly one move, not a thrash."""
+    c = QoSController(ladder=_ladder(), low_water=0.0, high_water=0.5,
+                      cooldown_steps=4, ema_alpha=1.0)
+    sigs = [-1.0, 2.0, -1.0, 2.0, -1.0]
+    for s, q in enumerate(sigs):
+        c.update(s, q)
+    degrees = [d for _, _, d in c.history]
+    assert degrees[0] == 1                 # first headroom moves
+    assert degrees == [1, 1, 1, 1, 1]      # cooldown pins every later signal
+    assert c.degree == 1
+
+
+def test_cooldown_expiry_allows_next_move():
+    c = QoSController(ladder=_ladder(), low_water=0.0, high_water=0.5,
+                      cooldown_steps=2, ema_alpha=1.0)
+    c.update(0, -1.0)          # -> degree 1, cooldown = 2
+    c.update(1, -1.0)          # cooldown 2 -> 1
+    c.update(2, -1.0)          # cooldown 1 -> 0
+    assert c.degree == 1
+    c.update(3, -1.0)          # cooldown expired -> move
+    assert c.degree == 2
+
+
+def test_ema_smoothing_gates_single_spike():
+    """With a small alpha, one outlier signal cannot trigger a move."""
+    c = QoSController(ladder=_ladder(), low_water=-0.5, high_water=0.5,
+                      cooldown_steps=0, ema_alpha=0.1)
+    c.update(0, 0.0)
+    c.update(1, -3.0)          # ema = 0.9*0 + 0.1*(-3) = -0.3 > low_water
+    assert c.degree == 0

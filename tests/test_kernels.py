@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container image has no hypothesis wheel
+    from _hypothesis_fallback import given, settings, st
 
 from repro.kernels import ref
 from repro.kernels.axmult_elem import pr_multiply
