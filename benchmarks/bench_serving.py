@@ -1,5 +1,12 @@
 """Serving engine throughput/latency (continuous batching; smoke-scale model
-on CPU — the decode dry-run cells carry the production-shape numbers)."""
+on CPU — the decode dry-run cells carry the production-shape numbers).
+
+Row convention (matches run.py header ``name,us_per_call,derived``): the
+``us_per_call`` column is microseconds per *fused serve step* (one engine
+tick over all slots), and ``derived`` is the quantity named by the row
+suffix.  The fused prefill + serve step are compiled in a warmup drain
+outside the timed window, so rows track steady-state serving.
+"""
 import time
 
 import jax
@@ -8,6 +15,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.models import build_model
 from repro.serve.engine import ServeEngine
+from repro.serve.metrics import summarize
 
 
 def rows():
@@ -18,15 +26,25 @@ def rows():
     for slots in (2, 8):
         eng = ServeEngine(model, params, slots=slots, max_len=128)
         rng = np.random.default_rng(0)
+        # warmup: compile fused prefill (per prompt length) + serve step
+        for _ in range(2):
+            eng.submit(rng.integers(0, cfg.vocab, 4), 4)
+        eng.run_until_drained()
+        steps0 = eng.stats.decode_steps
+        pf0, dec0 = eng.stats.prefill_tokens, eng.stats.decode_tokens
         t0 = time.perf_counter()
         for _ in range(12):
             eng.submit(rng.integers(0, cfg.vocab, 4), 16)
-        done = eng.run_until_drained()
+        done = eng.run_until_drained()[2:]          # drop warmup requests
         dt = time.perf_counter() - t0
-        tot = sum(len(r.out_tokens) for r in done)
-        lat = [r.t_done - r.t_enqueue for r in done]
-        out.append((f"serve.slots{slots}_tok_per_s", round(dt / tot * 1e6, 0),
-                    round(tot / dt, 1)))
-        out.append((f"serve.slots{slots}_p95_latency_ms", 0.0,
-                    round(float(np.percentile(lat, 95)) * 1e3, 0)))
+        steps = eng.stats.decode_steps - steps0
+        s = summarize(done, eng.stats, wall_s=dt)
+        us_per_step = round(dt / max(steps, 1) * 1e6, 1)
+        out.append((f"serve.slots{slots}_gen_tok_per_s", us_per_step,
+                    s["gen_tok_per_s"]))
+        out.append((f"serve.slots{slots}_ttft_p95_ms", 0.0, s["ttft_p95_ms"]))
+        out.append((f"serve.slots{slots}_tpot_p50_ms", 0.0, s["tpot_p50_ms"]))
+        out.append((f"serve.slots{slots}_prefill_vs_decode_tok", 0.0,
+                    f"{eng.stats.prefill_tokens - pf0}"
+                    f"/{eng.stats.decode_tokens - dec0}"))
     return out

@@ -112,9 +112,20 @@ def quantize_for_axqmm(x: Array, bk: int = 512):
     return q.reshape(M, K), scale[..., 0]
 
 
+def _tile(dim: int) -> int:
+    return 128 if dim % 128 == 0 else (64 if dim % 64 == 0 else 8)
+
+
 def axqmm(x: Array, w: Array, *, block: int = 512, ebits: Array | int = 8,
           interpret: bool = True) -> Array:
-    """float x (M,K) @ float w (K,N) through the quantized kernel."""
+    """float x (M,K) @ float w (K,N) through the quantized kernel.
+
+    M/N are zero-padded up to the tile multiple and the result sliced back,
+    so decode-shaped inputs (M = serve slots, e.g. 4) take the Pallas path
+    instead of raising.  Padding happens *after* quantization: scales are
+    per-row / per-column, so real rows' values are unchanged and the padded
+    rows (zero operands) contribute exact zeros that the slice drops.
+    """
     M, K = x.shape
     N = w.shape[1]
     bk = block
@@ -123,9 +134,15 @@ def axqmm(x: Array, w: Array, *, block: int = 512, ebits: Array | int = 8,
         bk //= 2
     qx, sx = quantize_for_axqmm(x, bk)
     qw, sw = quantize_for_axqmm(w.T, bk)
-    bm = 128 if M % 128 == 0 else (64 if M % 64 == 0 else 8)
-    bn = 128 if N % 128 == 0 else (64 if N % 64 == 0 else 8)
-    if M % bm or N % bn or K % bk:
-        raise ValueError(f"axqmm shape not tileable: {(M, K, N)}")
-    return axqmm_quantized(qx, sx, qw, sw, ebits, bm=bm, bn=bn, bk=bk,
-                           interpret=interpret)
+    bm, bn = _tile(M), _tile(N)
+    Mp = -(-M // bm) * bm
+    Np = -(-N // bn) * bn
+    if Mp != M:
+        qx = jnp.pad(qx, ((0, Mp - M), (0, 0)))
+        sx = jnp.pad(sx, ((0, Mp - M), (0, 0)))
+    if Np != N:
+        qw = jnp.pad(qw, ((0, Np - N), (0, 0)))
+        sw = jnp.pad(sw, ((0, Np - N), (0, 0)))
+    y = axqmm_quantized(qx, sx, qw, sw, ebits, bm=bm, bn=bn, bk=bk,
+                        interpret=interpret)
+    return y[:M, :N] if (Mp != M or Np != N) else y

@@ -1,6 +1,10 @@
 """Serving entrypoint: continuous-batching engine over a selected arch.
 
   python -m repro.launch.serve --arch tinyllama-1.1b-smoke --requests 16
+  # temperature/top-k sampling, per-request latency table, QoS degree loop:
+  python -m repro.launch.serve --arch tinyllama-1.1b-smoke \
+      --temperature 0.8 --top-k 40 --seed 7 --qos --metrics
+
 On a TPU pod the full configs drive the same engine with the decode
 sharding proven by the dry-run (KV cache TP over the model axis, optional
 int8 cache via REPRO_KV_INT8=1).
@@ -12,9 +16,11 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.core.dynamic import QoSController
 from repro.dist import meshctx
 from repro.models import build_model
 from repro.serve.engine import ServeEngine
+from repro.serve.metrics import summarize
 
 
 def main() -> None:
@@ -24,6 +30,20 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--mesh", default="1x1")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; > 0 enables categorical sampling")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="restrict sampling to the k most likely tokens")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="engine PRNG seed (sampling is reproducible per seed)")
+    ap.add_argument("--eos-id", type=int, default=-1,
+                    help="stop-token id; -1 disables EOS stopping")
+    ap.add_argument("--qos", action="store_true",
+                    help="drive the runtime approximation degree from load "
+                         "(DyFXU ladder ebits 8->5, no recompilation)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the TTFT/TPOT/queue latency summary and "
+                         "prefill-vs-decode token accounting")
     args = ap.parse_args()
 
     d, m = (int(x) for x in args.mesh.split("x")[:2])
@@ -31,17 +51,30 @@ def main() -> None:
     cfg = get_config(args.arch)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0), tp=m)
-    eng = ServeEngine(model, params, slots=args.slots, max_len=512, tp=m)
-    rng = np.random.default_rng(0)
+    qos = QoSController(
+        ladder=[{"ebits": e} for e in (8, 7, 6, 5)],
+        low_water=0.25, high_water=0.75, cooldown_steps=8,
+    ) if args.qos else None
+    eng = ServeEngine(model, params, slots=args.slots, max_len=512, tp=m,
+                      eos_id=args.eos_id, greedy=args.temperature <= 0,
+                      temperature=max(args.temperature, 1e-6),
+                      top_k=args.top_k, seed=args.seed, qos=qos)
+    rng = np.random.default_rng(args.seed)
     t0 = time.time()
     for _ in range(args.requests):
         eng.submit(rng.integers(0, cfg.vocab, int(rng.integers(2, 10))),
                    args.new_tokens)
     done = eng.run_until_drained()
     dt = time.time() - t0
-    tot = sum(len(r.out_tokens) for r in done)
-    print(f"[launch.serve] {len(done)} reqs, {tot} tokens, {dt:.2f}s "
-          f"({tot/dt:.1f} tok/s)")
+    s = summarize(done, eng.stats, wall_s=dt)
+    print(f"[launch.serve] {s['requests']} reqs, {s['generated_tokens']} "
+          f"generated tokens, {dt:.2f}s ({s['gen_tok_per_s']:.1f} gen tok/s)")
+    if args.metrics:
+        for k, v in s.items():
+            print(f"[launch.serve]   {k:24s} {v}")
+        if qos is not None:
+            print(f"[launch.serve]   degree ladder visits: "
+                  f"{[e for _, e in list(eng.stats.degree_history)[-8:]]} (last 8)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,66 @@
+"""Slot-lifecycle primitives over decode caches (serving subsystem).
+
+All cache types (``LMCache``/``LMCacheQ``/``SSMCache``/``HybridCache``) are
+NamedTuples that share one layout convention: the per-slot ``length`` vector
+has the batch (= slot) dim at axis 0, every other field carries a leading
+stack axis (layers / groups / recurrent-blocks) with batch at axis 1.  These
+helpers exploit that convention generically, so the serve engine never
+special-cases a model family:
+
+  * :func:`cache_reset_slot` — rewind one slot's region (KV, recurrent state,
+    conv tail, length) to the init state.  Called on admission so a reused
+    slot is indistinguishable from a fresh one (the stale-slot pollution fix).
+  * :func:`cache_mask_update` — freeze free slots' ``length`` at its
+    pre-step value inside the fused serve step, masking them out of the
+    batch: a pinned length pins both the slot's KV write position and its
+    valid-range read mask, so the region never advances.
+
+Both are pure functions of arrays and trace cleanly under ``jax.jit`` with
+``slot`` / ``active`` as traced arguments (no recompile per slot).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cache_reset_slot(cache, slot):
+    """Zero slot ``slot``'s region in every field and rewind its length.
+
+    ``slot`` may be a traced int32 scalar.  Returns a new cache NamedTuple.
+    """
+    out = []
+    for name in cache._fields:
+        o = getattr(cache, name)
+        if name == "length":
+            out.append(o.at[slot].set(0))
+        else:
+            out.append(o.at[:, slot].set(jnp.zeros_like(o[:, 0])))
+    return type(cache)(*out)
+
+
+def cache_mask_update(old_cache, new_cache, active):
+    """Mask free slots out of a decode-step cache update: slots where
+    ``active`` (bool (B,)) is False keep their pre-step ``length``.
+
+    Freezing length is sufficient — and O(slots) instead of an O(cache)
+    per-field select: position-gated caches (KV rings) then rewrite one
+    fixed position with values the valid-range mask never exposes, state
+    caches (SSM/RG-LRU h, conv) may accumulate garbage in free slots, and
+    :func:`cache_reset_slot` rewinds the whole region on admission before
+    any of it can be read.  Reuse-after-free bit-identity is asserted per
+    family by ``test_slot_reuse_after_free``.
+    """
+    length = jnp.where(active, new_cache.length, old_cache.length)
+    return new_cache._replace(length=length)
+
+
+def ring_write_indices(prompt_len: int, capacity: int):
+    """Static index plan for writing a ``prompt_len`` prefix into a cache
+    ring of ``capacity`` positions: keep the last ``n = min(P, T)`` tokens,
+    mapped to ring positions ``src % T`` (identity while P <= T).  Returns
+    (src_idx (n,), dst_idx (n,)) as numpy-backed jnp arrays."""
+    n = min(prompt_len, capacity)
+    src = jnp.arange(prompt_len - n, prompt_len, dtype=jnp.int32)
+    dst = jnp.mod(src, capacity)
+    return src, dst

@@ -87,6 +87,26 @@ class Model:
         return transformer.lm_decode_step(params, self.cfg, self.policy,
                                           cache, tokens, tp, degree)
 
+    def prefill(self, params, cache, tokens, slot, tp: int = 1, degree=None):
+        """Fused prefill: write prompt ``tokens`` (P,) into ``slot``'s cache
+        region in ONE forward call (serve-engine admission path).  The slot
+        region is reset first, so reuse-after-free equals a fresh slot.
+        Returns (last-position logits (1, V) f32, new cache)."""
+        if self.cfg.family == "hybrid":
+            return rglru.hybrid_prefill(params, self.cfg, self.policy,
+                                        cache, tokens, slot, tp, degree)
+        if self.cfg.family == "ssm":
+            return ssm.ssm_prefill(params, self.cfg, self.policy,
+                                   cache, tokens, slot, tp, degree)
+        return transformer.lm_prefill(params, self.cfg, self.policy,
+                                      cache, tokens, slot, tp, degree)
+
+    def reset_slot(self, cache, slot):
+        """Rewind one slot's cache region (KV/state and length) to init."""
+        from repro.models.cache_ops import cache_reset_slot
+
+        return cache_reset_slot(cache, slot)
+
     def param_count(self, params) -> int:
         return sum(x.size for x in jax.tree_util.tree_leaves(params))
 

@@ -116,12 +116,14 @@ def init_attn_block(key, cfg: ArchConfig, tp: int):
     return init_block(key, cfg, tp)
 
 
-def attn_block_apply(bp, x, cfg: ArchConfig, tp, policy, path, positions, degree=None):
+def attn_block_apply(bp, x, cfg: ArchConfig, tp, policy, path, positions,
+                     degree=None, return_kv: bool = False):
     from repro.models.transformer import block_apply
     import dataclasses
 
     cfg_local = dataclasses.replace(cfg, swa_window=cfg.local_window, moe=None)
-    return block_apply(bp, x, cfg_local, tp, policy, path, positions, degree)
+    return block_apply(bp, x, cfg_local, tp, policy, path, positions, degree,
+                       return_kv=return_kv)
 
 
 # ---------------------------------------------------------------------------
@@ -213,6 +215,74 @@ def init_hybrid_cache(cfg: ArchConfig, tp: int, batch: int, max_len: int,
         conv=jnp.zeros((n_rec, batch, 3, cfg.d_model), dtype),
         length=jnp.zeros((batch,), jnp.int32),
     )
+
+
+def hybrid_prefill(params, cfg: ArchConfig, policy: ApproxPolicy,
+                   cache: HybridCache, tokens: Array, slot, tp: int = 1,
+                   degree=None):
+    """Fused prefill: one full forward over the prompt; recurrent/conv states
+    (associative-scan path) and local-attention KV (ring-wrapped to the
+    window) are written into ``slot``'s cache region.
+
+    tokens: (P,) int32.  Returns (last-position logits (1, V) f32, cache with
+    ``length[slot] = P``).  The slot region is reset first (reuse == fresh).
+    """
+    from repro.models.cache_ops import cache_reset_slot, ring_write_indices
+
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    pat = cfg.block_pattern
+    n_groups = cfg.n_layers // len(pat)
+    rec_per_group = sum(1 for p in pat if p == "rec")
+    cache = cache_reset_slot(cache, slot)
+    P = tokens.shape[0]
+    W = cache.k.shape[2]
+    # ring writes are only valid when decode also ring-wraps (window <= W);
+    # a capacity-truncated window cache saturates instead (attention.py)
+    ring = cfg.local_window is not None and cfg.local_window <= W
+    if P > W and not ring:
+        raise ValueError(f"prompt ({P}) exceeds cache capacity ({W})")
+    x = L.embed_apply(params["embed"], tokens[None], dtype)   # (1, P, d)
+    positions = jnp.arange(P, dtype=jnp.int32)[None]
+
+    def group_body(h, gp):
+        nh, nc = [], []
+        gk = gv = None
+        for i, name in enumerate(pat):
+            bp = gp[f"{name}{i}"]
+            if name == "rec":
+                h, (h_new, conv_new) = rec_block_apply(
+                    bp, h, cfg, policy, "g", degree)
+                nh.append(h_new)
+                nc.append(conv_new)
+            else:
+                h, _, (gk, gv) = attn_block_apply(
+                    bp, h, cfg, tp, policy, "g", positions, degree,
+                    return_kv=True)                        # k/v: (1, P, KVr, D)
+        return h, (gk, gv, jnp.stack(nh), jnp.stack(nc))
+
+    x, (ks, vs, nhs, ncs) = jax.lax.scan(group_body, x, params["groups"])
+    # ks: (n_groups, 1, P, KVr, D); nhs: (n_groups, rec_per_group, 1, d)
+    new_h = [nhs.reshape(n_groups * rec_per_group, cfg.d_model)]
+    new_c = [ncs.reshape(n_groups * rec_per_group, 3, cfg.d_model)]
+    for i, bp in enumerate(params["tail"]):
+        # path "tail" matches hybrid_decode_step: a path-keyed policy must
+        # resolve identically in prefill and teacher-forced decode
+        x, (h_new, conv_new) = rec_block_apply(bp, x, cfg, policy,
+                                               "tail", degree)
+        new_h.append(h_new)
+        new_c.append(conv_new)
+    src, dst = ring_write_indices(P, W)
+    new_cache = HybridCache(
+        k=cache.k.at[:, slot, dst].set(ks[:, 0, src].astype(cache.k.dtype)),
+        v=cache.v.at[:, slot, dst].set(vs[:, 0, src].astype(cache.v.dtype)),
+        h=cache.h.at[:, slot].set(jnp.concatenate(new_h, axis=0)),
+        conv=cache.conv.at[:, slot].set(
+            jnp.concatenate(new_c, axis=0).astype(cache.conv.dtype)),
+        length=cache.length.at[slot].set(P),
+    )
+    xl = L.rmsnorm_apply(params["ln_f"], x[:, -1:], cfg.norm_eps)
+    logits = L.dense_apply(params["unembed"], xl, policy, "unembed", degree)
+    return logits.astype(jnp.float32)[:, 0], new_cache
 
 
 def hybrid_decode_step(params, cfg: ArchConfig, policy: ApproxPolicy,

@@ -79,9 +79,12 @@ def _segsum_decay(dtA: Array) -> tuple[Array, Array]:
 
 def ssm_block_apply(bp, x_res: Array, cfg: ArchConfig, policy: ApproxPolicy,
                     path: str, degree=None,
-                    state: tuple[Array, Array] | None = None):
+                    state: tuple[Array, Array] | None = None,
+                    return_state: bool = False):
     """x_res: (B, S, d).  state = (h (B,H,P,N), conv (B,w-1,C)) for decode.
-    Returns (out, new_state)."""
+    Returns (out, new_state).  With ``return_state`` the chunked (train /
+    prefill) path also returns the post-sequence (h, conv) state so decode
+    can continue from a fused prefill."""
     d_in, H, P, N = _dims(cfg)
     s = cfg.ssm
     B_, S, _ = x_res.shape
@@ -134,7 +137,7 @@ def ssm_block_apply(bp, x_res: Array, cfg: ArchConfig, policy: ApproxPolicy,
             return h_new, h                                # emit h_prev
 
         h0 = jnp.zeros((B_, H, P, N), jnp.float32)
-        _, h_prevs = jax.lax.scan(
+        h_last, h_prevs = jax.lax.scan(
             chunk_scan, h0,
             (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
         h_prevs = jnp.moveaxis(h_prevs, 0, 1)             # (B,nc,H,P,N)
@@ -142,7 +145,7 @@ def ssm_block_apply(bp, x_res: Array, cfg: ArchConfig, policy: ApproxPolicy,
         Y = Y + jnp.einsum("bcqn,bchpn,bcqh->bcqhp", Cc, h_prevs, decay_in)
         Y = Y + bp["D"][None, None, None, :, None] * Xc
         y = Y.reshape(B_, S, d_in)
-        new_state = None
+        new_state = (h_last, new_conv) if return_state else None
 
     y = y.astype(x_res.dtype) * jax.nn.silu(z)
     y = L.rmsnorm_apply(bp["gnorm"], y, cfg.norm_eps)
@@ -200,6 +203,37 @@ def init_ssm_cache(cfg: ArchConfig, tp: int, batch: int, max_len: int,
         conv=jnp.zeros((cfg.n_layers, batch, w - 1, C), dtype),
         length=jnp.zeros((batch,), jnp.int32),
     )
+
+
+def ssm_prefill(params, cfg: ArchConfig, policy: ApproxPolicy,
+                cache: SSMCache, tokens: Array, slot, tp: int = 1, degree=None):
+    """Fused prefill: one chunked-dual-form forward over the whole prompt,
+    final recurrent/conv state written into ``slot``'s cache region.
+
+    tokens: (P,) int32.  Returns (last-position logits (1, V) f32, cache with
+    ``length[slot] = P``).  The slot region is reset first (reuse == fresh).
+    """
+    from repro.models.cache_ops import cache_reset_slot
+
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    cache = cache_reset_slot(cache, slot)
+    P = tokens.shape[0]
+    x = L.embed_apply(params["embed"], tokens[None], dtype)   # (1, P, d)
+
+    def body(h, lp):
+        h2, st = ssm_block_apply(lp, h, cfg, policy, "layer", degree,
+                                 return_state=True)
+        return h2, st
+
+    x, (nh, nc) = jax.lax.scan(body, x, params["layers"])
+    new_cache = SSMCache(
+        h=cache.h.at[:, slot].set(nh[:, 0]),
+        conv=cache.conv.at[:, slot].set(nc[:, 0].astype(cache.conv.dtype)),
+        length=cache.length.at[slot].set(P),
+    )
+    xl = L.rmsnorm_apply(params["ln_f"], x[:, -1:], cfg.norm_eps)
+    logits = L.unembed_apply(params["embed"], xl, policy, "unembed", degree)
+    return logits.astype(jnp.float32)[:, 0], new_cache
 
 
 def ssm_decode_step(params, cfg: ArchConfig, policy: ApproxPolicy,

@@ -106,8 +106,11 @@ def _qkv(bp, x, cfg: ArchConfig, pd, policy, path, positions, degree):
 
 
 def block_apply(bp, x: Array, cfg: ArchConfig, tp: int, policy: ApproxPolicy,
-                path: str, positions: Array, degree=None) -> tuple[Array, Array]:
-    """Returns (x_out, aux_loss)."""
+                path: str, positions: Array, degree=None,
+                return_kv: bool = False):
+    """Returns (x_out, aux_loss), or (x_out, aux_loss, (k, v)) with
+    ``return_kv`` — the post-rope KV the prefill path writes into a slot's
+    cache region, so prefill and decode share one block forward."""
     pd = cfg.padded(tp)
     h = L.rmsnorm_apply(bp["ln1"], x, cfg.norm_eps)
     q, k, v = _qkv(bp, h, cfg, pd, policy, path, positions, degree)
@@ -122,6 +125,8 @@ def block_apply(bp, x: Array, cfg: ArchConfig, tp: int, policy: ApproxPolicy,
         f = L.gated_mlp_apply(bp["mlp"], h, policy, path + "/mlp", cfg.act, degree)
         aux = jnp.zeros((), jnp.float32)
     f = L.shard_activation(f, meshctx.bspec(None, None))
+    if return_kv:
+        return x + f, aux, (k, v)
     return x + f, aux
 
 
@@ -242,6 +247,64 @@ def init_lm_cache(cfg: ArchConfig, tp: int, batch: int, max_len: int,
                         jnp.zeros((batch,), jnp.int32))
     return LMCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
                    jnp.zeros((batch,), jnp.int32))
+
+
+def lm_prefill(params, cfg: ArchConfig, policy: ApproxPolicy, cache,
+               tokens: Array, slot, tp: int = 1, degree=None):
+    """Fused prefill: run the whole prompt through one full forward pass and
+    write its KV into ``slot``'s cache region (positions ``0..P-1``, ring-
+    wrapped for sliding-window caches).  ``slot`` may be a traced scalar;
+    compilation is per prompt length only.
+
+    tokens: (P,) int32, P >= 1.  Returns (last-position logits (1, V) f32,
+    new cache with ``length[slot] = P``).  The slot's region is reset first,
+    so admission into a previously-used slot is equivalent to a fresh slot.
+    """
+    from repro.models.cache_ops import cache_reset_slot, ring_write_indices
+
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    P = tokens.shape[0]
+    quant = isinstance(cache, LMCacheQ)
+    T = cache.k.shape[2]
+    # ring writes are only valid when decode also ring-wraps (window <= T);
+    # a capacity-truncated window cache saturates instead (attention.py)
+    ring = cfg.swa_window is not None and cfg.swa_window <= T
+    if P > T and not ring:
+        raise ValueError(f"prompt ({P}) exceeds cache capacity ({T})")
+    cache = cache_reset_slot(cache, slot)
+    x = L.embed_apply(params["embed"], tokens[None], dtype)       # (1, P, d)
+    positions = jnp.arange(P, dtype=jnp.int32)[None]              # (1, P)
+
+    def body(h, lp):
+        h2, _, kv = block_apply(lp, h, cfg, tp, policy, "layer", positions,
+                                degree, return_kv=True)
+        return h2, kv
+
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"])  # (Lyr, 1, P, KVr, D)
+    src, dst = ring_write_indices(P, T)
+    k_sel, v_sel = ks[:, 0, src], vs[:, 0, src]            # (Lyr, n, KVr, D)
+    if quant:
+        kq, ksc = attn._q8(k_sel)
+        vq, vsc = attn._q8(v_sel)
+        new_cache = LMCacheQ(
+            cache.k.at[:, slot, dst].set(kq),
+            cache.v.at[:, slot, dst].set(vq),
+            cache.ks.at[:, slot, dst].set(ksc),
+            cache.vs.at[:, slot, dst].set(vsc),
+            cache.length.at[slot].set(P),
+        )
+    else:
+        new_cache = LMCache(
+            cache.k.at[:, slot, dst].set(k_sel.astype(cache.k.dtype)),
+            cache.v.at[:, slot, dst].set(v_sel.astype(cache.v.dtype)),
+            cache.length.at[slot].set(P),
+        )
+    xl = L.rmsnorm_apply(params["ln_f"], x[:, -1:], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = L.unembed_apply(params["embed"], xl, policy, "unembed", degree)
+    else:
+        logits = L.dense_apply(params["unembed"], xl, policy, "unembed", degree)
+    return logits.astype(jnp.float32)[:, 0], new_cache
 
 
 def lm_decode_step(params, cfg: ArchConfig, policy: ApproxPolicy, cache: LMCache,

@@ -1,24 +1,45 @@
-"""Batched serving engine: continuous batching over a fixed-slot decode batch.
+"""Continuous-batching serve engine: fused prefill + slot lifecycle.
 
-Requests enter a queue; free slots are (re)filled by prefilling the prompt
-into that slot's cache region; every engine tick runs one fused serve_step
-for all slots.  Slots whose sequence hit EOS/max-len are returned and freed.
+Requests enter a FIFO queue; free slots are (re)filled on admission by ONE
+fused ``model.prefill`` call that rewinds the slot's cache region (length,
+KV, recurrent/conv state) and writes the whole prompt prefix into it; every
+engine tick runs one fused, jit-compiled serve step for all slots.  Free
+slots are masked out of the step — their cache never advances — so a freed
+slot can be handed to the next request with no stale-KV pollution: admission
+into a reused slot is bit-identical to a solo run on a fresh engine.
 
-This is the (b)-deliverable serving driver; serve_step itself is the unit the
-decode dry-run cells lower at production shapes.
+The serve step is a single compiled executable across the whole engine
+lifetime: sampling mode (greedy / top-k) is baked at construction, while the
+PRNG key, temperature, and the DyFXU approximation ``degree`` (Ch. 5 §5.2.3)
+are traced scalars.  An optional :class:`~repro.core.dynamic.QoSController`
+moves the degree with serving load — the dissertation's runtime-configuration
+contract at system level: heavy load -> cheaper arithmetic, idle -> exact.
+
+  eos_id semantics: ``-1`` (the default) disables EOS stopping — no vocab id
+  compares equal.  When set, sampling ``eos_id`` finishes the request; the
+  EOS token itself is neither emitted into ``out_tokens`` nor charged
+  against ``max_new_tokens``.
 """
 
 from __future__ import annotations
 
+import itertools
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.dynamic import QoSController
+from repro.models.cache_ops import cache_mask_update
 from repro.models.registry import Model
+from repro.serve.metrics import EngineStats
+from repro.serve.sampling import sample_tokens
+
+_DEFAULT_EBITS = 8
 
 
 @dataclass
@@ -28,15 +49,37 @@ class Request:
     max_new_tokens: int = 32
     out_tokens: list = field(default_factory=list)
     done: bool = False
+    prefill_tokens: int = 0       # prompt tokens ingested by the fused call
     t_enqueue: float = 0.0
+    t_admitted: float = 0.0
     t_first_token: float = 0.0
     t_done: float = 0.0
+
+    # -- latency breakdown (valid once done) --
+    @property
+    def queue_time(self) -> float:
+        return self.t_admitted - self.t_enqueue
+
+    @property
+    def ttft(self) -> float:
+        return self.t_first_token - self.t_enqueue
+
+    @property
+    def tpot(self) -> float:
+        return (self.t_done - self.t_first_token) / max(len(self.out_tokens) - 1, 1)
+
+    @property
+    def e2e(self) -> float:
+        return self.t_done - self.t_enqueue
 
 
 class ServeEngine:
     def __init__(self, model: Model, params, *, slots: int = 8,
                  max_len: int = 512, eos_id: int = -1, tp: int = 1,
-                 greedy: bool = True):
+                 greedy: bool = True, temperature: float = 1.0,
+                 top_k: int = 0, seed: int = 0,
+                 qos: Optional[QoSController] = None,
+                 degree: Optional[int] = None):
         self.model = model
         self.params = params
         self.slots = slots
@@ -44,77 +87,140 @@ class ServeEngine:
         self.eos_id = eos_id
         self.tp = tp
         self.greedy = greedy
+        self.temperature = temperature
+        self.top_k = top_k
+        self.qos = qos
         self.cache = model.init_cache(tp=tp, batch=slots, max_len=max_len)
         self.slot_req: list[Optional[Request]] = [None] * slots
         self.slot_budget = np.zeros(slots, np.int32)
-        self.queue: list[Request] = []
+        self.queue: deque[Request] = deque()
         self.done: list[Request] = []
+        self.stats = EngineStats()
         self._tokens = np.zeros((slots, 1), np.int32)
-        self._decode = jax.jit(
-            lambda p, c, t: model.decode_step(p, c, t, tp=tp))
+        self._rid = itertools.count()
+        self._ticks = 0
+        self._key = jax.random.PRNGKey(seed)
+        # prompt-length bound: stateful families ingest unbounded prompts;
+        # window caches ring-wrap only while window <= max_len (decode
+        # saturates otherwise — attention.py); dense attention is bounded
+        # by the cache capacity outright
+        cfg = model.cfg
+        window = cfg.local_window if cfg.family == "hybrid" else cfg.swa_window
+        if cfg.family == "ssm" or (window is not None and window <= max_len):
+            self._max_prompt = None
+        else:
+            self._max_prompt = max_len
+        # degree is traced only when someone will drive it; None keeps the
+        # static policy spec (and a leaner step signature).
+        self._use_degree = qos is not None or degree is not None
+        self._degree = (
+            jnp.asarray(_DEFAULT_EBITS if degree is None else degree, jnp.int32)
+            if self._use_degree else None)
+        vocab = model.cfg.vocab
+
+        def serve_step(p, cache, tokens, active, key, temp, deg):
+            logits, new_cache = model.decode_step(p, cache, tokens, tp=tp,
+                                                  degree=deg)
+            # free slots are masked out: length frozen, region unwritten
+            new_cache = cache_mask_update(cache, new_cache, active)
+            nxt = sample_tokens(logits[:, 0, :vocab], key, greedy=greedy,
+                                temperature=temp, top_k=top_k)
+            return nxt, new_cache
+
+        self._step = jax.jit(serve_step)
+        self._prefill = jax.jit(
+            lambda p, c, t, s, deg: model.prefill(p, c, t, s, tp=tp, degree=deg))
+        self._reset = jax.jit(model.reset_slot)
 
     # ------------------------------------------------------------------
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> Request:
-        req = Request(rid=len(self.queue) + len(self.done),
-                      prompt=np.asarray(prompt, np.int32),
+        prompt = np.asarray(prompt, np.int32)
+        if prompt.size == 0:
+            raise ValueError("empty prompt")
+        if self._max_prompt is not None and prompt.size > self._max_prompt:
+            # reject at submit time: raising mid-tick would lose the request
+            raise ValueError(
+                f"prompt length {prompt.size} exceeds cache capacity "
+                f"{self._max_prompt} (max_len)")
+        req = Request(rid=next(self._rid),
+                      prompt=prompt,
                       max_new_tokens=max_new_tokens,
                       t_enqueue=time.time())
         self.queue.append(req)
         return req
 
-    @staticmethod
-    def _merge_slot(old_cache, new_cache, slot: int):
-        """Keep `new_cache` state for `slot` only; other slots keep `old`.
-        Cache NamedTuples put batch at dim 0 for `length`, dim 1 otherwise."""
-        fields = old_cache._fields
-        merged = []
-        for name in fields:
-            o, n = getattr(old_cache, name), getattr(new_cache, name)
-            if name == "length":
-                merged.append(o.at[slot].set(n[slot]))
-            else:
-                merged.append(o.at[:, slot].set(n[:, slot]))
-        return type(old_cache)(*merged)
-
-    def _fill_slot(self, slot: int, req: Request):
-        """Prefill by teacher-forcing the prompt through decode steps, then
-        restore every other slot's cache region (slot isolation) — a
-        production engine would run a fused prefill kernel into the slot."""
+    def _admit(self, slot: int, req: Request):
+        """Reset the slot's cache region and ingest the prompt prefix with
+        one fused prefill call; the final prompt token rides the next fused
+        decode step (it produces the first generated token)."""
+        req.t_admitted = time.time()
+        prompt = req.prompt
+        sl = jnp.asarray(slot, jnp.int32)
+        if prompt.size > 1:
+            _, self.cache = self._prefill(self.params, self.cache,
+                                          jnp.asarray(prompt[:-1]), sl,
+                                          self._degree)
+            req.prefill_tokens = int(prompt.size) - 1
+            self.stats.prefill_tokens += int(prompt.size) - 1
+            self.stats.prefill_calls += 1
+        else:
+            self.cache = self._reset(self.cache, sl)
+        self._tokens[slot, 0] = int(prompt[-1])
         self.slot_req[slot] = req
         self.slot_budget[slot] = req.max_new_tokens
-        snapshot = self.cache
-        cache = self.cache
-        for t in req.prompt[:-1]:
-            toks = self._tokens.copy()
-            toks[slot, 0] = t
-            _, cache = self._decode(self.params, cache, jnp.asarray(toks))
-        self.cache = self._merge_slot(snapshot, cache, slot)
-        self._tokens[slot, 0] = int(req.prompt[-1])
+        self.stats.admitted += 1
+
+    def _update_degree(self, n_active: int):
+        """Feed the QoS controller a load-headroom signal: overload drives
+        the approximation degree down the ladder (cheaper arithmetic), idle
+        capacity drives it back to exact — at fixed compiled executable."""
+        occupancy = (n_active + len(self.queue)) / self.slots
+        headroom = max(0.0, 1.0 - occupancy)
+        kw = self.qos.update(self._ticks, headroom)
+        ebits = int(kw.get("ebits", _DEFAULT_EBITS))
+        self._degree = jnp.asarray(ebits, jnp.int32)
+        self.stats.degree_history.append((self._ticks, ebits))
 
     def tick(self) -> int:
         """One engine iteration; returns number of active slots."""
-        # admit
+        # FIFO admission into free slots
         for s in range(self.slots):
             if self.slot_req[s] is None and self.queue:
-                self._fill_slot(s, self.queue.pop(0))
+                self._admit(s, self.queue.popleft())
         active = [s for s in range(self.slots) if self.slot_req[s] is not None]
         if not active:
             return 0
-        logits, self.cache = self._decode(self.params, self.cache,
-                                          jnp.asarray(self._tokens))
-        nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1), np.int32)
+        if self.qos is not None:
+            self._update_degree(len(active))
+        mask = np.zeros(self.slots, bool)
+        mask[active] = True
+        self._key, sub = jax.random.split(self._key)
+        nxt, self.cache = self._step(self.params, self.cache,
+                                     jnp.asarray(self._tokens),
+                                     jnp.asarray(mask), sub,
+                                     self.temperature, self._degree)
+        nxt = np.asarray(nxt)
+        self._ticks += 1
+        self.stats.decode_steps += 1
+        self.stats.decode_tokens += len(active)
+        now = time.time()
         for s in active:
             req = self.slot_req[s]
             tok = int(nxt[s])
-            if not req.out_tokens:
-                req.t_first_token = time.time()
-            req.out_tokens.append(tok)
-            self._tokens[s, 0] = tok
-            self.slot_budget[s] -= 1
-            if tok == self.eos_id or self.slot_budget[s] <= 0:
+            hit_eos = self.eos_id >= 0 and tok == self.eos_id
+            if not hit_eos:
+                # EOS is never emitted nor charged against the budget; a
+                # request that EOSes before emitting anything keeps
+                # t_first_token == 0 (excluded from TTFT stats)
+                if req.t_first_token == 0.0:
+                    req.t_first_token = now
+                req.out_tokens.append(tok)
+                self._tokens[s, 0] = tok
+                self.slot_budget[s] -= 1
+            if hit_eos or self.slot_budget[s] <= 0:
                 req.done = True
-                req.t_done = time.time()
+                req.t_done = now
                 self.done.append(req)
                 self.slot_req[s] = None
         return len(active)

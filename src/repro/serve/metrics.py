@@ -1,0 +1,68 @@
+"""Serving QoS accounting: per-request latency breakdown + engine counters.
+
+MLPerf-style definitions:
+  queue_time  enqueue -> admission into a slot
+  ttft        enqueue -> first generated token (includes queueing + prefill)
+  tpot        mean inter-token time after the first token
+  e2e         enqueue -> completion
+
+Token accounting is split prefill-vs-decode: prompt tokens are ingested by
+the fused prefill call (plus the final prompt token, which rides the decode
+step that emits the first output token); generated tokens are decode tokens.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+
+
+@dataclass
+class EngineStats:
+    """Engine-lifetime counters (all ticks / admissions)."""
+
+    prefill_tokens: int = 0     # prompt tokens ingested via fused prefill
+    prefill_calls: int = 0      # fused prefill invocations (== admissions P>1)
+    decode_tokens: int = 0      # slot-steps executed by the fused decode step
+    decode_steps: int = 0       # engine ticks that ran the fused step
+    admitted: int = 0           # requests admitted into a slot
+    # recent (tick, ebits) trace; bounded so long-lived engines don't leak
+    degree_history: deque = field(default_factory=lambda: deque(maxlen=512))
+
+
+def _pct(xs, q):
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    i = min(len(xs) - 1, int(round(q * (len(xs) - 1))))
+    return xs[i]
+
+
+def summarize(done, stats: EngineStats | None = None,
+              wall_s: float | None = None) -> dict:
+    """Aggregate finished requests into a flat metrics dict (ms units)."""
+    ttft = [r.ttft for r in done if r.t_first_token > 0]
+    tpot = [r.tpot for r in done if len(r.out_tokens) > 1]
+    queue = [r.queue_time for r in done]
+    gen = sum(len(r.out_tokens) for r in done)
+    out = {
+        "requests": len(done),
+        "generated_tokens": gen,
+        "prompt_tokens": sum(int(r.prompt.size) for r in done),
+        "ttft_p50_ms": round(_pct(ttft, 0.50) * 1e3, 2),
+        "ttft_p95_ms": round(_pct(ttft, 0.95) * 1e3, 2),
+        "tpot_p50_ms": round(_pct(tpot, 0.50) * 1e3, 2),
+        "tpot_p95_ms": round(_pct(tpot, 0.95) * 1e3, 2),
+        "queue_p50_ms": round(_pct(queue, 0.50) * 1e3, 2),
+        "queue_p95_ms": round(_pct(queue, 0.95) * 1e3, 2),
+    }
+    if wall_s is not None and wall_s > 0:
+        out["gen_tok_per_s"] = round(gen / wall_s, 1)
+    if stats is not None:
+        out["engine_prefill_tokens"] = stats.prefill_tokens
+        out["engine_prefill_calls"] = stats.prefill_calls
+        out["engine_decode_tokens"] = stats.decode_tokens
+        out["engine_decode_steps"] = stats.decode_steps
+        if stats.degree_history:
+            out["degree_final_ebits"] = stats.degree_history[-1][1]
+    return out

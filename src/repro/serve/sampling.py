@@ -1,0 +1,34 @@
+"""Token sampling for the fused serve step.
+
+Greedy argmax or temperature/top-k categorical sampling under an explicit
+PRNG key — pure function of (logits, key), so the whole serve step stays a
+single compiled executable and runs are reproducible from the engine seed.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+NEG_INF = -1e30
+
+
+def sample_tokens(logits: Array, key, *, greedy: bool,
+                  temperature=1.0, top_k: int = 0) -> Array:
+    """logits: (B, V) f32 -> (B,) int32 next tokens.
+
+    ``greedy``/``top_k`` are trace-time constants (baked into the compiled
+    step); ``temperature`` and ``key`` are traced, so they can move per tick
+    without recompilation.  Each batch row draws from its own fold of ``key``
+    — co-batched requests never share randomness.
+    """
+    if greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    l = logits.astype(jnp.float32) / jnp.maximum(temperature, 1e-6)
+    if top_k and top_k < l.shape[-1]:
+        vals, _ = jax.lax.top_k(l, top_k)
+        l = jnp.where(l < vals[..., -1:], NEG_INF, l)
+    keys = jax.random.split(key, l.shape[0])
+    return jax.vmap(jax.random.categorical)(keys, l).astype(jnp.int32)

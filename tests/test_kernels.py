@@ -28,6 +28,21 @@ def test_axqmm_matches_ref(shape, e):
                                atol=1e-4)
 
 
+@pytest.mark.parametrize("shape", [(4, 256, 96), (3, 512, 130), (1, 256, 64)])
+def test_axqmm_decode_shapes_pad_to_tile(shape):
+    """Serving-shaped inputs (M = slots, ragged N) must pad to the tile
+    multiple and slice back instead of raising 'shape not tileable'."""
+    M, K, N = shape
+    k = jax.random.PRNGKey(M + K + N)
+    x = jax.random.normal(k, (M, K), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(k, 1), (K, N), jnp.float32)
+    y = axqmm(x, w, block=256)
+    assert y.shape == (M, N)
+    yr = ref.axqmm_ref(x, w, block=256, ebits=8)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-5,
+                               atol=1e-4)
+
+
 def test_axqmm_dynamic_degree_single_executable():
     k = jax.random.PRNGKey(0)
     x = jax.random.normal(k, (128, 512), jnp.float32)

@@ -1,16 +1,25 @@
 import jax
+import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config
+from repro.core.dynamic import QoSController
 from repro.models import build_model
 from repro.serve.engine import ServeEngine
 
+FAMILIES = ["tinyllama-1.1b-smoke", "mamba2-370m-smoke", "recurrentgemma-2b-smoke"]
 
-def _setup():
-    cfg = get_config("tinyllama-1.1b-smoke")
-    m = build_model(cfg)
-    params = m.init(jax.random.PRNGKey(0), tp=1)
-    return m, params
+_CACHE: dict = {}
+
+
+def _setup(arch: str = "tinyllama-1.1b-smoke"):
+    if arch not in _CACHE:
+        cfg = get_config(arch)
+        m = build_model(cfg)
+        params = m.init(jax.random.PRNGKey(0), tp=1)
+        _CACHE[arch] = (m, params)
+    return _CACHE[arch]
 
 
 def test_drains_queue():
@@ -37,3 +46,190 @@ def test_slot_isolation():
     done = busy.run_until_drained()
     got = [r for r in done if r.prompt.tolist() == prompt.tolist()][0].out_tokens
     assert got == ref, (got, ref)
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_slot_reuse_after_free(arch):
+    """A request admitted into a previously-freed slot must produce tokens
+    bit-identical to a solo run on a fresh engine (stale-slot regression)."""
+    m, params = _setup(arch)
+    eng = ServeEngine(m, params, slots=2, max_len=64)
+    eng.submit(np.array([9, 10, 11]), max_new_tokens=6)
+    eng.submit(np.array([3, 4]), max_new_tokens=6)
+    eng.run_until_drained()          # both slots now used and freed
+    prompt = np.array([5, 6, 7, 8])
+    reused = eng.submit(prompt, max_new_tokens=6)
+    eng.run_until_drained()
+
+    fresh = ServeEngine(m, params, slots=2, max_len=64)
+    solo = fresh.submit(prompt, max_new_tokens=6)
+    fresh.run_until_drained()
+    assert reused.out_tokens == solo.out_tokens, (reused.out_tokens,
+                                                  solo.out_tokens)
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_prefill_matches_teacher_forced(arch):
+    """Fused prefill's cache region + last-position logits must agree with
+    teacher-forcing the prompt through per-token decode steps."""
+    m, params = _setup(arch)
+    slots, slot = 3, 1
+    prompt = np.array([5, 6, 7, 8, 9], np.int32)
+    cache_ref = m.init_cache(tp=1, batch=slots, max_len=64)
+    toks = np.zeros((slots, 1), np.int32)
+    logits_ref = None
+    for t in prompt:
+        toks[slot, 0] = t
+        logits_ref, cache_ref = m.decode_step(params, cache_ref,
+                                              jnp.asarray(toks))
+    cache_pf = m.init_cache(tp=1, batch=slots, max_len=64)
+    lp, cache_pf = m.prefill(params, cache_pf, jnp.asarray(prompt),
+                             jnp.int32(slot))
+    lr = np.asarray(logits_ref)[slot, 0]
+    lp = np.asarray(lp)[0]
+    assert int(np.asarray(cache_pf.length)[slot]) == len(prompt)
+    # prefill touches only the target slot's metadata
+    assert np.asarray(cache_pf.length)[[0, 2]].tolist() == [0, 0]
+    assert lp.argmax() == lr.argmax()
+    np.testing.assert_allclose(lp, lr, atol=0.1)
+    # the caches must agree under continued decode, not just at the boundary
+    toks[slot, 0] = int(lr.argmax())
+    l2r, _ = m.decode_step(params, cache_ref, jnp.asarray(toks))
+    l2p, _ = m.decode_step(params, cache_pf, jnp.asarray(toks))
+    a, b = np.asarray(l2r)[slot, 0], np.asarray(l2p)[slot, 0]
+    assert a.argmax() == b.argmax()
+    np.testing.assert_allclose(a, b, atol=0.1)
+
+
+def test_free_slots_masked():
+    """Slots never admitted must not advance: their cache region stays at
+    the init state while other slots serve."""
+    m, params = _setup()
+    eng = ServeEngine(m, params, slots=3, max_len=64)
+    eng.submit(np.array([5, 6, 7, 8]), max_new_tokens=5)
+    eng.run_until_drained()
+    lengths = np.asarray(eng.cache.length)
+    assert lengths[1] == 0 and lengths[2] == 0, lengths
+
+
+def test_sampling_deterministic():
+    """temperature/top-k sampling is reproducible from the engine seed."""
+    m, params = _setup()
+    kw = dict(slots=2, max_len=64, greedy=False, temperature=0.8, top_k=5)
+    a = ServeEngine(m, params, seed=7, **kw)
+    b = ServeEngine(m, params, seed=7, **kw)
+    ra = a.submit(np.array([5, 6, 7, 8]), max_new_tokens=8)
+    rb = b.submit(np.array([5, 6, 7, 8]), max_new_tokens=8)
+    a.run_until_drained()
+    b.run_until_drained()
+    assert ra.out_tokens == rb.out_tokens
+    c = ServeEngine(m, params, seed=8, **kw)
+    rc = c.submit(np.array([5, 6, 7, 8]), max_new_tokens=8)
+    c.run_until_drained()
+    # 8 draws from a 5-way top-k at T=0.8: collision with seed 7 is ~0
+    assert rc.out_tokens != ra.out_tokens
+
+
+def test_rid_unique_with_inflight():
+    """rids stay unique while requests are in flight (monotone counter; the
+    old len(queue)+len(done) scheme collided once slots held requests)."""
+    m, params = _setup()
+    eng = ServeEngine(m, params, slots=2, max_len=64)
+    r0 = eng.submit(np.array([1, 2]), max_new_tokens=6)
+    eng.tick()                        # r0 admitted: queue and done both empty
+    r1 = eng.submit(np.array([3, 4]), max_new_tokens=6)
+    r2 = eng.submit(np.array([5, 6]), max_new_tokens=6)
+    eng.run_until_drained()
+    rids = [r0.rid, r1.rid, r2.rid]
+    assert len(set(rids)) == 3, rids
+    assert rids == sorted(rids)
+
+
+def test_eos_not_emitted_not_charged():
+    """Hitting eos_id finishes the request without emitting the EOS token or
+    charging it against max_new_tokens; eos_id=-1 (default) disables EOS."""
+    m, params = _setup()
+    probe = ServeEngine(m, params, slots=1, max_len=64)
+    r = probe.submit(np.array([5, 6, 7, 8]), max_new_tokens=6)
+    probe.run_until_drained()
+    assert len(r.out_tokens) == 6     # eos disabled: full budget generated
+    eos = r.out_tokens[2]
+    eng = ServeEngine(m, params, slots=1, max_len=64, eos_id=eos)
+    r2 = eng.submit(np.array([5, 6, 7, 8]), max_new_tokens=6)
+    eng.run_until_drained()
+    assert r2.done
+    assert eos not in r2.out_tokens
+    assert r2.out_tokens == r.out_tokens[:r.out_tokens.index(eos)]
+
+
+def test_prompt_capacity_rejected_at_submit():
+    """Oversized prompts fail loudly at submit (a mid-tick failure would
+    drop the request after it left the queue); dense-attention capacity is
+    max_len, stateful families are unbounded."""
+    m, params = _setup()
+    eng = ServeEngine(m, params, slots=1, max_len=16)
+    with pytest.raises(ValueError):
+        eng.submit(np.arange(20), max_new_tokens=4)
+    assert not eng.queue
+    with pytest.raises(ValueError):
+        eng.submit(np.array([], np.int32))
+    m2, params2 = _setup("mamba2-370m-smoke")
+    ssm_eng = ServeEngine(m2, params2, slots=1, max_len=16)
+    r = ssm_eng.submit(np.arange(20) % 100, max_new_tokens=3)
+    ssm_eng.run_until_drained()
+    assert len(r.out_tokens) == 3
+
+
+def test_first_token_eos_excluded_from_ttft():
+    """A request that EOSes before emitting anything reports no first-token
+    time and is excluded from the TTFT aggregate."""
+    m, params = _setup()
+    from repro.serve.metrics import summarize
+
+    probe = ServeEngine(m, params, slots=1, max_len=64)
+    r = probe.submit(np.array([5, 6, 7, 8]), max_new_tokens=3)
+    probe.run_until_drained()
+    eng = ServeEngine(m, params, slots=1, max_len=64, eos_id=r.out_tokens[0])
+    r2 = eng.submit(np.array([5, 6, 7, 8]), max_new_tokens=3)
+    eng.run_until_drained()
+    assert r2.done and r2.out_tokens == []
+    assert r2.t_first_token == 0.0
+    s = summarize([r2])
+    assert s["ttft_p50_ms"] == 0.0
+
+
+def test_qos_degree_moves_with_load():
+    """Overload drives the DyFXU degree down the ladder; the traced degree
+    does not change greedy outputs under the (EXACT) default policy."""
+    m, params = _setup()
+    base = ServeEngine(m, params, slots=2, max_len=64)
+    refs = [base.submit(np.array([1, 2, 3]), 8) for _ in range(6)]
+    base.run_until_drained()
+
+    qos = QoSController(ladder=[{"ebits": 8}, {"ebits": 6}],
+                        low_water=0.5, high_water=0.9, cooldown_steps=0)
+    eng = ServeEngine(m, params, slots=2, max_len=64, qos=qos)
+    outs = [eng.submit(np.array([1, 2, 3]), 8) for _ in range(6)]
+    eng.run_until_drained()
+    ebits_seen = {e for _, e in eng.stats.degree_history}
+    assert 6 in ebits_seen            # overloaded -> approximated harder
+    assert [r.out_tokens for r in outs] == [r.out_tokens for r in refs]
+
+
+def test_metrics_accounting():
+    m, params = _setup()
+    from repro.serve.metrics import summarize
+
+    eng = ServeEngine(m, params, slots=2, max_len=64)
+    for _ in range(3):
+        eng.submit(np.array([1, 2, 3, 4]), max_new_tokens=5)
+    done = eng.run_until_drained()
+    s = summarize(done, eng.stats, wall_s=1.0)
+    assert s["requests"] == 3
+    assert s["generated_tokens"] == 15
+    assert s["prompt_tokens"] == 12
+    assert s["engine_prefill_tokens"] == 9      # 3 admissions x (P-1)
+    assert s["engine_prefill_calls"] == 3
+    assert s["engine_decode_tokens"] >= 15
+    assert all(r.t_first_token >= r.t_admitted >= r.t_enqueue for r in done)
+    assert all(r.t_done >= r.t_first_token for r in done)
