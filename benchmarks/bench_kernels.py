@@ -1,5 +1,10 @@
 """Kernel-level timings + correctness envelopes (CPU interpret mode — TPU is
-the target; numbers prove correctness and degree-scaling, not TPU speed)."""
+the target; numbers prove correctness, degree-scaling, and that the
+skip grids actually skip, not TPU speed).
+
+REPRO_BENCH_TINY=1 shrinks shapes for the CI smoke job.
+"""
+import os
 import time
 
 import jax
@@ -9,12 +14,26 @@ import numpy as np
 from repro.core.quantization import qmm_ref
 from repro.kernels.axqmm import axqmm
 
+_TINY = os.environ.get("REPRO_BENCH_TINY", "0") == "1"
 
-def rows():
+
+def _time(f, reps: int = 3) -> float:
+    def ready(y):
+        (y[0] if isinstance(y, tuple) else y).block_until_ready()
+
+    ready(f())  # warmup/compile outside the timed window
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        ready(f())
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def _axqmm_rows():
     out = []
     k = jax.random.PRNGKey(0)
-    x = jax.random.normal(k, (256, 1024), jnp.float32)
-    w = jax.random.normal(jax.random.fold_in(k, 1), (1024, 256), jnp.float32)
+    M, K, N = (128, 512, 128) if _TINY else (256, 1024, 256)
+    x = jax.random.normal(k, (M, K), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(k, 1), (K, N), jnp.float32)
     exact = x @ w
     for e in (8, 6, 4):
         f = jax.jit(lambda x, w, e=e: axqmm(x, w, ebits=e))
@@ -29,3 +48,77 @@ def rows():
         out.append((f"kern.axqmm_e{e}_vs_ref_maxdiff", 0.0,
                     f"{float(jnp.abs(y-yr).max()):.2e}"))
     return out
+
+
+def _flash_rows():
+    """Skip-grid block-step accounting + timings: the in-kernel counter is
+    the proof the causal/banded grids skip (dense = n^2 steps per BH)."""
+    from repro.kernels.flash_attention import flash_attention, planned_grid_steps
+
+    out = []
+    BH, S, D, blk = (2, 128, 32, 32) if _TINY else (4, 512, 64, 64)
+    k = jax.random.PRNGKey(0)
+    q = jax.random.normal(k, (BH, S, D), jnp.float32)
+    kk = jax.random.normal(jax.random.fold_in(k, 1), (BH, S, D), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(k, 2), (BH, S, D), jnp.float32)
+
+    def run(skip, window=None):
+        return flash_attention(q, kk, v, causal=True, window=window,
+                               bq=blk, bk=blk, skip_grid=skip,
+                               return_steps=True)
+
+    (y_skip, st_skip) = run(True)
+    (y_dense, st_dense) = run(False)
+    assert (np.asarray(y_skip) == np.asarray(y_dense)).all(), \
+        "skip grid output not bit-identical to dense grid"
+    assert int(st_skip) == planned_grid_steps(BH, S, causal=True,
+                                              bq=blk, bk=blk)
+    us_skip = _time(lambda: run(True), reps=3)
+    us_dense = _time(lambda: run(False), reps=3)
+    out.append(("kern.flash_causal_skip_us", round(us_skip, 0),
+                f"steps {int(st_skip)}/{int(st_dense)} (skip/dense)"))
+    out.append(("kern.flash_causal_dense_us", round(us_dense, 0),
+                f"{int(st_dense)} steps"))
+    w = S // 8
+    (_, st_band) = run(True, window=w)
+    us_band = _time(lambda: run(True, w), reps=3)
+    out.append(("kern.flash_banded_w%d_us" % w, round(us_band, 0),
+                f"steps {int(st_band)} (O(S*W) vs {int(st_dense)} dense)"))
+    return out
+
+
+def _decode_rows():
+    """Fused decode kernel vs the jnp full-T einsum it replaces."""
+    from repro.kernels.flash_decode import decode_attn_flash
+    from repro.models import attention as attn
+
+    out = []
+    B, T, KVr, G, D = (4, 64, 2, 2, 32) if _TINY else (8, 256, 2, 2, 64)
+    H = KVr * G
+    k = jax.random.PRNGKey(0)
+    cache = attn.init_kv_cache(B, T, KVr, D, dtype=jnp.float32)
+    cache = cache._replace(
+        k=jax.random.normal(k, cache.k.shape, jnp.float32),
+        v=jax.random.normal(jax.random.fold_in(k, 1), cache.v.shape,
+                            jnp.float32),
+        length=jnp.full((B,), T // 2, jnp.int32))
+    q1 = jax.random.normal(jax.random.fold_in(k, 2), (B, 1, H, D), jnp.float32)
+    kn = jax.random.normal(jax.random.fold_in(k, 3), (B, 1, KVr, D), jnp.float32)
+    vn = jax.random.normal(jax.random.fold_in(k, 4), (B, 1, KVr, D), jnp.float32)
+
+    f_jnp = jax.jit(lambda q, kn, vn, c: attn.decode_attn(q, kn, vn, c)[0])
+    f_pls = jax.jit(lambda q, kn, vn, c: decode_attn_flash(q, kn, vn, c)[0])
+    y_jnp = f_jnp(q1, kn, vn, cache)
+    y_pls = f_pls(q1, kn, vn, cache)
+    maxdiff = float(jnp.abs(y_jnp - y_pls).max())
+    us_jnp = _time(lambda: f_jnp(q1, kn, vn, cache), reps=5)
+    us_pls = _time(lambda: f_pls(q1, kn, vn, cache), reps=5)
+    out.append(("kern.decode_jnp_us", round(us_jnp, 0),
+                f"B{B} T{T} KVr{KVr} G{G} D{D}"))
+    out.append(("kern.decode_flash_us", round(us_pls, 0),
+                f"maxdiff {maxdiff:.2e} vs jnp"))
+    return out
+
+
+def rows():
+    return _axqmm_rows() + _flash_rows() + _decode_rows()

@@ -6,24 +6,34 @@ Row convention (matches run.py header ``name,us_per_call,derived``): the
 tick over all slots), and ``derived`` is the quantity named by the row
 suffix.  The fused prefill + serve step are compiled in a warmup drain
 outside the timed window, so rows track steady-state serving.
+
+A/B over kernel backends: rows are emitted for the jnp (xla) path under the
+PR 2 names (``serve.slots8_*`` — trajectory continuity) and for the Pallas
+path (flash_decode fused step) as ``serve.pallas_slots8_*``.  On CPU the
+Pallas numbers run the interpreter and measure correctness-path overhead,
+not TPU speed.  Standalone: ``python -m benchmarks.bench_serving --kernels
+both``.  REPRO_BENCH_TINY=1 shrinks the workload for the CI smoke job.
 """
+import argparse
+import os
 import time
 
 import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.kernels import dispatch
 from repro.models import build_model
 from repro.serve.engine import ServeEngine
 from repro.serve.metrics import summarize
 
+_TINY = os.environ.get("REPRO_BENCH_TINY", "0") == "1"
 
-def rows():
-    cfg = get_config("tinyllama-1.1b-smoke")
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    out = []
-    for slots in (2, 8):
+
+def _bench_one(model, cfg, params, backend: str, slots: int,
+               requests: int, new_tokens: int):
+    dispatch.set_backend(backend)
+    try:
         eng = ServeEngine(model, params, slots=slots, max_len=128)
         rng = np.random.default_rng(0)
         # warmup: compile fused prefill (per prompt length) + serve step
@@ -33,18 +43,54 @@ def rows():
         steps0 = eng.stats.decode_steps
         pf0, dec0 = eng.stats.prefill_tokens, eng.stats.decode_tokens
         t0 = time.perf_counter()
-        for _ in range(12):
-            eng.submit(rng.integers(0, cfg.vocab, 4), 16)
+        for _ in range(requests):
+            eng.submit(rng.integers(0, cfg.vocab, 4), new_tokens)
         done = eng.run_until_drained()[2:]          # drop warmup requests
         dt = time.perf_counter() - t0
         steps = eng.stats.decode_steps - steps0
         s = summarize(done, eng.stats, wall_s=dt)
         us_per_step = round(dt / max(steps, 1) * 1e6, 1)
-        out.append((f"serve.slots{slots}_gen_tok_per_s", us_per_step,
-                    s["gen_tok_per_s"]))
-        out.append((f"serve.slots{slots}_ttft_p95_ms", 0.0, s["ttft_p95_ms"]))
-        out.append((f"serve.slots{slots}_tpot_p50_ms", 0.0, s["tpot_p50_ms"]))
-        out.append((f"serve.slots{slots}_prefill_vs_decode_tok", 0.0,
-                    f"{eng.stats.prefill_tokens - pf0}"
-                    f"/{eng.stats.decode_tokens - dec0}"))
+        pre = "serve." if backend == "xla" else f"serve.{backend}_"
+        return [
+            (f"{pre}slots{slots}_gen_tok_per_s", us_per_step,
+             s["gen_tok_per_s"]),
+            (f"{pre}slots{slots}_ttft_p95_ms", 0.0, s["ttft_p95_ms"]),
+            (f"{pre}slots{slots}_tpot_p50_ms", 0.0, s["tpot_p50_ms"]),
+            (f"{pre}slots{slots}_prefill_vs_decode_tok", 0.0,
+             f"{eng.stats.prefill_tokens - pf0}"
+             f"/{eng.stats.decode_tokens - dec0}"),
+        ]
+    finally:
+        dispatch.set_backend(None)
+
+
+def rows(kernels=("xla", "pallas")):
+    cfg = get_config("tinyllama-1.1b-smoke")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    slots_list = (2,) if _TINY else (2, 8)
+    requests = 6 if _TINY else 12
+    new_tokens = 8 if _TINY else 16
+    out = []
+    for backend in kernels:
+        for slots in slots_list:
+            out += _bench_one(model, cfg, params, backend, slots,
+                              requests, new_tokens)
     return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--kernels", default="both",
+                    choices=("xla", "pallas", "both"),
+                    help="A/B the jnp decode path vs the fused flash_decode "
+                         "kernel in one run")
+    args = ap.parse_args()
+    kernels = ("xla", "pallas") if args.kernels == "both" else (args.kernels,)
+    print("name,us_per_call,derived")
+    for row in rows(kernels):
+        print(",".join(str(x) for x in row), flush=True)
+
+
+if __name__ == "__main__":
+    main()

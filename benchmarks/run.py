@@ -1,7 +1,40 @@
 """Benchmark harness — one module per dissertation table/figure (DESIGN.md §6).
-Prints ``name,us_per_call,derived`` CSV."""
+Prints ``name,us_per_call,derived`` CSV.
+
+For the perf-tracked modules (bench_kernels, bench_serving) the rows are also
+written to ``benchmarks/BENCH_kernels.json`` / ``benchmarks/BENCH_serving.json``
+— machine-readable perf records (skip-grid block-steps, decode µs/step,
+tok/s) that future PRs regress against.
+"""
+import json
+import pathlib
+import platform
 import sys
+import time
 import traceback
+
+_JSON_MODULES = {"bench_kernels": "BENCH_kernels.json",
+                 "bench_serving": "BENCH_serving.json"}
+
+
+def _write_record(name: str, rows: list) -> None:
+    import os
+
+    import jax
+
+    rec = {
+        "bench": name,
+        "unix_time": int(time.time()),
+        "platform": platform.platform(),
+        "jax_backend": jax.default_backend(),
+        # tiny CI-smoke runs use shrunk shapes: never compare their rows
+        # against a full-shape baseline (row names overlap)
+        "tiny_shapes": os.environ.get("REPRO_BENCH_TINY", "0") == "1",
+        "columns": ["name", "us_per_call", "derived"],
+        "rows": [[str(x) for x in r] for r in rows],
+    }
+    path = pathlib.Path(__file__).parent / _JSON_MODULES[name]
+    path.write_text(json.dumps(rec, indent=1) + "\n")
 
 
 def main() -> None:
@@ -19,8 +52,11 @@ def main() -> None:
         if only and only not in name:
             continue
         try:
-            for row in m.rows():
+            rows = list(m.rows())
+            for row in rows:
                 print(",".join(str(x) for x in row), flush=True)
+            if name in _JSON_MODULES:
+                _write_record(name, rows)
         except Exception:
             failed.append(name)
             traceback.print_exc()

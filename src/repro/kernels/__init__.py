@@ -1,3 +1,5 @@
 """Pallas TPU kernels for the perf-critical compute paths + the approx-matmul
-dispatch (ops.py).  ref.py holds the pure-jnp oracles."""
+dispatch (ops.py) and the attention-kernel backend dispatch (dispatch.py).
+ref.py holds the pure-jnp oracles."""
+from .dispatch import resolved_backend, set_backend  # noqa: F401
 from .ops import approx_matmul  # noqa: F401

@@ -1,0 +1,138 @@
+"""Kernel backend dispatch: the single routing point between the model
+attention call sites and the Pallas kernels (DESIGN.md §8).
+
+Backend selection — ``REPRO_KERNELS`` env var, overridable per-process via
+:func:`set_backend` (``launch.serve``/``launch.train`` ``--kernels`` flag,
+``bench_serving`` A/B):
+
+  pallas   always route qualifying shapes through the Pallas kernels
+           (interpret-mode emulation off-TPU: correctness/step-count work)
+  xla      always the pure-jnp paths (models/attention.py)
+  auto     pallas on TPU, xla elsewhere (default — CPU CI stays on the
+           fast jnp paths, TPU gets the kernels with ``interpret=False``)
+
+``interpret`` is resolved per backend (``jax.default_backend() != "tpu"``)
+instead of the old hardcoded ``True``.
+
+Routing contract:
+
+  * :func:`prefill_attention` — the model-layout (B, S, H, D) GQA entry for
+    full-sequence attention (train forward, fused serve prefill).  Qualifies
+    when causal or un-windowed (the kernel's grids); GQA is flattened to the
+    kernel's (BH, S, D) layout (kv heads repeated — the kernel layout
+    contract; the jnp fallback keeps the grouped never-materialized form).
+    Differentiable: routes through ``flash_attention_vjp``.
+  * :func:`decode_attention` — single-token decode against a KVCache /
+    QuantKVCache, routed to kernels/flash_decode.py with free-slot masking
+    and the runtime ebits degree; falls back to decode_attn(_quant).
+
+``last_route`` records the decision per site for tests/benchmarks.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_vjp
+from repro.kernels.flash_decode import decode_attn_flash
+
+Array = jnp.ndarray
+
+_VALID = ("auto", "pallas", "xla")
+
+_override: Optional[str] = None
+
+#: last routing decision per call site ("prefill" / "decode") — debug aid
+#: for tests and benchmarks, written at trace time.
+last_route: dict = {}
+
+
+def set_backend(name: Optional[str]) -> None:
+    """Process-wide override of ``REPRO_KERNELS`` (None -> back to env).
+    Takes effect for functions traced afterwards (the serve engine traces
+    its fused step at construction, so build engines after switching)."""
+    global _override
+    if name is not None and name not in _VALID:
+        raise ValueError(f"backend must be one of {_VALID}, got {name!r}")
+    _override = name
+
+
+def backend_setting() -> str:
+    setting = _override or os.environ.get("REPRO_KERNELS", "auto")
+    if setting not in _VALID:
+        raise ValueError(
+            f"REPRO_KERNELS must be one of {_VALID}, got {setting!r}")
+    return setting
+
+
+def resolved_backend() -> str:
+    """'pallas' or 'xla' after resolving 'auto' against the live platform."""
+    setting = backend_setting()
+    if setting == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    return setting
+
+
+def use_pallas() -> bool:
+    return resolved_backend() == "pallas"
+
+
+def interpret_mode() -> bool:
+    """Pallas interpret flag for the current platform (auto, not hardcoded).
+    Single source of truth: flash_attention._resolve_interpret (shared by
+    both kernels)."""
+    from repro.kernels.flash_attention import _resolve_interpret
+
+    return _resolve_interpret(None)
+
+
+# ---------------------------------------------------------------------------
+# call-site routers
+# ---------------------------------------------------------------------------
+
+
+def prefill_attention(q: Array, k: Array, v: Array, *, causal: bool,
+                      window: Optional[int] = None) -> Array:
+    """Full-sequence GQA attention, model layout: q (B, S, H, D),
+    k/v (B, S, KVr, D) -> (B, S, H, D)."""
+    from repro.models import attention as attn  # lazy: kernels<->models layering
+
+    B, S, H, D = q.shape
+    qualifies = use_pallas() and S > 1 and (causal or window is None)
+    last_route["prefill"] = "pallas" if qualifies else "xla"
+    if not qualifies:
+        return attn.attn_blockwise(q, k, v, causal=causal, window=window)
+    kf = attn.repeat_kv(k, H)
+    vf = attn.repeat_kv(v, H)
+
+    def flat(x):
+        return x.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+
+    o = flash_attention_vjp(flat(q), flat(kf), flat(vf), causal, window)
+    return o.reshape(B, H, S, D).transpose(0, 2, 1, 3)
+
+
+def decode_attention(q1: Array, knew: Array, vnew: Array, cache, *,
+                     window: Optional[int] = None, degree=None, active=None):
+    """Single-token decode against the cache: q1 (B, 1, H, D),
+    knew/vnew (B, 1, KVr, D) -> (out (B, 1, H, D), advanced cache).
+
+    ``degree``: runtime ebits knob (int8 cache dequant degrade on the pallas
+    path; the jnp path dequantizes exactly).  ``active``: (B,) bool free-slot
+    mask (pallas path zeroes masked outputs; the jnp path computes and lets
+    the engine discard them).
+    """
+    from repro.models import attention as attn
+
+    if use_pallas():
+        last_route["decode"] = "pallas"
+        return decode_attn_flash(q1, knew, vnew, cache, window=window,
+                                 active=active, degree=degree)
+    last_route["decode"] = "xla"
+    if isinstance(cache, attn.QuantKVCache):
+        return attn.decode_attn_quant(q1, knew, vnew, cache, window=window)
+    return attn.decode_attn(q1, knew, vnew, cache, window=window)

@@ -1,28 +1,49 @@
-"""Flash-style attention forward kernel (online softmax, VMEM-tiled).
+"""Flash-style attention forward kernel with computation-skipping grids.
 
-The prefill_32k cells are the attention-heaviest workloads in the assigned
-set; this kernel is their TPU hot-spot implementation: O(S) memory, tiles
-sized for VMEM, MXU-aligned head dims.
+The dissertation's third pillar — *skipping of computations* — applied to the
+attention block walk.  Three grid shapes (DESIGN.md §8):
 
-Layout: q, k, v as (BH, S, D) — batch*heads flattened, GQA groups expanded by
-the caller (models/attention.py keeps the grouped einsum path as the XLA
-fallback; this kernel is the Pallas deployment path).
+  dense  (BH, n, n)         every (q, kv) block pair; non-causal layers and
+                            the bit-identity oracle for the skip grids.
+  tri    (BH, n(n+1)/2)     causal: only lower-triangular block pairs are
+                            *scheduled* (vs. computed-then-masked) — ~2x
+                            fewer block-steps.  The output write rides the
+                            diagonal block, the last step of each q row.
+  band   (BH, n, band)      causal + sliding window: each q block visits the
+                            ceil((window-1)/b)+1 kv blocks its window can
+                            reach => O(S*window) block-steps total.
 
-Grid (bh, i, j): j innermost walks KV blocks for a fixed q block with running
-max/denominator scratch; causal blocks strictly above the diagonal are
-masked (and skipped on TPU via the mask short-circuit).
+All grids produce bit-identical outputs: a scheduled-but-masked entry
+contributes an exact-zero term (exp underflows to 0.0 against a real running
+max), and rows that have seen only masked entries are guarded (``p`` forced
+to 0 while the running max is still NEG_INF), so never scheduling a fully
+masked block leaves the online-softmax state untouched.
 
-VMEM working set per step: bq*D + 2*bk*D + bq*D f32 + softmax scratch
-= (128 + 2*128 + 128)*128*4 B = 256 KiB << 16 MiB.
+Layout: q, k, v as (BH, S, D) — batch*heads flattened; GQA groups are
+expanded by the caller (kernels/dispatch.py flattens the model's grouped
+(B, S, H, D) layout; models/attention.py keeps the grouped einsum path as
+the XLA fallback).  S is zero-padded up to the block multiple and sliced
+back — the axqmm M/N recipe — with padded kv columns masked via the static
+``s_real`` bound, so non-power-of-two sequences take the kernel path instead
+of driving the block-size loop to degenerate tiles.
 
-Validated in interpret mode vs models.attention.attn_full
-(tests/test_kernels.py::test_flash_attention_*).
+``return_steps=True`` additionally returns the number of block-steps the
+grid actually executed, counted *in-kernel*, so benchmarks and tests assert
+the skip happened instead of trusting this docstring
+(tests/test_kernels.py::test_flash_causal_skip_grid_*).
+
+VMEM working set per step: blk*D q + 2*blk*D kv + blk*D f32 acc + softmax
+scratch ~ 4*128*128*4 B = 256 KiB << 16 MiB.
+
+Validated in interpret mode vs :func:`flash_attention_ref` and
+models.attention (tests/test_kernels.py::test_flash_attention_*).
 """
 
 from __future__ import annotations
 
 import functools
 import math
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -34,29 +55,132 @@ Array = jnp.ndarray
 NEG_INF = -1e30
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
-                  *, n_k: int, bq: int, bk: int, causal: bool, scale: float):
-    i = pl.program_id(1)
-    j = pl.program_id(2)
+def _resolve_interpret(interpret: Optional[bool]) -> bool:
+    """None -> auto: compiled path on TPU, interpreter elsewhere (the old
+    hardcoded ``interpret=True`` kept real TPUs on the emulator)."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
 
-    @pl.when(j == 0)
+
+def _block_for(S: int, bq: int, bk: int) -> int:
+    """One block size for q and kv (the triangular grid needs square blocks):
+    the requested tile, shrunk to the next power of two >= S for short
+    sequences so a 3-token prefill doesn't pad to 128."""
+    b = min(bq, bk)
+    if S < b:
+        b = 1 << max(S - 1, 1).bit_length()
+    return b
+
+
+def _tri_ij(t):
+    """Linear step t -> (i, j) in the row-major lower-triangular walk
+    (row i holds i+1 steps at offset i(i+1)/2).  Closed form via isqrt with
+    a +-1 fp-rounding correction; exact for any grid this kernel can run."""
+    t = jnp.asarray(t, jnp.int32)
+    i = ((jnp.sqrt(8.0 * t.astype(jnp.float32) + 1.0) - 1.0) * 0.5).astype(
+        jnp.int32)
+    i = jnp.where((i + 1) * (i + 2) // 2 <= t, i + 1, i)
+    i = jnp.where(i * (i + 1) // 2 > t, i - 1, i)
+    return i, t - i * (i + 1) // 2
+
+
+def _grid_plan(S: int, *, causal: bool, window: Optional[int],
+               bq: int, bk: int, skip_grid: bool):
+    """(kind, blk, n, band): the static schedule flash_attention will run."""
+    blk = _block_for(S, bq, bk)
+    n = -(-S // blk)
+    if window is not None and window >= S:
+        window = None  # window covers the whole sequence: plain causal
+    if causal and window is not None and skip_grid:
+        band = min(n, -(-(window - 1) // blk) + 1)
+        return "band", blk, n, band, window
+    if causal and skip_grid:
+        return "tri", blk, n, 0, window
+    return "dense", blk, n, 0, window
+
+
+def planned_grid_steps(BH: int, S: int, *, causal: bool = True,
+                       window: Optional[int] = None, bq: int = 128,
+                       bk: int = 128, skip_grid: bool = True) -> int:
+    """Static block-step count of the grid :func:`flash_attention` runs for
+    these arguments (dense count: pass ``skip_grid=False``)."""
+    kind, _, n, band, _ = _grid_plan(S, causal=causal, window=window,
+                                     bq=bq, bk=bk, skip_grid=skip_grid)
+    if kind == "tri":
+        return BH * n * (n + 1) // 2
+    if kind == "band":
+        return BH * n * band
+    return BH * n * n
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *rest, kind: str, n: int,
+                  band: int, blk: int, s_real: int, causal: bool,
+                  window: Optional[int], scale: float, count_steps: bool):
+    # rest = (steps_ref?, acc_ref, m_ref, l_ref): the step counter output is
+    # only compiled in when requested (tests/benchmarks), so the production
+    # dispatch path never pays the per-step read-modify-write
+    steps_ref = rest[0] if count_steps else None
+    acc_ref, m_ref, l_ref = rest[-3:]
+    if kind == "tri":
+        t = pl.program_id(1)
+        i, j = _tri_ij(t)
+        first, last = j == 0, j == i
+        grid_start = (pl.program_id(0) == 0) & (t == 0)
+    elif kind == "band":
+        i, jj = pl.program_id(1), pl.program_id(2)
+        j = jnp.maximum(i - (band - 1), 0) + jj
+        first, last = jj == 0, jj == band - 1
+        grid_start = (pl.program_id(0) == 0) & (i == 0) & (jj == 0)
+    else:
+        i, j = pl.program_id(1), pl.program_id(2)
+        first, last = j == 0, j == n - 1
+        grid_start = (pl.program_id(0) == 0) & (i == 0) & (j == 0)
+
+    if count_steps:
+        @pl.when(grid_start)
+        def _zero_steps():
+            steps_ref[0, 0] = 0
+
+        steps_ref[0, 0] += 1
+
+    @pl.when(first)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    q = q_ref[0].astype(jnp.float32) * scale          # (bq, D)
-    k = k_ref[0].astype(jnp.float32)                  # (bk, D)
+    q = q_ref[0].astype(jnp.float32) * scale          # (blk, D)
+    k = k_ref[0].astype(jnp.float32)                  # (blk, D)
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32)  # (bq, bk)
+                            preferred_element_type=jnp.float32)  # (blk, blk)
+
+    rows = i * blk + jax.lax.broadcasted_iota(jnp.int32, (blk, blk), 0)
+    cols = j * blk + jax.lax.broadcasted_iota(jnp.int32, (blk, blk), 1)
+    conds = []
+    if s_real < n * blk:
+        conds.append(cols < s_real)        # zero-padded kv columns
     if causal:
-        rows = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
-        cols = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-        s = jnp.where(cols <= rows, s, NEG_INF)
+        conds.append(cols <= rows)
+    if window is not None:
+        conds.append(cols > rows - window)
+    masked = bool(conds)
+    if masked:
+        m = conds[0]
+        for c in conds[1:]:
+            m = m & c
+        s = jnp.where(m, s, NEG_INF)
 
     m_prev = m_ref[...]
     m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
-    p = jnp.exp(s - m_new)
+    if masked:
+        # rows that have seen only masked entries still carry m == NEG_INF,
+        # where exp(s - m) would be exp(0) = 1: force those terms to zero so
+        # a never-scheduled fully-masked block and a scheduled one leave the
+        # same (untouched) state — the bit-identity contract of the skip grids
+        p = jnp.where(s > 0.5 * NEG_INF, jnp.exp(s - m_new), 0.0)
+    else:
+        p = jnp.exp(s - m_new)
     corr = jnp.exp(m_prev - m_new)
     l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
     m_ref[...] = m_new
@@ -64,56 +188,126 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
     acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
         p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
 
-    @pl.when(j == n_k - 1)
+    @pl.when(last)
     def _done():
         o_ref[0, ...] = (acc_ref[...] /
                          jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("causal", "bq", "bk", "interpret"))
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "bq", "bk", "interpret", "skip_grid", "return_steps"))
 def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
-                    bq: int = 128, bk: int = 128,
-                    interpret: bool = True) -> Array:
-    """q, k, v: (BH, S, D) -> (BH, S, D).  D should be 128-aligned on TPU."""
+                    window: Optional[int] = None, bq: int = 128,
+                    bk: int = 128, interpret: Optional[bool] = None,
+                    skip_grid: bool = True, return_steps: bool = False):
+    """q, k, v: (BH, S, D) -> (BH, S, D); D should be 128-aligned on TPU.
+
+    ``window`` (requires ``causal=True``) applies the sliding-window mask
+    cols > rows - window and — with ``skip_grid`` — the banded grid.
+    ``return_steps`` -> (out, block-steps executed (int32 scalar)).
+    """
+    interpret = _resolve_interpret(interpret)
     BH, S, D = q.shape
-    bq = min(bq, S)
-    while S % bq:
-        bq //= 2
-    bk = min(bk, S)
-    while S % bk:
-        bk //= 2
-    n_q, n_k = S // bq, S // bk
+    if window is not None and not causal:
+        raise NotImplementedError(
+            "sliding-window flash attention requires causal=True "
+            "(dispatch falls back to the jnp path)")
+    kind, blk, n, band, window = _grid_plan(
+        S, causal=causal, window=window, bq=bq, bk=bk, skip_grid=skip_grid)
+    Sp = n * blk
+    if Sp != S:
+        pad = ((0, 0), (0, Sp - S), (0, 0))
+        q, k, v = jnp.pad(q, pad), jnp.pad(k, pad), jnp.pad(v, pad)
     scale = 1.0 / math.sqrt(D)
-    kern = functools.partial(_flash_kernel, n_k=n_k, bq=bq, bk=bk,
-                             causal=causal, scale=scale)
-    return pl.pallas_call(
+
+    if kind == "tri":
+        grid = (BH, n * (n + 1) // 2)
+        qmap = lambda b, t: (b, _tri_ij(t)[0], 0)
+        kvmap = lambda b, t: (b, _tri_ij(t)[1], 0)
+        smap = lambda b, t: (0, 0)
+    elif kind == "band":
+        grid = (BH, n, band)
+        qmap = lambda b, i, jj: (b, i, 0)
+        kvmap = lambda b, i, jj: (b, jnp.maximum(i - (band - 1), 0) + jj, 0)
+        smap = lambda b, i, jj: (0, 0)
+    else:
+        grid = (BH, n, n)
+        qmap = lambda b, i, j: (b, i, 0)
+        kvmap = lambda b, i, j: (b, j, 0)
+        smap = lambda b, i, j: (0, 0)
+
+    kern = functools.partial(_flash_kernel, kind=kind, n=n, band=band,
+                             blk=blk, s_real=S, causal=causal, window=window,
+                             scale=scale, count_steps=return_steps)
+    out_specs = [pl.BlockSpec((1, blk, D), qmap)]
+    out_shape = [jax.ShapeDtypeStruct((BH, Sp, D), q.dtype)]
+    if return_steps:
+        out_specs.append(pl.BlockSpec((1, 1), smap))
+        out_shape.append(jax.ShapeDtypeStruct((1, 1), jnp.int32))
+    res = pl.pallas_call(
         kern,
-        grid=(BH, n_q, n_k),
+        grid=grid,
         in_specs=[
-            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, blk, D), qmap),
+            pl.BlockSpec((1, blk, D), kvmap),
+            pl.BlockSpec((1, blk, D), kvmap),
         ],
-        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[
-            pltpu.VMEM((bq, D), jnp.float32),
-            pltpu.VMEM((bq, 1), jnp.float32),
-            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((blk, D), jnp.float32),
+            pltpu.VMEM((blk, 1), jnp.float32),
+            pltpu.VMEM((blk, 1), jnp.float32),
         ],
         interpret=interpret,
     )(q, k, v)
+    out = res[0][:, :S] if Sp != S else res[0]
+    if return_steps:
+        return out, res[1][0, 0]
+    return out
 
 
-def flash_attention_ref(q: Array, k: Array, v: Array,
-                        causal: bool = True) -> Array:
+# ---------------------------------------------------------------------------
+# differentiable wrapper — forward through the kernel, backward through the
+# jnp oracle (O(S^2) residuals: acceptable at smoke scale; a fused backward
+# kernel is the natural follow-up once training moves to TPU)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention_vjp(q: Array, k: Array, v: Array,
+                        causal: bool, window: Optional[int]) -> Array:
+    return flash_attention(q, k, v, causal=causal, window=window)
+
+
+def _fa_fwd(q, k, v, causal, window):
+    return flash_attention(q, k, v, causal=causal, window=window), (q, k, v)
+
+
+def _fa_bwd(causal, window, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q, k, v: flash_attention_ref(q, k, v, causal=causal,
+                                            window=window), q, k, v)
+    return vjp(g)
+
+
+flash_attention_vjp.defvjp(_fa_fwd, _fa_bwd)
+
+
+def flash_attention_ref(q: Array, k: Array, v: Array, causal: bool = True,
+                        window: Optional[int] = None) -> Array:
     """Pure-jnp oracle (same math as models.attention.attn_full, flat BH)."""
     BH, S, D = q.shape
     s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
                    k.astype(jnp.float32)) / math.sqrt(D)
+    ii = jnp.arange(S)[:, None]
+    jj = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
     if causal:
-        mask = jnp.tril(jnp.ones((S, S), bool))
-        s = jnp.where(mask, s, NEG_INF)
+        mask &= jj <= ii
+    if window is not None:
+        mask &= jj > ii - window
+    s = jnp.where(mask, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

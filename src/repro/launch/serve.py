@@ -18,6 +18,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.dynamic import QoSController
 from repro.dist import meshctx
+from repro.kernels import dispatch as kdispatch
 from repro.models import build_model
 from repro.serve.engine import ServeEngine
 from repro.serve.metrics import summarize
@@ -44,7 +45,13 @@ def main() -> None:
     ap.add_argument("--metrics", action="store_true",
                     help="print the TTFT/TPOT/queue latency summary and "
                          "prefill-vs-decode token accounting")
+    ap.add_argument("--kernels", default=None,
+                    choices=("auto", "pallas", "xla"),
+                    help="attention kernel backend (default: REPRO_KERNELS "
+                         "env or auto = pallas on TPU, xla elsewhere)")
     args = ap.parse_args()
+
+    kdispatch.set_backend(args.kernels)
 
     d, m = (int(x) for x in args.mesh.split("x")[:2])
     meshctx.set_mesh(meshctx.make_mesh((d, m), ("data", "model")))
@@ -68,7 +75,8 @@ def main() -> None:
     dt = time.time() - t0
     s = summarize(done, eng.stats, wall_s=dt)
     print(f"[launch.serve] {s['requests']} reqs, {s['generated_tokens']} "
-          f"generated tokens, {dt:.2f}s ({s['gen_tok_per_s']:.1f} gen tok/s)")
+          f"generated tokens, {dt:.2f}s ({s['gen_tok_per_s']:.1f} gen tok/s) "
+          f"[kernels={kdispatch.resolved_backend()}]")
     if args.metrics:
         for k, v in s.items():
             print(f"[launch.serve]   {k:24s} {v}")

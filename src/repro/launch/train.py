@@ -16,6 +16,7 @@ from repro.core.approx import ApproxMode, ApproxPolicy, ApproxSpec
 from repro.core.dynamic import QoSController
 from repro.data.pipeline import make_pipeline
 from repro.dist import meshctx
+from repro.kernels import dispatch as kdispatch
 from repro.models import build_model
 from repro.train import step as step_mod
 from repro.train.trainer import Trainer, TrainerConfig
@@ -32,7 +33,13 @@ def main() -> None:
     ap.add_argument("--qos", action="store_true")
     ap.add_argument("--compress-grads", action="store_true")
     ap.add_argument("--ckpt-dir", default="checkpoints/launch_train")
+    ap.add_argument("--kernels", default=None,
+                    choices=("auto", "pallas", "xla"),
+                    help="attention kernel backend (default: REPRO_KERNELS "
+                         "env or auto = pallas on TPU, xla elsewhere)")
     args = ap.parse_args()
+
+    kdispatch.set_backend(args.kernels)
 
     d, m = (int(x) for x in args.mesh.split("x")[:2])
     mesh = meshctx.make_mesh((d, m), ("data", "model"))

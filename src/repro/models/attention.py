@@ -1,6 +1,13 @@
 """GQA/MQA attention with blockwise online-softmax (memory-bounded), sliding
 windows, and single-token decode against a KV cache.
 
+These are the pure-jnp (XLA) paths.  Model call sites route through
+``kernels/dispatch.py``, which picks between these and the Pallas kernels
+(``kernels/flash_attention.py`` skip grids for prefill,
+``kernels/flash_decode.py`` for the fused decode step) per backend /
+``REPRO_KERNELS``; everything here doubles as the dispatch fallback and the
+correctness oracle for the kernels (DESIGN.md §8).
+
 Layout conventions:
   q        (B, S, H, D)        H = padded q heads (config.padded(tp))
   k, v     (B, S, KVr, D)      KVr = kv heads repeated/padded to TP degree

@@ -77,15 +77,18 @@ class Model:
         return transformer.init_lm_cache(self.cfg, tp, batch, max_len, dtype,
                                          quant=quant)
 
-    def decode_step(self, params, cache, tokens, tp: int = 1, degree=None):
+    def decode_step(self, params, cache, tokens, tp: int = 1, degree=None,
+                    active=None):
+        """``active`` (B,) bool: free-slot mask forwarded to the attention
+        kernel dispatch (SSM decode has no attention; it ignores it)."""
         if self.cfg.family == "hybrid":
             return rglru.hybrid_decode_step(params, self.cfg, self.policy,
-                                            cache, tokens, tp, degree)
+                                            cache, tokens, tp, degree, active)
         if self.cfg.family == "ssm":
             return ssm.ssm_decode_step(params, self.cfg, self.policy,
                                        cache, tokens, tp, degree)
         return transformer.lm_decode_step(params, self.cfg, self.policy,
-                                          cache, tokens, tp, degree)
+                                          cache, tokens, tp, degree, active)
 
     def prefill(self, params, cache, tokens, slot, tp: int = 1, degree=None):
         """Fused prefill: write prompt ``tokens`` (P,) into ``slot``'s cache

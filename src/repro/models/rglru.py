@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig
 from repro.core.approx import ApproxPolicy
 from repro.dist import meshctx
+from repro.kernels import dispatch as kdispatch
 from repro.models import attention as attn
 from repro.models import layers as L
 
@@ -287,7 +288,7 @@ def hybrid_prefill(params, cfg: ArchConfig, policy: ApproxPolicy,
 
 def hybrid_decode_step(params, cfg: ArchConfig, policy: ApproxPolicy,
                        cache: HybridCache, tokens: Array, tp: int = 1,
-                       degree=None):
+                       degree=None, active=None):
     from repro.models.transformer import _qkv
 
     dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
@@ -320,7 +321,9 @@ def hybrid_decode_step(params, cfg: ArchConfig, policy: ApproxPolicy,
                 cfg_l = dataclasses.replace(cfg, swa_window=cfg.local_window)
                 q, k, v = _qkv(bp, hn, cfg_l, pd, policy, "g", positions, degree)
                 lc = attn.KVCache(ck, cv, cache.length)
-                o, lc2 = attn.decode_attn(q, k, v, lc, window=cfg.local_window)
+                o, lc2 = kdispatch.decode_attention(
+                    q, k, v, lc, window=cfg.local_window, degree=degree,
+                    active=active)
                 o = o.reshape(B, 1, pd.n_heads * cfg.head_dim)
                 o = L.dense_apply(bp["wo"], o, policy, "g/wo", degree)
                 h = h + o

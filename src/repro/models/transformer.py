@@ -23,6 +23,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ArchConfig
 from repro.core.approx import ApproxPolicy
 from repro.dist import meshctx
+from repro.kernels import dispatch as kdispatch
 from repro.models import attention as attn
 from repro.models import layers as L
 from repro.models import moe as moe_mod
@@ -114,7 +115,8 @@ def block_apply(bp, x: Array, cfg: ArchConfig, tp: int, policy: ApproxPolicy,
     pd = cfg.padded(tp)
     h = L.rmsnorm_apply(bp["ln1"], x, cfg.norm_eps)
     q, k, v = _qkv(bp, h, cfg, pd, policy, path, positions, degree)
-    o = attn.attn_blockwise(q, k, v, causal=cfg.causal, window=cfg.swa_window)
+    o = kdispatch.prefill_attention(q, k, v, causal=cfg.causal,
+                                    window=cfg.swa_window)
     o = o.reshape(x.shape[0], x.shape[1], pd.n_heads * cfg.head_dim)
     o = L.dense_apply(bp["wo"], o, policy, path + "/wo", degree)
     x = x + o
@@ -308,8 +310,10 @@ def lm_prefill(params, cfg: ArchConfig, policy: ApproxPolicy, cache,
 
 
 def lm_decode_step(params, cfg: ArchConfig, policy: ApproxPolicy, cache: LMCache,
-                   tokens: Array, tp: int = 1, degree=None) -> tuple[Array, LMCache]:
-    """tokens: (B, 1).  One decode step; returns (logits (B, 1, V), cache)."""
+                   tokens: Array, tp: int = 1, degree=None,
+                   active=None) -> tuple[Array, LMCache]:
+    """tokens: (B, 1).  One decode step; returns (logits (B, 1, V), cache).
+    ``active`` (B,) bool: free-slot mask forwarded to the kernel dispatch."""
     dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
     pd = cfg.padded(tp)
     B = tokens.shape[0]
@@ -327,12 +331,11 @@ def lm_decode_step(params, cfg: ArchConfig, policy: ApproxPolicy, cache: LMCache
         q, k, v = _qkv(lp, hn, cfg, pd, policy, "layer", positions, degree)
         if quant:
             lc = attn.QuantKVCache(ck, cv, cks, cvs, cache.length)
-            o, lc2 = attn.decode_attn_quant(q, k, v, lc, window=cfg.swa_window)
-            new = (lc2.k, lc2.v, lc2.ks, lc2.vs)
         else:
             lc = attn.KVCache(ck, cv, cache.length)
-            o, lc2 = attn.decode_attn(q, k, v, lc, window=cfg.swa_window)
-            new = (lc2.k, lc2.v)
+        o, lc2 = kdispatch.decode_attention(q, k, v, lc, window=cfg.swa_window,
+                                            degree=degree, active=active)
+        new = (lc2.k, lc2.v, lc2.ks, lc2.vs) if quant else (lc2.k, lc2.v)
         o = o.reshape(B, 1, pd.n_heads * cfg.head_dim)
         o = L.dense_apply(lp["wo"], o, policy, "layer/wo", degree)
         h = h + o

@@ -120,7 +120,7 @@ class ServeEngine:
 
         def serve_step(p, cache, tokens, active, key, temp, deg):
             logits, new_cache = model.decode_step(p, cache, tokens, tp=tp,
-                                                  degree=deg)
+                                                  degree=deg, active=active)
             # free slots are masked out: length frozen, region unwritten
             new_cache = cache_mask_update(cache, new_cache, active)
             nxt = sample_tokens(logits[:, 0, :vocab], key, greedy=greedy,

@@ -1,0 +1,121 @@
+"""flash_decode vs the jnp decode paths: dense, ring wraparound, int8
+dequant-in-kernel with the runtime ebits degree, and freed-slot masking."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_decode import decode_attn_flash
+from repro.models import attention as attn
+
+B, T, KVr, D, H = 3, 32, 2, 16, 4
+KEY = jax.random.PRNGKey(0)
+
+
+def _filled_cache(lengths, quant=False, window=None):
+    """Fill a cache through the real decode write path, then pin per-slot
+    lengths (mixed fill levels, like a live engine)."""
+    if quant:
+        c = attn.init_quant_kv_cache(B, T, KVr, D)
+    else:
+        c = attn.init_kv_cache(B, T, KVr, D, dtype=jnp.float32)
+    for t in range(max(lengths)):
+        q1 = jax.random.normal(jax.random.fold_in(KEY, 100 + t),
+                               (B, 1, H, D), jnp.float32)
+        kn = jax.random.normal(jax.random.fold_in(KEY, 200 + t),
+                               (B, 1, KVr, D), jnp.float32)
+        vn = jax.random.normal(jax.random.fold_in(KEY, 300 + t),
+                               (B, 1, KVr, D), jnp.float32)
+        step = attn.decode_attn_quant if quant else attn.decode_attn
+        _, c = step(q1, kn, vn, c, window=window)
+    return c._replace(length=jnp.asarray(lengths, jnp.int32))
+
+
+def _qkv():
+    q1 = jax.random.normal(KEY, (B, 1, H, D), jnp.float32)
+    kn = jax.random.normal(jax.random.fold_in(KEY, 1), (B, 1, KVr, D),
+                           jnp.float32)
+    vn = jax.random.normal(jax.random.fold_in(KEY, 2), (B, 1, KVr, D),
+                           jnp.float32)
+    return q1, kn, vn
+
+
+@pytest.mark.parametrize("window,lengths", [
+    (None, [0, 5, 31]),        # dense cache, mixed fill incl. empty slot
+    (None, [40, 33, 50]),      # saturated (length past capacity)
+    (32, [40, 33, 7]),         # ring buffer, wrapped slots
+    (8, [3, 50, 12]),          # ring with window < T
+])
+def test_flash_decode_matches_decode_attn(window, lengths):
+    cache = _filled_cache(lengths, window=window)
+    q1, kn, vn = _qkv()
+    o_ref, c_ref = attn.decode_attn(q1, kn, vn, cache, window=window)
+    o, c2 = decode_attn_flash(q1, kn, vn, cache, window=window)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), atol=1e-5)
+    assert (np.asarray(c2.k) == np.asarray(c_ref.k)).all()
+    assert (np.asarray(c2.v) == np.asarray(c_ref.v)).all()
+    assert (np.asarray(c2.length) == np.asarray(c_ref.length)).all()
+
+
+def test_flash_decode_quant_matches_decode_attn_quant():
+    cache = _filled_cache([4, 18, 31], quant=True)
+    q1, kn, vn = _qkv()
+    o_ref, c_ref = attn.decode_attn_quant(q1, kn, vn, cache)
+    o8, c2 = decode_attn_flash(q1, kn, vn, cache, degree=8)
+    np.testing.assert_allclose(np.asarray(o8), np.asarray(o_ref), atol=1e-5)
+    assert (np.asarray(c2.k) == np.asarray(c_ref.k)).all()
+    assert (np.asarray(c2.ks) == np.asarray(c_ref.ks)).all()
+
+
+def test_flash_decode_quant_runtime_degree():
+    """ebits < 8 must actually degrade (DyFXU knob reaches the kernel) and
+    stay a single executable with the degree traced."""
+    cache = _filled_cache([4, 18, 31], quant=True)
+    q1, kn, vn = _qkv()
+    f = jax.jit(lambda q, kn, vn, c, e: decode_attn_flash(
+        q, kn, vn, c, degree=e)[0])
+    y8 = f(q1, kn, vn, cache, jnp.int32(8))
+    y4 = f(q1, kn, vn, cache, jnp.int32(4))
+    assert float(jnp.abs(y8 - y4).max()) > 1e-4
+
+
+def test_flash_decode_freed_slot_masking():
+    cache = _filled_cache([4, 18, 31])
+    q1, kn, vn = _qkv()
+    act = jnp.asarray([True, False, True])
+    o, _ = decode_attn_flash(q1, kn, vn, cache, active=act)
+    o_all, _ = decode_attn_flash(q1, kn, vn, cache)
+    assert (np.asarray(o[1]) == 0).all()          # freed slot: exact zeros
+    np.testing.assert_array_equal(np.asarray(o[0]), np.asarray(o_all[0]))
+    np.testing.assert_array_equal(np.asarray(o[2]), np.asarray(o_all[2]))
+
+
+@pytest.mark.parametrize("quant", [False, True])
+def test_flash_decode_odd_cache_capacity(quant):
+    """Non-power-of-two T must keep full-width tiles (ragged final tile,
+    masked in-kernel) instead of degrading toward 1-token tiles — and stay
+    NaN-free past the valid length."""
+    Todd = 135            # > bt=128: ragged final tile with OOB lanes
+    if quant:
+        c = attn.init_quant_kv_cache(B, Todd, KVr, D)
+        step = attn.decode_attn_quant
+    else:
+        c = attn.init_kv_cache(B, Todd, KVr, D, dtype=jnp.float32)
+        step = attn.decode_attn
+    for t in range(9):
+        q1 = jax.random.normal(jax.random.fold_in(KEY, 400 + t),
+                               (B, 1, H, D), jnp.float32)
+        kn = jax.random.normal(jax.random.fold_in(KEY, 500 + t),
+                               (B, 1, KVr, D), jnp.float32)
+        vn = jax.random.normal(jax.random.fold_in(KEY, 600 + t),
+                               (B, 1, KVr, D), jnp.float32)
+        _, c = step(q1, kn, vn, c)
+    c = c._replace(length=jnp.asarray([2, 99, 134], jnp.int32))
+    q1, kn, vn = _qkv()
+    if quant:
+        o_ref, _ = attn.decode_attn_quant(q1, kn, vn, c)
+    else:
+        o_ref, _ = attn.decode_attn(q1, kn, vn, c)
+    o, _ = decode_attn_flash(q1, kn, vn, c)
+    assert np.isfinite(np.asarray(o)).all()
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), atol=1e-5)
