@@ -1,0 +1,98 @@
+"""GEMM-side perf trajectory: quantize-once weight residency x fused
+epilogues on the gated-MLP hot-path shape (DESIGN.md §9).
+
+A/B grid (prepack on/off x fused on/off), all timed through the axqmm Pallas
+kernels (interpret mode on CPU — the relative ordering is the claim there;
+TPU runs the compiled kernels):
+
+  fly_unfused     the seed cost model: three on-the-fly GEMM calls
+                  (weights re-quantized+transposed per call), gate applied
+                  between HBM roundtrips, residual added outside
+  fly_fused       fused gated kernel + fused residual epilogue, but weights
+                  still quantized per call
+  packed_unfused  prepacked weights, three separate kernel calls
+  packed_fused    the PR 4 serve path: prepacked weights + fused gated
+                  kernel + residual epilogue — per-call work is activation
+                  quantization only
+
+``prepack_us`` is the one-time load-cost the residency layer moves out of
+the steady-state loop.  The module asserts packed_fused strictly beats
+fly_unfused — the committed BENCH_gemm.json row pair is the regression
+anchor for the GEMM trajectory.
+"""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.axqmm import axqmm, axqmm_gated, axqmm_gated_packed, axqmm_packed
+from repro.kernels.qstore import prepack_weight
+
+_TINY = os.environ.get("REPRO_BENCH_TINY", "0") == "1"
+
+
+def _time(f, reps: int = 5) -> float:
+    f().block_until_ready()              # warmup/compile outside the window
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        f().block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def rows():
+    M, d, d_ff = (64, 256, 512) if _TINY else (128, 512, 1024)
+    blk = 256
+    k = jax.random.PRNGKey(0)
+    x = jax.random.normal(k, (M, d), jnp.float32)
+    wu = jax.random.normal(jax.random.fold_in(k, 1), (d, d_ff), jnp.float32)
+    wg = jax.random.normal(jax.random.fold_in(k, 2), (d, d_ff), jnp.float32)
+    wd = jax.random.normal(jax.random.fold_in(k, 3), (d_ff, d), jnp.float32)
+    res = jax.random.normal(jax.random.fold_in(k, 4), (M, d), jnp.float32)
+
+    t0 = time.perf_counter()
+    pu, pg, pd_ = (prepack_weight(wu, blk), prepack_weight(wg, blk),
+                   prepack_weight(wd, blk))
+    jax.block_until_ready((pu, pg, pd_))
+    prepack_us = (time.perf_counter() - t0) * 1e6
+
+    @jax.jit
+    def fly_unfused(x, wu, wg, wd, res):
+        up = axqmm(x, wu, block=blk)
+        gate = axqmm(x, wg, block=blk)
+        h = jax.nn.silu(gate) * up
+        return axqmm(h, wd, block=blk) + res
+
+    @jax.jit
+    def fly_fused(x, wu, wg, wd, res):
+        h = axqmm_gated(x, wu, wg, block=blk)
+        return axqmm(h, wd, block=blk, residual=res)
+
+    @jax.jit
+    def packed_unfused(x, res):
+        up = axqmm_packed(x, pu)
+        gate = axqmm_packed(x, pg)
+        h = jax.nn.silu(gate) * up
+        return axqmm_packed(h, pd_) + res
+
+    @jax.jit
+    def packed_fused(x, res):
+        h = axqmm_gated_packed(x, pu, pg)
+        return axqmm_packed(h, pd_, residual=res)
+
+    us = {
+        "fly_unfused": _time(lambda: fly_unfused(x, wu, wg, wd, res)),
+        "fly_fused": _time(lambda: fly_fused(x, wu, wg, wd, res)),
+        "packed_unfused": _time(lambda: packed_unfused(x, res)),
+        "packed_fused": _time(lambda: packed_fused(x, res)),
+    }
+    assert us["packed_fused"] < us["fly_unfused"], (
+        "prepacked+fused must beat the on-the-fly three-call path", us)
+    shape = f"M{M} d{d} dff{d_ff} b{blk}"
+    out = [(f"gemm.mlp_{name}_us", round(v, 0),
+            shape if name == "fly_unfused"
+            else f"{us['fly_unfused'] / v:.2f}x vs fly_unfused")
+           for name, v in us.items()]
+    out.append(("gemm.prepack_us", round(prepack_us, 0),
+                "one-time load cost (quantize-once)"))
+    return out

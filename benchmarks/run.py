@@ -14,7 +14,8 @@ import time
 import traceback
 
 _JSON_MODULES = {"bench_kernels": "BENCH_kernels.json",
-                 "bench_serving": "BENCH_serving.json"}
+                 "bench_serving": "BENCH_serving.json",
+                 "bench_gemm": "BENCH_gemm.json"}
 
 
 def _write_record(name: str, rows: list) -> None:
@@ -39,11 +40,11 @@ def _write_record(name: str, rows: list) -> None:
 
 def main() -> None:
     from benchmarks import (bench_cnn, bench_dlsb, bench_dsp, bench_dynamic,
-                            bench_kernels, bench_pareto, bench_pr, bench_rad,
-                            bench_serving)
+                            bench_gemm, bench_kernels, bench_pareto, bench_pr,
+                            bench_rad, bench_serving)
 
     mods = [bench_dlsb, bench_rad, bench_pr, bench_dynamic, bench_pareto,
-            bench_dsp, bench_cnn, bench_kernels, bench_serving]
+            bench_dsp, bench_cnn, bench_kernels, bench_gemm, bench_serving]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")
     failed = []

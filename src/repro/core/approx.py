@@ -108,3 +108,17 @@ class ApproxPolicy:
 
 def uniform(spec: ApproxSpec) -> ApproxPolicy:
     return ApproxPolicy(rules=[], default=spec)
+
+
+def policy_from_flag(approx: str, dynamic: bool = False) -> ApproxPolicy:
+    """One parser for the launchers' ``--approx`` flag: ``exact`` or ``axqN``
+    (N in 1..8) -> a uniform policy.  Shared by launch.train and launch.serve
+    so a model trained at a degree serves at the same spec (same block)."""
+    if approx == "exact":
+        return ApproxPolicy()
+    m = re.fullmatch(r"axq([1-8])", approx)
+    if not m:
+        raise ValueError(
+            f"--approx must be 'exact' or axqN with N in 1..8, got {approx!r}")
+    return uniform(ApproxSpec(mode=ApproxMode.AXQ, ebits=int(m.group(1)),
+                              dynamic=dynamic))

@@ -78,22 +78,24 @@ def dequantize(qt: QTensor) -> Array:
     return (v * qt.scales[..., None]).reshape(*lead, K)
 
 
-def qmm_ref(x: Array, w: Array, block: int = 256, ebits: int = 8,
-            out_dtype=jnp.float32) -> Array:
-    """Reference block-quantized matmul x @ w with effective-bits degradation.
+def qmm_packed_ref(x: Array, qw: Array, sw: Array, ebits=8,
+                   out_dtype=jnp.float32) -> Array:
+    """Reference block-quantized matmul against a *prepacked* K-major weight.
 
-    x: (M, K) float; w: (K, N) float.  Quantizes both along K, degrades to
-    `ebits`, accumulates per-block int32 dot products scaled by the block
-    scales.  This is the pure-jnp oracle for kernels/axqmm.py.
+    x: (M, K) float; qw: (N, K) int8; sw: (N, K // block) f32 — the
+    quantize-once residency form (kernels/qstore.py).  Only the activation is
+    quantized in-trace; both operands are degraded to `ebits` and accumulated
+    as per-block int32 dots scaled by the block scales.  This is the pure-jnp
+    oracle for kernels/axqmm.py and the xla route of the GEMM dispatch.
     """
     M, K = x.shape
-    K2, N = w.shape
-    assert K == K2
-    nb = K // block
+    N, K2 = qw.shape
+    assert K == K2, (K, K2)
+    nb = sw.shape[-1]
+    block = K // nb
     qx = quantize_block(x, block)      # values (M,K), scales (M,nb)
-    qw = quantize_block(w.T, block)    # values (N,K), scales (N,nb)
     vx = degrade(qx.values, ebits).reshape(M, nb, block)
-    vw = degrade(qw.values, ebits).reshape(N, nb, block)
+    vw = degrade(qw, ebits).reshape(N, nb, block)
     # per-block integer dot: (M, N, nb)
     acc = jnp.einsum(
         "mbk,nbk->mnb",
@@ -101,8 +103,44 @@ def qmm_ref(x: Array, w: Array, block: int = 256, ebits: int = 8,
         vw.astype(jnp.int32),
         preferred_element_type=jnp.int32,
     ).astype(jnp.float32)
-    scale = qx.scales[:, None, :] * qw.scales[None, :, :]
+    scale = qx.scales[:, None, :] * sw[None, :, :]
     return jnp.sum(acc * scale, axis=-1).astype(out_dtype)
+
+
+def qmm_ref(x: Array, w: Array, block: int = 256, ebits: int = 8,
+            out_dtype=jnp.float32) -> Array:
+    """Reference block-quantized matmul x @ w with effective-bits degradation.
+
+    x: (M, K) float; w: (K, N) float.  Quantizes the weight on the fly (the
+    same ``quantize_block`` the prepack pass runs once) and defers to
+    :func:`qmm_packed_ref` — prepacked and on-the-fly execution share one
+    graph from the quantized operands on, so their outputs are bit-identical.
+    """
+    K2 = w.shape[0]
+    assert x.shape[-1] == K2
+    qw = quantize_block(w.T, block)    # values (N,K), scales (N,nb)
+    return qmm_packed_ref(x, qw.values, qw.scales, ebits, out_dtype)
+
+
+def qmm_gated_packed_ref(x: Array, qw_up: Array, sw_up: Array, qw_gate: Array,
+                         sw_gate: Array, act, ebits=8,
+                         out_dtype=jnp.float32) -> Array:
+    """Fused gated-MLP first half against prepacked weights:
+    ``act(x @ w_gate) * (x @ w_up)`` with both GEMMs sharing the one in-trace
+    activation quantization.  jnp oracle for axqmm_gated."""
+    up = qmm_packed_ref(x, qw_up, sw_up, ebits)
+    gate = qmm_packed_ref(x, qw_gate, sw_gate, ebits)
+    return (act(gate) * up).astype(out_dtype)
+
+
+def qmm_gated_ref(x: Array, w_up: Array, w_gate: Array, act, block: int = 256,
+                  ebits: int = 8, out_dtype=jnp.float32) -> Array:
+    """On-the-fly variant of :func:`qmm_gated_packed_ref` (three-call
+    oracle's math, one function)."""
+    qu = quantize_block(w_up.T, block)
+    qg = quantize_block(w_gate.T, block)
+    return qmm_gated_packed_ref(x, qu.values, qu.scales, qg.values, qg.scales,
+                                act, ebits, out_dtype)
 
 
 def pow2_weights(w: Array) -> Array:

@@ -16,11 +16,24 @@ TPU mapping (VMEM/MXU co-design, the Ch. 9 scratchpad-scheduling insight):
   * working set per step: bm*bk + bn*bk int8 + 2*bm*bn f32
     = 2*128*512 + 2*128*128*4 bytes ~ 260 KiB << 16 MiB VMEM.
 
-Layout contract: w is passed K-major as (N, K) ("wT") so both operands stream
-contiguous k-blocks.  ops.py handles transpose + quantization.
+Weight residency (DESIGN.md §9): the weight operand arrives *prepacked* as a
+:class:`~repro.kernels.qstore.PackedQWeight` — ``(N, K)`` int8 K-major plus
+``(N, K//bk)`` f32 scales, quantized once at load time — so the per-call work
+is activation quantization only.  The float-``w`` wrappers below pack
+on-the-fly through the same code path (bit-identical by construction).
 
-Validated against kernels/ref.py (pure-jnp oracle) in interpret mode on CPU
-across shape/degree sweeps (tests/test_kernels.py).
+Fused epilogues ride the last k grid step while the output tile is still in
+VMEM:
+  * :func:`axqmm_packed` — optional bias (+b) and residual (+r) added in f32
+    before the single writeback (down/out projections fuse the residual add);
+  * :func:`axqmm_gated` / :func:`axqmm_gated_packed` — the gated-MLP first
+    half ``act(x@w_gate) * (x@w_up)``: both GEMMs stream the *same* x tile
+    (quantized and degraded once per step), keep two accumulators, and apply
+    the gate in-VMEM — one HBM roundtrip instead of three.
+
+Validated against core.quantization.qmm_packed_ref / qmm_gated_packed_ref
+(pure-jnp oracles) in interpret mode on CPU (tests/test_kernels.py,
+tests/test_qstore.py).
 """
 
 from __future__ import annotations
@@ -32,7 +45,20 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.quantization import quantize_block
+from repro.kernels.qstore import PackedQWeight, prepack_weight, resolve_block
+
 Array = jnp.ndarray
+
+_ACTS = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}
+
+
+def _resolve_interpret(interpret):
+    if interpret is None:
+        from repro.kernels.flash_attention import _resolve_interpret as r
+
+        return r(None)
+    return interpret
 
 
 def _degrade_tile(q: Array, shift: Array) -> Array:
@@ -44,14 +70,9 @@ def _degrade_tile(q: Array, shift: Array) -> Array:
     return jnp.clip(out, -127, 127)
 
 
-def _axqmm_kernel(ebits_ref, qx_ref, sx_ref, qw_ref, sw_ref, out_ref, acc_ref,
-                  *, n_k: int):
-    k = pl.program_id(2)
-
-    @pl.when(k == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
+def _step_dot(ebits_ref, qx_ref, qw_ref, sx_ref, sw_ref):
+    """One k-step partial product: degrade both int tiles to the runtime
+    effective bits, s8 x s8 -> s32 dot, scale by the block scales."""
     shift = jnp.maximum(8 - ebits_ref[0], 0)
     qx = _degrade_tile(qx_ref[...].astype(jnp.int32), shift)
     qw = _degrade_tile(qw_ref[...].astype(jnp.int32), shift)
@@ -62,11 +83,65 @@ def _axqmm_kernel(ebits_ref, qx_ref, sx_ref, qw_ref, sw_ref, out_ref, acc_ref,
         preferred_element_type=jnp.int32,
     )
     scale = sx_ref[...] * sw_ref[...].T          # (bm,1)*(1,bn) -> (bm,bn)
-    acc_ref[...] += acc.astype(jnp.float32) * scale
+    return acc.astype(jnp.float32) * scale
+
+
+def _axqmm_kernel(ebits_ref, qx_ref, sx_ref, qw_ref, sw_ref, *rest,
+                  n_k: int, has_bias: bool, has_res: bool):
+    idx = 0
+    bias_ref = rest[idx] if has_bias else None
+    idx += int(has_bias)
+    res_ref = rest[idx] if has_res else None
+    idx += int(has_res)
+    out_ref, acc_ref = rest[idx], rest[idx + 1]
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += _step_dot(ebits_ref, qx_ref, qw_ref, sx_ref, sw_ref)
 
     @pl.when(k == n_k - 1)
     def _done():
-        out_ref[...] = acc_ref[...]
+        # fused epilogue: the output tile is still in VMEM — bias and
+        # residual are added in f32 before the one writeback
+        y = acc_ref[...]
+        if has_bias:
+            y = y + bias_ref[...]                # (1,bn) broadcasts over bm
+        if has_res:
+            y = y + res_ref[...]
+        out_ref[...] = y
+
+
+def _axqmm_gated_kernel(ebits_ref, qx_ref, sx_ref, qu_ref, su_ref,
+                        qg_ref, sg_ref, out_ref, accu_ref, accg_ref,
+                        *, n_k: int, act: str):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        accu_ref[...] = jnp.zeros_like(accu_ref)
+        accg_ref[...] = jnp.zeros_like(accg_ref)
+
+    # the x tile is streamed (and degraded) ONCE per step for both GEMMs
+    shift = jnp.maximum(8 - ebits_ref[0], 0)
+    qx = _degrade_tile(qx_ref[...].astype(jnp.int32), shift)
+    qu = _degrade_tile(qu_ref[...].astype(jnp.int32), shift)
+    qg = _degrade_tile(qg_ref[...].astype(jnp.int32), shift)
+    dn = (((1,), (1,)), ((), ()))
+    up = jax.lax.dot_general(qx, qu, dimension_numbers=dn,
+                             preferred_element_type=jnp.int32)
+    gt = jax.lax.dot_general(qx, qg, dimension_numbers=dn,
+                             preferred_element_type=jnp.int32)
+    accu_ref[...] += up.astype(jnp.float32) * (sx_ref[...] * su_ref[...].T)
+    accg_ref[...] += gt.astype(jnp.float32) * (sx_ref[...] * sg_ref[...].T)
+
+    @pl.when(k == n_k - 1)
+    def _done():
+        # in-VMEM gate: act(gate) * up written back once — the intermediate
+        # up/gate tensors never round-trip through HBM
+        out_ref[...] = _ACTS[act](accg_ref[...]) * accu_ref[...]
 
 
 @functools.partial(
@@ -76,73 +151,174 @@ def axqmm_quantized(qx: Array, sx: Array, qwT: Array, sw: Array,
                     bk: int = 512, interpret: bool = True) -> Array:
     """qx: (M, K) int8; sx: (M, K//bk) f32; qwT: (N, K) int8;
     sw: (N, K//bk) f32; ebits: runtime scalar.  Returns (M, N) f32."""
+    return _axqmm_call(qx, sx, qwT, sw, ebits, None, None,
+                       bm=bm, bn=bn, bk=bk, interpret=interpret)
+
+
+def _axqmm_call(qx, sx, qwT, sw, ebits, bias, residual, *, bm, bn, bk,
+                interpret):
     M, K = qx.shape
     N = qwT.shape[0]
     assert K % bk == 0 and M % bm == 0 and N % bn == 0, (M, N, K, bm, bn, bk)
     n_k = K // bk
     ebits_arr = jnp.asarray(ebits, jnp.int32).reshape(1)
     grid = (M // bm, N // bn, n_k)
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, k, *prefetch: (i, k)),   # qx
+        pl.BlockSpec((bm, 1), lambda i, j, k, *prefetch: (i, k)),    # sx
+        pl.BlockSpec((bn, bk), lambda i, j, k, *prefetch: (j, k)),   # qwT
+        pl.BlockSpec((bn, 1), lambda i, j, k, *prefetch: (j, k)),    # sw
+    ]
+    args = [qx, sx, qwT, sw]
+    if bias is not None:
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, k, *prefetch: (0, j)))
+        args.append(bias.reshape(1, N).astype(jnp.float32))
+    if residual is not None:
+        in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, k, *prefetch: (i, j)))
+        args.append(residual.astype(jnp.float32))
     return pl.pallas_call(
-        functools.partial(_axqmm_kernel, n_k=n_k),
+        functools.partial(_axqmm_kernel, n_k=n_k, has_bias=bias is not None,
+                          has_res=residual is not None),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
-            in_specs=[
-                pl.BlockSpec((bm, bk), lambda i, j, k, *prefetch: (i, k)),   # qx
-                pl.BlockSpec((bm, 1), lambda i, j, k, *prefetch: (i, k)),    # sx
-                pl.BlockSpec((bn, bk), lambda i, j, k, *prefetch: (j, k)),   # qwT
-                pl.BlockSpec((bn, 1), lambda i, j, k, *prefetch: (j, k)),    # sw
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec((bm, bn), lambda i, j, k, *prefetch: (i, j)),
             scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         ),
         out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
         interpret=interpret,
-    )(ebits_arr, qx, sx, qwT, sw)
+    )(ebits_arr, *args)
+
+
+def _axqmm_gated_call(qx, sx, qu, su, qg, sg, ebits, *, act, bm, bn, bk,
+                      interpret):
+    M, K = qx.shape
+    N = qu.shape[0]
+    assert K % bk == 0 and M % bm == 0 and N % bn == 0, (M, N, K, bm, bn, bk)
+    n_k = K // bk
+    ebits_arr = jnp.asarray(ebits, jnp.int32).reshape(1)
+    grid = (M // bm, N // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_axqmm_gated_kernel, n_k=n_k, act=act),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda i, j, k, *prefetch: (i, k)),  # qx
+                pl.BlockSpec((bm, 1), lambda i, j, k, *prefetch: (i, k)),   # sx
+                pl.BlockSpec((bn, bk), lambda i, j, k, *prefetch: (j, k)),  # qu
+                pl.BlockSpec((bn, 1), lambda i, j, k, *prefetch: (j, k)),   # su
+                pl.BlockSpec((bn, bk), lambda i, j, k, *prefetch: (j, k)),  # qg
+                pl.BlockSpec((bn, 1), lambda i, j, k, *prefetch: (j, k)),   # sg
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j, k, *prefetch: (i, j)),
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32),
+                            pltpu.VMEM((bm, bn), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+    )(ebits_arr, qx, sx, qu, su, qg, sg)
 
 
 def quantize_for_axqmm(x: Array, bk: int = 512):
-    """Per-(row, k-block) symmetric int8 quantization. x: (M, K) float."""
-    M, K = x.shape
-    assert K % bk == 0
-    xb = x.reshape(M, K // bk, bk).astype(jnp.float32)
-    amax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
-    scale = jnp.maximum(amax, 1e-30) / 127.0
-    q = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
-    return q.reshape(M, K), scale[..., 0]
+    """Per-(row, k-block) symmetric int8 quantization. x: (M, K) float.
+    Thin view over core.quantization.quantize_block — ONE quantizer shared by
+    kernel, jnp oracle, and the prepack pass (the bit-identity contract)."""
+    qt = quantize_block(x.astype(jnp.float32), bk)
+    return qt.values, qt.scales
 
 
 def _tile(dim: int) -> int:
     return 128 if dim % 128 == 0 else (64 if dim % 64 == 0 else 8)
 
 
-def axqmm(x: Array, w: Array, *, block: int = 512, ebits: Array | int = 8,
-          interpret: bool = True) -> Array:
-    """float x (M,K) @ float w (K,N) through the quantized kernel.
+def _pad0(a: Array, to: int) -> Array:
+    return jnp.pad(a, ((0, to - a.shape[0]),) + ((0, 0),) * (a.ndim - 1))
 
-    M/N are zero-padded up to the tile multiple and the result sliced back,
-    so decode-shaped inputs (M = serve slots, e.g. 4) take the Pallas path
-    instead of raising.  Padding happens *after* quantization: scales are
-    per-row / per-column, so real rows' values are unchanged and the padded
-    rows (zero operands) contribute exact zeros that the slice drops.
+
+def axqmm_packed(x: Array, pw: PackedQWeight, ebits: Array | int = 8, *,
+                 bias: Array | None = None, residual: Array | None = None,
+                 interpret: bool | None = None) -> Array:
+    """float x (M, K) @ prepacked weight through the quantized kernel.
+
+    Per-call work is activation quantization only — the weight was encoded
+    at load time (qstore).  M/N are zero-padded up to the tile multiple and
+    the result sliced back, so decode-shaped inputs (M = serve slots) take
+    the Pallas path.  Padding happens *after* quantization: scales are
+    per-row, so real rows are unchanged and padded rows (zero operands)
+    contribute exact zeros that the slice drops.
+
+    ``bias`` (N,) and ``residual`` (M, N) fuse into the f32 epilogue on the
+    last k step: ``out = acc + bias + residual`` before the one writeback.
     """
     M, K = x.shape
-    N = w.shape[1]
-    bk = block
-    # shrink bk to a divisor of K if needed (kernel contract)
-    while K % bk:
-        bk //= 2
+    N, bk = pw.n, pw.block
+    assert pw.k == K, (pw.k, K)
     qx, sx = quantize_for_axqmm(x, bk)
-    qw, sw = quantize_for_axqmm(w.T, bk)
+    qw, sw = pw.qw, pw.scales
     bm, bn = _tile(M), _tile(N)
     Mp = -(-M // bm) * bm
     Np = -(-N // bn) * bn
     if Mp != M:
-        qx = jnp.pad(qx, ((0, Mp - M), (0, 0)))
-        sx = jnp.pad(sx, ((0, Mp - M), (0, 0)))
+        qx, sx = _pad0(qx, Mp), _pad0(sx, Mp)
+        if residual is not None:
+            residual = _pad0(residual, Mp)
     if Np != N:
-        qw = jnp.pad(qw, ((0, Np - N), (0, 0)))
-        sw = jnp.pad(sw, ((0, Np - N), (0, 0)))
-    y = axqmm_quantized(qx, sx, qw, sw, ebits, bm=bm, bn=bn, bk=bk,
-                        interpret=interpret)
+        qw, sw = _pad0(qw, Np), _pad0(sw, Np)
+        if bias is not None:
+            bias = jnp.pad(bias, (0, Np - N))
+        if residual is not None:
+            residual = jnp.pad(residual, ((0, 0), (0, Np - N)))
+    y = _axqmm_call(qx, sx, qw, sw, ebits, bias, residual, bm=bm, bn=bn,
+                    bk=bk, interpret=_resolve_interpret(interpret))
     return y[:M, :N] if (Mp != M or Np != N) else y
+
+
+def axqmm_gated_packed(x: Array, pw_up: PackedQWeight, pw_gate: PackedQWeight,
+                       ebits: Array | int = 8, *, act: str = "silu",
+                       interpret: bool | None = None) -> Array:
+    """Fused gated-MLP first half against prepacked weights:
+    ``act(x @ w_gate) * (x @ w_up)`` in one kernel — the shared x tile is
+    quantized/degraded once per step, and the up/gate intermediates never
+    leave VMEM (one HBM roundtrip instead of three)."""
+    M, K = x.shape
+    N, bk = pw_up.n, pw_up.block
+    assert pw_up.k == K and pw_gate.k == K, (pw_up.k, pw_gate.k, K)
+    assert pw_gate.n == N and pw_gate.block == bk, "up/gate packs must agree"
+    qx, sx = quantize_for_axqmm(x, bk)
+    qu, su = pw_up.qw, pw_up.scales
+    qg, sg = pw_gate.qw, pw_gate.scales
+    bm, bn = _tile(M), _tile(N)
+    Mp = -(-M // bm) * bm
+    Np = -(-N // bn) * bn
+    if Mp != M:
+        qx, sx = _pad0(qx, Mp), _pad0(sx, Mp)
+    if Np != N:
+        qu, su = _pad0(qu, Np), _pad0(su, Np)
+        qg, sg = _pad0(qg, Np), _pad0(sg, Np)
+    y = _axqmm_gated_call(qx, sx, qu, su, qg, sg, ebits, act=act, bm=bm,
+                          bn=bn, bk=bk, interpret=_resolve_interpret(interpret))
+    return y[:M, :N] if (Mp != M or Np != N) else y
+
+
+def axqmm(x: Array, w: Array, *, block: int = 512, ebits: Array | int = 8,
+          interpret: bool | None = None, bias: Array | None = None,
+          residual: Array | None = None) -> Array:
+    """float x (M,K) @ float w (K,N): packs the weight on the fly (same
+    quantizer as the prepack pass) and defers to :func:`axqmm_packed` —
+    prepacked and on-the-fly execution share one kernel graph from the
+    quantized operands on."""
+    bk = resolve_block(x.shape[-1], block)
+    return axqmm_packed(x, prepack_weight(w, bk), ebits, bias=bias,
+                        residual=residual, interpret=interpret)
+
+
+def axqmm_gated(x: Array, w_up: Array, w_gate: Array, *, block: int = 512,
+                ebits: Array | int = 8, act: str = "silu",
+                interpret: bool | None = None) -> Array:
+    """On-the-fly-packed variant of :func:`axqmm_gated_packed`."""
+    bk = resolve_block(x.shape[-1], block)
+    return axqmm_gated_packed(x, prepack_weight(w_up, bk),
+                              prepack_weight(w_gate, bk), ebits, act=act,
+                              interpret=interpret)

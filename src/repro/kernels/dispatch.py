@@ -25,20 +25,33 @@ Routing contract:
   * :func:`decode_attention` — single-token decode against a KVCache /
     QuantKVCache, routed to kernels/flash_decode.py with free-slot masking
     and the runtime ebits degree; falls back to decode_attn(_quant).
+  * :func:`axq_matmul` / :func:`axq_gated` — the GEMM-side twin (DESIGN.md
+    §9): AXQ projections route to the axqmm Pallas kernels (fused epilogues,
+    prepacked-weight residency) or the pure-jnp qmm refs.  Float weights go
+    through a custom-VJP (kernel fwd, ``qmm_ref``-oracle bwd — or an STE
+    exact-matmul bwd for the MoE experts) so ``--kernels pallas`` training
+    routes AXQ too; :class:`~repro.kernels.qstore.PackedQWeight` operands
+    take the quantize-once inference path.
 
 ``last_route`` records the decision per site for tests/benchmarks.
 """
 
 from __future__ import annotations
 
+import functools
 import os
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core.quantization import (qmm_gated_packed_ref, qmm_gated_ref,
+                                     qmm_packed_ref, qmm_ref)
+from repro.kernels import axqmm as _axq
 from repro.kernels.flash_attention import flash_attention_vjp
 from repro.kernels.flash_decode import decode_attn_flash
+from repro.kernels.qstore import PackedQWeight, resolve_block
 
 Array = jnp.ndarray
 
@@ -136,3 +149,147 @@ def decode_attention(q1: Array, knew: Array, vnew: Array, cache, *,
     if isinstance(cache, attn.QuantKVCache):
         return attn.decode_attn_quant(q1, knew, vnew, cache, window=window)
     return attn.decode_attn(q1, knew, vnew, cache, window=window)
+
+
+# ---------------------------------------------------------------------------
+# GEMM routing (AXQ projections — DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+# legacy pre-dispatch escape hatch: force the Pallas GEMM regardless of the
+# attention backend setting (kept for parity with the seed's ops.py knob)
+_GEMM_FORCE_PALLAS = os.environ.get("REPRO_USE_PALLAS", "0") == "1"
+
+
+def _gemm_route() -> str:
+    return "pallas" if (use_pallas() or _GEMM_FORCE_PALLAS) else "xla"
+
+
+def _float0(a):
+    return np.zeros(np.shape(a), jax.dtypes.float0)
+
+
+@functools.lru_cache(maxsize=None)
+def _axq_core(block: int, route: str, ste: bool):
+    """Differentiable AXQ matmul core for *float* weights, cached per
+    (block, backend, bwd-flavor).  Forward runs the Pallas kernel (or the
+    jnp ref); backward differentiates the ``qmm_ref`` oracle — both backends
+    therefore produce identical gradients, so AXQ training no longer
+    silently requires the jnp reference path.  ``ste=True`` swaps in a
+    straight-through exact-matmul backward (quantization is
+    piecewise-constant; the MoE experts train through this)."""
+
+    def run(x, w, e):
+        if route == "pallas":
+            return _axq.axqmm(x, w, block=block, ebits=e)
+        return qmm_ref(x, w, block=block, ebits=e)
+
+    core = jax.custom_vjp(run)
+
+    def fwd(x, w, e):
+        return run(x, w, e), (x, w, e)
+
+    def bwd(res, g):
+        x, w, e = res
+        if ste:
+            g16 = g.astype(jnp.bfloat16)
+            dx = jnp.matmul(g16, w.astype(jnp.bfloat16).T,
+                            preferred_element_type=jnp.float32).astype(x.dtype)
+            dw = jnp.matmul(x.astype(jnp.bfloat16).T, g16,
+                            preferred_element_type=jnp.float32).astype(w.dtype)
+        else:
+            _, vjp = jax.vjp(
+                lambda xx, ww: qmm_ref(xx, ww, block=block, ebits=e), x, w)
+            dx, dw = vjp(g)
+        return dx, dw, _float0(e)
+
+    core.defvjp(fwd, bwd)
+    return core
+
+
+@functools.lru_cache(maxsize=None)
+def _axq_gated_core(block: int, route: str, act: str, ste: bool):
+    """Differentiable fused gated core (float weights): kernel fwd,
+    oracle bwd — see :func:`_axq_core`."""
+    actf = _axq._ACTS[act]
+
+    def run(x, wu, wg, e):
+        if route == "pallas":
+            return _axq.axqmm_gated(x, wu, wg, block=block, ebits=e, act=act)
+        return qmm_gated_ref(x, wu, wg, actf, block=block, ebits=e)
+
+    core = jax.custom_vjp(run)
+
+    def fwd(x, wu, wg, e):
+        return run(x, wu, wg, e), (x, wu, wg, e)
+
+    def bwd(res, g):
+        x, wu, wg, e = res
+        if ste:
+            def exact(xx, wuu, wgg):
+                u = jnp.matmul(xx, wuu, preferred_element_type=jnp.float32)
+                t = jnp.matmul(xx, wgg, preferred_element_type=jnp.float32)
+                return actf(t) * u
+            _, vjp = jax.vjp(exact, x, wu, wg)
+        else:
+            _, vjp = jax.vjp(
+                lambda xx, wuu, wgg: qmm_gated_ref(
+                    xx, wuu, wgg, actf, block=block, ebits=e), x, wu, wg)
+        dx, dwu, dwg = vjp(g)
+        return (dx.astype(x.dtype), dwu.astype(wu.dtype),
+                dwg.astype(wg.dtype), _float0(e))
+
+    core.defvjp(fwd, bwd)
+    return core
+
+
+def axq_matmul(x2: Array, w, *, block: int = 256, ebits=8,
+               bias: Optional[Array] = None, residual: Optional[Array] = None,
+               ste: bool = False) -> Array:
+    """AXQ GEMM router: x2 (M, K) @ w -> (M, N) f32.
+
+    ``w`` is either a float (K, N) array (trainable: quantized on the fly
+    inside a custom-VJP) or a :class:`PackedQWeight` (quantize-once
+    residency: per-call work is activation quantization only; inference).
+    ``bias`` (N,) / ``residual`` (M, N) fuse into the kernel's f32 writeback
+    only on the *packed* pallas route (the inference hot path); the float
+    (training) route and the jnp fallback apply them as the same-ordered f32
+    adds after the matmul, so every route computes identical values."""
+    route = _gemm_route()
+    last_route["gemm"] = route
+    e = jnp.asarray(ebits, jnp.int32)
+    x2 = x2.astype(jnp.float32)
+    if isinstance(w, PackedQWeight):
+        if route == "pallas":
+            return _axq.axqmm_packed(x2, w, e, bias=bias, residual=residual)
+        y = qmm_packed_ref(x2, w.qw, w.scales, e)
+        if bias is not None:
+            y = y + bias.astype(jnp.float32)[None, :]
+        if residual is not None:
+            y = y + residual.astype(jnp.float32)
+        return y
+    blk = resolve_block(x2.shape[-1], block)
+    y = _axq_core(blk, route, ste)(x2, w.astype(jnp.float32), e)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)[None, :]
+    if residual is not None:
+        y = y + residual.astype(jnp.float32)
+    return y
+
+
+def axq_gated(x2: Array, w_up, w_gate, *, act: str = "silu",
+              block: int = 256, ebits=8, ste: bool = False) -> Array:
+    """Fused gated-MLP first-half router: ``act(x@w_gate) * (x@w_up)``.
+    Same float-vs-packed contract as :func:`axq_matmul`; the pallas route
+    streams one shared x tile through both GEMMs and gates in-VMEM."""
+    route = _gemm_route()
+    last_route["gated"] = route
+    e = jnp.asarray(ebits, jnp.int32)
+    x2 = x2.astype(jnp.float32)
+    if isinstance(w_up, PackedQWeight):
+        if route == "pallas":
+            return _axq.axqmm_gated_packed(x2, w_up, w_gate, e, act=act)
+        return qmm_gated_packed_ref(x2, w_up.qw, w_up.scales, w_gate.qw,
+                                    w_gate.scales, _axq._ACTS[act], e)
+    blk = resolve_block(x2.shape[-1], block)
+    return _axq_gated_core(blk, route, act, ste)(
+        x2, w_up.astype(jnp.float32), w_gate.astype(jnp.float32), e)

@@ -31,10 +31,9 @@ import jax.numpy as jnp
 from repro.core import encodings as enc
 from repro.core.approx import ApproxMode, ApproxSpec
 from repro.core.quantization import degrade, qmm_ref
+from repro.kernels import qstore
 
 Array = jnp.ndarray
-
-_USE_PALLAS = os.environ.get("REPRO_USE_PALLAS", "0") == "1"
 # §Perf lever (EXPERIMENTS.md hillclimb A1): keep the activation-gradient
 # partial sums in bf16 so GSPMD's TP all-reduces of dx move half the bytes.
 # The paper's philosophy applied to the collective layer: trade arithmetic
@@ -175,55 +174,73 @@ def _quantize_per_tensor(x: Array, bits: int) -> tuple[Array, Array]:
     return q, scale
 
 
-def _emul_matmul(x: Array, w: Array, spec: ApproxSpec) -> Array:
-    """Exact integer matmul of technique-transformed quantized operands."""
+def _emul_matmul_packed(x: Array, pw: qstore.PackedEmulWeight,
+                        spec: ApproxSpec) -> Array:
+    """Exact integer matmul against a prepacked (quantized + transformed)
+    emulation weight; only the activation side is quantized/transformed
+    per call."""
     n = spec.lane_bits
     assert n <= 8, "in-graph emulation lane limited to 8 bits (see module doc)"
     qx, sx = _quantize_per_tensor(x, n)
-    qw, sw = _quantize_per_tensor(w, n)
-    if spec.mode == ApproxMode.PR_EMUL:
+    if spec.mode in (ApproxMode.PR_EMUL, ApproxMode.ROUP_EMUL):
         qx = enc.round_operand(qx, spec.r)
-        qw = enc.perforate_operand(qw, n, spec.p) if spec.p else qw
-    elif spec.mode == ApproxMode.RAD_EMUL:
-        qw = enc.rad_encode(qw, n, spec.k)
-    elif spec.mode == ApproxMode.ROUP_EMUL:
-        qx = enc.round_operand(qx, spec.r)
-        qw = enc.rad_encode(qw, n, spec.k)
-        # perforation of radix-4 digits above the high-radix digit
-        if spec.p:
-            y0 = enc.highradix_digit(qw, n, spec.k)
-            high = qw - y0
-            qw = enc.perforate_operand(high, 2 * n, spec.k // 2 + spec.p) + y0
     acc = jnp.matmul(
         qx.astype(jnp.int8).astype(jnp.int32),
-        qw.astype(jnp.int8).astype(jnp.int32),
+        pw.qw.astype(jnp.int32),
         preferred_element_type=jnp.int32,
     )
-    return acc.astype(jnp.float32) * (sx * sw)
+    return acc.astype(jnp.float32) * (sx * pw.scale)
+
+
+def _emul_matmul(x: Array, w, spec: ApproxSpec) -> Array:
+    """Exact integer matmul of technique-transformed quantized operands.
+    Float weights are packed on the fly through the same quantize+transform
+    the prepack pass runs once (kernels/qstore.py) — prepacked and
+    on-the-fly execution are bit-identical by construction."""
+    if not isinstance(w, qstore.PackedEmulWeight):
+        w = qstore.prepack_emul_weight(w, spec)
+    return _emul_matmul_packed(x, w, spec)
 
 
 def approx_matmul(
     x: Array,
-    w: Array,
+    w,
     spec: ApproxSpec | None = None,
     *,
     degree: Optional[Array] = None,
     out_dtype=None,
     path: str = "",
+    bias: Optional[Array] = None,
+    residual: Optional[Array] = None,
 ) -> Array:
     """x @ w through the approximation dispatch.
 
-    x: (..., K); w: (K, N).  `degree` is the runtime DyFXU knob (traced int32
-    scalar, effective bits for AXQ dynamic mode); ignored by static specs.
-    `path` lets the ring-TP lever recognize contracting-sharded projections.
+    x: (..., K); w: (K, N) float — or a prepacked residency form
+    (:class:`~repro.kernels.qstore.PackedQWeight` for AXQ,
+    :class:`~repro.kernels.qstore.PackedEmulWeight` for the *_EMUL modes):
+    quantize-once weights skip the per-call quantize+transpose entirely.
+    `degree` is the runtime DyFXU knob (traced int32 scalar, effective bits
+    for AXQ dynamic mode); ignored by static specs.  `path` lets the ring-TP
+    lever recognize contracting-sharded projections.  ``bias`` (N,) and
+    ``residual`` (..., N) are AXQ-only epilogue operands, added in f32
+    before the output cast (fused into the kernel writeback on the Pallas
+    route).
     """
     spec = spec or ApproxSpec()
     out_dtype = out_dtype or x.dtype
     lead = x.shape[:-1]
     K = x.shape[-1]
     x2 = x.reshape(-1, K)
+    packed = qstore.is_packed(w)
+    N = w.n if packed else w.shape[-1]
+    if spec.mode != ApproxMode.AXQ and (bias is not None or residual is not None):
+        raise ValueError("bias/residual epilogues are AXQ-only (fused path)")
 
     if spec.mode == ApproxMode.EXACT:
+        if packed:
+            raise ValueError(
+                f"prepacked weight reached an EXACT spec at {path!r} — the "
+                "prepack policy and the apply policy disagree")
         if _RING_TP and path.endswith(_RING_PATHS):
             y = _ring_tp_matmul(x2, w)
         elif _RING_TP and path.endswith(_RING_DX_PATHS):
@@ -234,23 +251,42 @@ def approx_matmul(
             y = jnp.matmul(x2, w.astype(x2.dtype),
                            preferred_element_type=jnp.float32)
     elif spec.mode == ApproxMode.AXQ:
-        e = degree if (spec.dynamic and degree is not None) else spec.ebits
-        block = min(spec.block, K)
-        while K % block:
-            block //= 2
-        if _USE_PALLAS:
-            from . import axqmm  # lazy: pallas import
+        if packed and not isinstance(w, qstore.PackedQWeight):
+            raise ValueError(f"AXQ spec at {path!r} got {type(w).__name__}")
+        from repro.kernels import dispatch as kdispatch  # lazy: import cycle
 
-            y = axqmm.axqmm(x2.astype(jnp.float32), w.astype(jnp.float32),
-                            block=block, ebits=e)
-        else:
-            y = qmm_ref(x2.astype(jnp.float32), w.astype(jnp.float32),
-                        block=block, ebits=e)
+        e = degree if (spec.dynamic and degree is not None) else spec.ebits
+        res2 = None if residual is None else residual.reshape(-1, N)
+        y = kdispatch.axq_matmul(x2, w, block=spec.block, ebits=e,
+                                 bias=bias, residual=res2)
     elif spec.mode in (ApproxMode.PR_EMUL, ApproxMode.RAD_EMUL, ApproxMode.ROUP_EMUL):
-        y = _emul_matmul(x2.astype(jnp.float32), w.astype(jnp.float32), spec)
+        if packed and not isinstance(w, qstore.PackedEmulWeight):
+            raise ValueError(f"emul spec at {path!r} got {type(w).__name__}")
+        y = _emul_matmul(x2.astype(jnp.float32), w, spec)
     elif spec.mode == ApproxMode.POW2_W:
+        if packed:
+            raise ValueError(f"prepacked weight reached a POW2_W spec at {path!r}")
         w2 = enc.pow2_snap(w.astype(jnp.float32)).astype(x2.dtype)
         y = jnp.matmul(x2, w2, preferred_element_type=jnp.float32)
     else:
         raise ValueError(spec.mode)
-    return y.reshape(*lead, w.shape[-1]).astype(out_dtype)
+    return y.reshape(*lead, N).astype(out_dtype)
+
+
+def approx_gated_matmul(x: Array, w_up, w_gate, spec: ApproxSpec, *,
+                        act: str = "silu", degree: Optional[Array] = None,
+                        out_dtype=None) -> Array:
+    """Fused gated-MLP first half ``act(x @ w_gate) * (x @ w_up)`` through
+    the AXQ dispatch — one kernel, one shared x stream, gate applied
+    in-VMEM before writeback (DESIGN.md §9).  Weights float or prepacked."""
+    assert spec.mode == ApproxMode.AXQ, spec.mode
+    from repro.kernels import dispatch as kdispatch  # lazy: import cycle
+
+    out_dtype = out_dtype or x.dtype
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    N = w_up.n if qstore.is_packed(w_up) else w_up.shape[-1]
+    e = degree if (spec.dynamic and degree is not None) else spec.ebits
+    y = kdispatch.axq_gated(x2, w_up, w_gate, act=act, block=spec.block,
+                            ebits=e)
+    return y.reshape(*lead, N).astype(out_dtype)

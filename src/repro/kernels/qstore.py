@@ -1,0 +1,306 @@
+"""Quantized-weight residency: the quantize-once prepack layer (DESIGN.md §9).
+
+The dissertation's accelerators (and the ASIC/FPGA designs surveyed in
+arXiv:2307.11128 / arXiv:2203.08737) encode the *static* operand once, at
+configuration time; only the cheap runtime knob (DyFXU effective bits) varies
+per invocation.  The software embodiment before this module inverted that
+cost model: every ``approx_matmul`` call re-quantized the weight operand from
+f32 — O(K·N) quantize work per matmul per step plus a live f32 copy.
+
+This module restores the hardware cost model:
+
+  * :class:`PackedQWeight` — AXQ weights as ``(int8 qw K-major, f32
+    per-(row, k-block) scales)``; bit-identical to what the on-the-fly path
+    produces in-trace (same ``quantize_block``), so swapping prepacked params
+    in changes *when* quantization happens, never *what* is computed.
+  * :class:`PackedEmulWeight` — the *_EMUL modes' per-tensor int8 weight with
+    the static operand transform (perforation / RAD / ROUP encoding) already
+    applied; again bit-identical to the per-call transform.
+  * :func:`prepack_params` — walks any model family's param tree (transformer
+    / MoE / SSM / RG-LRU hybrid, scan-stacked or not) and packs every dense
+    weight whose policy spec is AXQ or *_EMUL.  Call it at init,
+    checkpoint-load, or serve admission (``ServeEngine`` does, and
+    ``Model.prepack`` is the public hook).
+  * :func:`resolve_block` — the single, cached, loud-failure resolution of
+    the quantization block against a contraction dim (replaces the in-trace
+    ``while K % block: block //= 2`` loop that silently recomputed per call
+    and span forever on ``block == 0``).
+
+Prepacked leaves are plain NamedTuples of arrays — jit/scan/vmap/shard_map
+slice and batch them like any pytree; the static ``block`` is derived from
+the array shapes, never carried as a traced leaf.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core import encodings as enc
+from repro.core.approx import ApproxMode, ApproxPolicy, ApproxSpec
+from repro.core.quantization import quantize_block
+
+Array = jnp.ndarray
+
+_EMUL_MODES = (ApproxMode.PR_EMUL, ApproxMode.RAD_EMUL, ApproxMode.ROUP_EMUL)
+
+
+@functools.lru_cache(maxsize=None)
+def resolve_block(K: int, requested: int) -> int:
+    """Largest power-of-two shrink of ``requested`` that divides ``K``.
+
+    Cached per (K, requested) — shapes are static under trace, so the loop
+    runs once per distinct GEMM geometry instead of on every call site
+    retrace.  Fails loudly instead of looping forever / dividing by zero on
+    a non-positive block.
+    """
+    if requested <= 0:
+        raise ValueError(f"quantization block must be positive, got {requested}")
+    if K <= 0:
+        raise ValueError(f"contraction dim must be positive, got {K}")
+    block = min(requested, K)
+    while K % block:
+        block //= 2
+        if block == 0:  # unreachable for block>=1 (K % 1 == 0): keep it loud
+            raise ValueError(f"no block divides K={K} (requested {requested})")
+    return block
+
+
+class PackedQWeight(NamedTuple):
+    """AXQ weight residency: int8 values K-major + per-(row, k-block) scales.
+
+    ``qw``: (..., N, K) int8 — the kernel's "wT" layout, both operands stream
+    contiguous k-blocks; ``scales``: (..., N, K // block) f32.
+    """
+
+    qw: Array
+    scales: Array
+
+    @property
+    def k(self) -> int:
+        return self.qw.shape[-1]
+
+    @property
+    def n(self) -> int:
+        return self.qw.shape[-2]
+
+    @property
+    def block(self) -> int:
+        return self.qw.shape[-1] // self.scales.shape[-1]
+
+
+class PackedEmulWeight(NamedTuple):
+    """*_EMUL weight residency: per-tensor int8 with the static operand
+    transform (perforation / RAD / ROUP encoding) pre-applied.
+
+    ``qw``: (..., K, N) int8; ``scale``: (...,) f32 per leading slice (one
+    scalar per scan-stacked layer).
+    """
+
+    qw: Array
+    scale: Array
+
+    @property
+    def k(self) -> int:
+        return self.qw.shape[-2]
+
+    @property
+    def n(self) -> int:
+        return self.qw.shape[-1]
+
+
+def is_packed(w) -> bool:
+    return isinstance(w, (PackedQWeight, PackedEmulWeight))
+
+
+# ---------------------------------------------------------------------------
+# single-weight prepack
+# ---------------------------------------------------------------------------
+
+
+def prepack_weight(w: Array, block: int) -> PackedQWeight:
+    """Quantize-once AXQ pack of ``w`` (..., K, N) — bit-identical to the
+    on-the-fly path (same :func:`quantize_block` on the same K-major view).
+    Leading dims (scan-stacked layers, experts) quantize per slice."""
+    wT = jnp.swapaxes(jnp.asarray(w).astype(jnp.float32), -1, -2)
+    qt = quantize_block(wT, block)
+    return PackedQWeight(qt.values, qt.scales)
+
+
+def _quantize_per_tensor_sliced(w: Array, bits: int):
+    """Per-tensor symmetric quantization over the trailing (K, N) dims —
+    per *slice* for stacked weights, matching the per-call quantization of
+    each layer's 2-D weight."""
+    qmax = (1 << (bits - 1)) - 1
+    w = jnp.asarray(w).astype(jnp.float32)
+    amax = jnp.maximum(jnp.max(jnp.abs(w), axis=(-2, -1)), 1e-30)
+    scale = amax / qmax
+    q = jnp.clip(jnp.round(w / scale[..., None, None]), -qmax, qmax)
+    return q.astype(jnp.int32), scale
+
+
+def emul_weight_transform(qw: Array, spec: ApproxSpec) -> Array:
+    """The static weight-operand transform of the *_EMUL modes (int32 lanes).
+    Shared verbatim by the on-the-fly path and the prepack — the single
+    source of bit-identity between them."""
+    n = spec.lane_bits
+    if spec.mode == ApproxMode.PR_EMUL:
+        return enc.perforate_operand(qw, n, spec.p) if spec.p else qw
+    if spec.mode == ApproxMode.RAD_EMUL:
+        return enc.rad_encode(qw, n, spec.k)
+    if spec.mode == ApproxMode.ROUP_EMUL:
+        qw = enc.rad_encode(qw, n, spec.k)
+        # perforation of radix-4 digits above the high-radix digit
+        if spec.p:
+            y0 = enc.highradix_digit(qw, n, spec.k)
+            high = qw - y0
+            qw = enc.perforate_operand(high, 2 * n, spec.k // 2 + spec.p) + y0
+        return qw
+    raise ValueError(f"not an emulation mode: {spec.mode}")
+
+
+def prepack_emul_weight(w: Array, spec: ApproxSpec) -> PackedEmulWeight:
+    """Quantize + transform the weight operand once for a *_EMUL spec."""
+    assert spec.lane_bits <= 8, "emulation lane limited to 8 bits (ops.py)"
+    qw, scale = _quantize_per_tensor_sliced(w, spec.lane_bits)
+    qw = emul_weight_transform(qw, spec)
+    # the exact-integer matmul ingests int8 lanes; the cast is part of the
+    # contract (identical to the per-call `qw.astype(int8)`)
+    return PackedEmulWeight(qw.astype(jnp.int8), scale)
+
+
+def pack_for_spec(w: Array, spec: ApproxSpec):
+    """Pack one (..., K, N) weight for ``spec``; returns ``w`` unchanged for
+    specs with no static operand encoding (EXACT / POW2_W)."""
+    if is_packed(w):
+        return w
+    if spec.mode == ApproxMode.AXQ:
+        return prepack_weight(w, resolve_block(w.shape[-2], spec.block))
+    if spec.mode in _EMUL_MODES:
+        return prepack_emul_weight(w, spec)
+    return w
+
+
+# ---------------------------------------------------------------------------
+# param-tree walkers (per model family)
+# ---------------------------------------------------------------------------
+
+
+def _pack_dense(p: dict, path: str, policy: ApproxPolicy) -> dict:
+    """Pack one init_dense param dict ({"w": arr[, "b": arr]})."""
+    spec = policy.spec_for(path)
+    packed = pack_for_spec(p["w"], spec)
+    if packed is p["w"]:
+        return p
+    return {**p, "w": packed}
+
+
+def _pack_gated_mlp(p: dict, path: str, policy: ApproxPolicy) -> dict:
+    return {k: _pack_dense(v, f"{path}/{k}", policy) for k, v in p.items()}
+
+
+def _pack_embed(p: dict, policy: ApproxPolicy) -> dict:
+    """Tied unembedding: logits = x @ emb.T, so the K-major pack of ``emb.T``
+    is ``emb`` itself.  The pack rides inside the embed dict under
+    ``unembed_q``; the token-lookup ``emb`` stays untouched."""
+    spec = policy.spec_for("unembed")
+    if spec.mode == ApproxMode.EXACT or "unembed_q" in p:
+        return p
+    packed = pack_for_spec(jnp.swapaxes(p["emb"], -1, -2), spec)
+    if packed is None or not is_packed(packed):
+        return p
+    return {**p, "unembed_q": packed}
+
+
+def _pack_transformer(params: dict, cfg, policy: ApproxPolicy) -> dict:
+    out = dict(params)
+    layers = dict(params["layers"])
+    for key in ("wq", "wk", "wv", "wo"):
+        layers[key] = _pack_dense(layers[key], f"layer/{key}", policy)
+    if "mlp" in layers:
+        layers["mlp"] = _pack_gated_mlp(layers["mlp"], "layer/mlp", policy)
+    if "moe" in layers:
+        moe = dict(layers["moe"])
+        # expert spec shared with apply time (incl. the REPRO_MOE_INT8
+        # EXACT->AXQ8 promotion) — pack iff the experts will route AXQ
+        from repro.models.moe import expert_spec  # lazy: layering
+
+        espec = expert_spec(policy, "layer/moe")
+        if espec.mode == ApproxMode.AXQ:
+            moe["experts"] = {
+                k: pack_for_spec(w, espec) for k, w in moe["experts"].items()
+            }
+        if "shared" in moe:
+            moe["shared"] = {
+                k: pack_for_spec(w, policy.spec_for(f"layer/moe/shared/{k}"))
+                for k, w in moe["shared"].items()
+            }
+        layers["moe"] = moe
+    out["layers"] = layers
+    for fe, n_fc in (("v_proj", ("fc1", "fc2")), ("a_proj", ("fc1",))):
+        if fe in params:
+            out[fe] = {k: _pack_dense(params[fe][k], f"{fe}/{k}", policy)
+                       for k in n_fc}
+    if "unembed" in params:
+        out["unembed"] = _pack_dense(params["unembed"], "unembed", policy)
+    elif cfg.tie_embeddings:
+        out["embed"] = _pack_embed(params["embed"], policy)
+    return out
+
+
+def _pack_ssm(params: dict, cfg, policy: ApproxPolicy) -> dict:
+    out = dict(params)
+    layers = dict(params["layers"])
+    for key in ("in_proj", "out_proj"):
+        layers[key] = _pack_dense(layers[key], f"layer/{key}", policy)
+    out["layers"] = layers
+    out["embed"] = _pack_embed(params["embed"], policy)
+    return out
+
+
+def _pack_rec_block(bp: dict, path: str, policy: ApproxPolicy) -> dict:
+    out = dict(bp)
+    for key in ("wx", "wg", "wa", "wi", "wo"):
+        out[key] = _pack_dense(bp[key], f"{path}/{key}", policy)
+    out["mlp"] = _pack_gated_mlp(bp["mlp"], f"{path}/mlp", policy)
+    return out
+
+
+def _pack_attn_block(bp: dict, path: str, policy: ApproxPolicy) -> dict:
+    out = dict(bp)
+    for key in ("wq", "wk", "wv", "wo"):
+        out[key] = _pack_dense(bp[key], f"{path}/{key}", policy)
+    if "mlp" in bp:
+        out["mlp"] = _pack_gated_mlp(bp["mlp"], f"{path}/mlp", policy)
+    return out
+
+
+def _pack_hybrid(params: dict, cfg, policy: ApproxPolicy) -> dict:
+    # packs resolve against the serve-time paths ("g/...", "tail/...") —
+    # the ones prefill/decode dispatch through (rglru.py)
+    out = dict(params)
+    groups = dict(params["groups"])
+    for gkey, gp in groups.items():
+        if gkey.startswith("rec"):
+            groups[gkey] = _pack_rec_block(gp, "g", policy)
+        else:
+            groups[gkey] = _pack_attn_block(gp, "g", policy)
+    out["groups"] = groups
+    out["tail"] = [_pack_rec_block(bp, "tail", policy) for bp in params["tail"]]
+    out["unembed"] = _pack_dense(params["unembed"], "unembed", policy)
+    return out
+
+
+def prepack_params(params: dict, cfg, policy: ApproxPolicy) -> dict:
+    """Quantize-once pass over a model param tree: every dense weight whose
+    policy spec carries a static operand encoding (AXQ / *_EMUL) is replaced
+    by its packed residency form.  Idempotent; EXACT-only policies return the
+    tree with every array untouched.  The result is inference-only — packed
+    leaves are int8 and carry no gradients."""
+    if cfg.family == "ssm":
+        return _pack_ssm(params, cfg, policy)
+    if cfg.family == "hybrid":
+        return _pack_hybrid(params, cfg, policy)
+    return _pack_transformer(params, cfg, policy)

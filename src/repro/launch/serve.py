@@ -16,6 +16,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.core.approx import policy_from_flag
 from repro.core.dynamic import QoSController
 from repro.dist import meshctx
 from repro.kernels import dispatch as kdispatch
@@ -47,8 +48,16 @@ def main() -> None:
                          "prefill-vs-decode token accounting")
     ap.add_argument("--kernels", default=None,
                     choices=("auto", "pallas", "xla"),
-                    help="attention kernel backend (default: REPRO_KERNELS "
-                         "env or auto = pallas on TPU, xla elsewhere)")
+                    help="attention/GEMM kernel backend (default: "
+                         "REPRO_KERNELS env or auto = pallas on TPU, xla "
+                         "elsewhere)")
+    ap.add_argument("--approx", default="exact",
+                    help="projection arithmetic: exact | axqN (block-int8 "
+                         "GEMMs at N effective bits, e.g. axq8/axq6)")
+    ap.add_argument("--no-prepack", action="store_true",
+                    help="disable quantize-once weight residency (keep the "
+                         "per-call weight quantization; A/B lever — prepack "
+                         "is bit-identical and strictly cheaper)")
     args = ap.parse_args()
 
     kdispatch.set_backend(args.kernels)
@@ -56,8 +65,16 @@ def main() -> None:
     d, m = (int(x) for x in args.mesh.split("x")[:2])
     meshctx.set_mesh(meshctx.make_mesh((d, m), ("data", "model")))
     cfg = get_config(args.arch)
-    model = build_model(cfg)
+    try:
+        policy = policy_from_flag(args.approx, dynamic=args.qos)
+    except ValueError as e:
+        raise SystemExit(str(e))
+    model = build_model(cfg, policy)
     params = model.init(jax.random.PRNGKey(0), tp=m)
+    if not args.no_prepack:
+        # rebind: the f32 copies of packed weights are dropped here — the
+        # engine holds only the int8 residency forms
+        params = model.prepack(params)
     qos = QoSController(
         ladder=[{"ebits": e} for e in (8, 7, 6, 5)],
         low_water=0.25, high_water=0.75, cooldown_steps=8,
@@ -65,7 +82,8 @@ def main() -> None:
     eng = ServeEngine(model, params, slots=args.slots, max_len=512, tp=m,
                       eos_id=args.eos_id, greedy=args.temperature <= 0,
                       temperature=max(args.temperature, 1e-6),
-                      top_k=args.top_k, seed=args.seed, qos=qos)
+                      top_k=args.top_k, seed=args.seed, qos=qos,
+                      prepack=False)
     rng = np.random.default_rng(args.seed)
     t0 = time.time()
     for _ in range(args.requests):

@@ -12,7 +12,7 @@ import argparse
 import jax
 
 from repro.configs import get_config
-from repro.core.approx import ApproxMode, ApproxPolicy, ApproxSpec
+from repro.core.approx import policy_from_flag
 from repro.core.dynamic import QoSController
 from repro.data.pipeline import make_pipeline
 from repro.dist import meshctx
@@ -46,11 +46,10 @@ def main() -> None:
     meshctx.set_mesh(mesh)
 
     cfg = get_config(args.arch)
-    policy = ApproxPolicy()
-    if args.approx.startswith("axq"):
-        policy = ApproxPolicy(default=ApproxSpec(
-            mode=ApproxMode.AXQ, ebits=int(args.approx[3:]), block=64,
-            dynamic=args.qos))
+    try:
+        policy = policy_from_flag(args.approx, dynamic=args.qos)
+    except ValueError as e:
+        raise SystemExit(str(e))
     model = build_model(cfg, policy)
     pipe = make_pipeline(cfg, seq_len=args.seq, global_batch=args.batch)
     qos = QoSController(

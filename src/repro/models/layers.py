@@ -14,8 +14,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.approx import ApproxPolicy, ApproxSpec
-from repro.kernels.ops import approx_matmul
+from repro.core.approx import ApproxMode, ApproxPolicy, ApproxSpec
+from repro.kernels.ops import approx_gated_matmul, approx_matmul
 
 Array = jnp.ndarray
 
@@ -39,12 +39,21 @@ def init_dense(key, d_in: int, d_out: int, bias: bool = False, scale: float | No
 
 
 def dense_apply(p, x: Array, policy: ApproxPolicy, path: str,
-                degree: Optional[Array] = None) -> Array:
+                degree: Optional[Array] = None,
+                residual: Optional[Array] = None) -> Array:
+    """``x @ w (+ b) (+ residual)``.  On the AXQ route bias and residual ride
+    the kernel's fused f32 epilogue (one writeback, DESIGN.md §9); elsewhere
+    they are the same post-cast adds the call sites used to do inline."""
     spec = policy.spec_for(path)
+    if spec.mode == ApproxMode.AXQ:
+        return approx_matmul(x, p["w"], spec, degree=degree, out_dtype=x.dtype,
+                             path=path, bias=p.get("b"), residual=residual)
     y = approx_matmul(x, p["w"], spec, degree=degree, out_dtype=x.dtype,
                       path=path)
     if "b" in p:
         y = y + p["b"].astype(y.dtype)
+    if residual is not None:
+        y = residual + y
     return y
 
 
@@ -94,9 +103,14 @@ def embed_apply(p, tokens: Array, dtype=jnp.bfloat16) -> Array:
 
 def unembed_apply(p, x: Array, policy: ApproxPolicy, path: str,
                   degree=None) -> Array:
-    """logits = x @ emb.T (tied) — routed through the approx dispatch."""
+    """logits = x @ emb.T (tied) — routed through the approx dispatch.
+    A prepacked tied unembedding rides the embed dict as ``unembed_q``
+    (kernels/qstore.py); the token-lookup ``emb`` stays float."""
     spec = policy.spec_for(path)
-    return approx_matmul(x, p["emb"].T, spec, degree=degree, out_dtype=jnp.float32)
+    w = p.get("unembed_q")
+    if w is None:
+        w = p["emb"].T
+    return approx_matmul(x, w, spec, degree=degree, out_dtype=jnp.float32)
 
 
 # ---------------------------------------------------------------------------
@@ -139,11 +153,23 @@ def init_gated_mlp(key, d: int, d_ff: int):
 
 
 def gated_mlp_apply(p, x: Array, policy: ApproxPolicy, path: str, act: str = "silu",
-                    degree=None) -> Array:
-    up = dense_apply(p["up"], x, policy, path + "/up", degree)
-    gate = dense_apply(p["gate"], x, policy, path + "/gate", degree)
-    h = act_fn(act)(gate) * up
-    return dense_apply(p["down"], h, policy, path + "/down", degree)
+                    degree=None, residual: Optional[Array] = None) -> Array:
+    """up/gate/act(gate)*up/down.  When up and gate share one AXQ spec the
+    first half runs as ONE fused kernel (shared x stream, gate applied
+    in-VMEM — one HBM roundtrip instead of three); the down projection fuses
+    ``residual`` into its epilogue (DESIGN.md §9)."""
+    spec_up = policy.spec_for(path + "/up")
+    spec_gate = policy.spec_for(path + "/gate")
+    if (spec_up.mode == ApproxMode.AXQ and spec_gate == spec_up
+            and "b" not in p["up"] and "b" not in p["gate"]):
+        h = approx_gated_matmul(x, p["up"]["w"], p["gate"]["w"], spec_up,
+                                act=act, degree=degree, out_dtype=x.dtype)
+    else:
+        up = dense_apply(p["up"], x, policy, path + "/up", degree)
+        gate = dense_apply(p["gate"], x, policy, path + "/gate", degree)
+        h = act_fn(act)(gate) * up
+    return dense_apply(p["down"], h, policy, path + "/down", degree,
+                       residual=residual)
 
 
 # ---------------------------------------------------------------------------

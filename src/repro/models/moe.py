@@ -25,7 +25,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
-from repro.core.approx import ApproxPolicy
+from repro.core.approx import ApproxMode, ApproxPolicy, ApproxSpec
 from repro.dist import meshctx
 from repro.models.layers import act_fn, init_dense, truncated_normal
 
@@ -59,6 +59,12 @@ def init_moe(key, cfg: ArchConfig, tp: int):
 
 import os
 
+# legacy toggle: pre-dispatch int8 expert lever (§Perf C1).  Now an alias
+# for an AXQ expert spec routed through the shared GEMM dispatch — the old
+# parallel `_int8_einsum` path (its own per-tensor quantizer + einsum +
+# custom VJP) is retired in favor of kernels/dispatch.axq_gated/axq_matmul
+# with the STE backward, so experts share quantizer, kernels, prepacked
+# residency, and the runtime ebits degree with every other projection.
 _MOE_INT8 = os.environ.get("REPRO_MOE_INT8", "0") == "1"
 # §Perf: combine-psum through the int8 ring (straight-through backward —
 # the VJP of a psum with replicated output is the identity on the cotangent)
@@ -83,57 +89,35 @@ def _rp_bwd(_, g):
 _ring_psum_model.defvjp(_rp_fwd, _rp_bwd)
 
 
-def _q8_lastdim(x):
-    """Per-row symmetric int8 quantization over the last dim."""
-    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
-    scale = jnp.maximum(amax, 1e-30) / 127.0
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
-                 ).astype(jnp.int8)
-    return q, scale
+def expert_spec(policy: ApproxPolicy, path: str) -> ApproxSpec:
+    """Expert GEMM spec: policy-resolved at ``<path>/experts``; the legacy
+    REPRO_MOE_INT8 env promotes an EXACT spec to AXQ-8 (shared dispatch).
+    Single source for moe_apply AND the qstore prepack walker — the prepack
+    decision must match the apply-time route."""
+    spec = policy.spec_for(path + "/experts")
+    if _MOE_INT8 and spec.mode == ApproxMode.EXACT:
+        spec = ApproxSpec(mode=ApproxMode.AXQ, ebits=8)
+    return spec
 
 
-from functools import partial as _partial
+def _local_expert_ffn(w, x, act, spec=None, ebits=None):
+    """x: (E_l, C, d); w[up/gate/down]: (E_l, d, f)/(E_l, f, d) — float or
+    prepacked (:class:`~repro.kernels.qstore.PackedQWeight`, expert-batched).
 
+    AXQ specs route through the shared GEMM dispatch, vmapped over the local
+    experts: the fused gated kernel for up/gate (one shared x stream per
+    expert) and the plain axqmm for down, with the STE backward so the
+    experts stay trainable.  ``ebits`` is the runtime degree scalar (already
+    resolved against the spec by the caller)."""
+    if spec is not None and spec.mode == ApproxMode.AXQ:
+        from repro.kernels import dispatch as kdispatch
 
-@_partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _int8_einsum(spec, x, w):
-    """s8 x s8 -> s32 expert GEMM (MXU int8 path, 2x bf16 rate — §Perf
-    hillclimb C1: the dissertation's operand-width trade deployed in the
-    experts).  Straight-through backward (quantization is piecewise-constant;
-    STE keeps the experts trainable)."""
-    qx, sx = _q8_lastdim(x)                        # (E,C,d), (E,C,1)
-    qw, sw = _q8_lastdim(jnp.swapaxes(w, -1, -2))  # (E,f,d), (E,f,1)
-    acc = jnp.einsum(spec, qx.astype(jnp.int8), jnp.swapaxes(qw, -1, -2),
-                     preferred_element_type=jnp.int32)
-    return acc.astype(jnp.float32) * sx * jnp.swapaxes(sw, -1, -2)
-
-
-def _int8_einsum_fwd(spec, x, w):
-    return _int8_einsum(spec, x, w), (x, w)
-
-
-def _int8_einsum_bwd(spec, res, g):
-    x, w = res
-    ins, out = spec.split("->")
-    a, b = ins.split(",")
-    g16 = g.astype(jnp.bfloat16)
-    dx = jnp.einsum(f"{out},{b}->{a}", g16, w.astype(jnp.bfloat16),
-                    preferred_element_type=jnp.bfloat16).astype(x.dtype)
-    dw = jnp.einsum(f"{a},{out}->{b}", x.astype(jnp.bfloat16), g16,
-                    preferred_element_type=jnp.float32).astype(w.dtype)
-    return dx, dw
-
-
-_int8_einsum.defvjp(_int8_einsum_fwd, _int8_einsum_bwd)
-
-
-def _local_expert_ffn(w, x, act):
-    """x: (E_l, C, d); w[up/gate/down]: (E_l, d, f)/(E_l, f, d)."""
-    if _MOE_INT8:
-        up = _int8_einsum("ecd,edf->ecf", x, w["up"])
-        gate = _int8_einsum("ecd,edf->ecf", x, w["gate"])
-        h = (act_fn(act)(gate) * up).astype(x.dtype)
-        return _int8_einsum("ecf,efd->ecd", h, w["down"])
+        h = jax.vmap(lambda xe, wu, wg: kdispatch.axq_gated(
+            xe, wu, wg, act=act, block=spec.block, ebits=ebits, ste=True)
+        )(x.astype(jnp.float32), w["up"], w["gate"])
+        return jax.vmap(lambda he, wd: kdispatch.axq_matmul(
+            he, wd, block=spec.block, ebits=ebits, ste=True)
+        )(h.astype(x.dtype).astype(jnp.float32), w["down"])
     up = jnp.einsum("ecd,edf->ecf", x, w["up"], preferred_element_type=jnp.float32)
     gate = jnp.einsum("ecd,edf->ecf", x, w["gate"], preferred_element_type=jnp.float32)
     h = (act_fn(act)(gate) * up).astype(x.dtype)
@@ -166,7 +150,13 @@ def moe_apply(params, x: Array, cfg: ArchConfig, policy: ApproxPolicy, path: str
     n_pad = E - m.n_experts
     pad_mask = jnp.where(jnp.arange(E) < m.n_experts, 0.0, -1e9)
 
-    def body(xs, router_w, expert_w):
+    espec = expert_spec(policy, path)
+    e_run = (degree if (espec.dynamic and degree is not None) else espec.ebits)
+    # the runtime degree enters shard_map as an explicit replicated scalar
+    # (closed-over tracers don't cross the shard_map boundary)
+    e_arr = jnp.asarray(e_run, jnp.int32)
+
+    def body(xs, router_w, expert_w, e_deg):
         # xs: (B_local, S, d) — replicated over model axis
         bl, s, _ = xs.shape
         t = bl * s
@@ -205,7 +195,7 @@ def moe_apply(params, x: Array, cfg: ArchConfig, policy: ApproxPolicy, path: str
         buf = buf.at[e_idx, s_idx].add(jnp.where(keep[:, None], rows, 0))
 
         w_local = expert_w  # already sliced by shard_map: (E_local, d, f)
-        y_buf = _local_expert_ffn(w_local, buf, act).astype(xt.dtype)
+        y_buf = _local_expert_ffn(w_local, buf, act, espec, e_deg).astype(xt.dtype)
 
         # gather back + gate + combine
         y_rows = y_buf[e_idx, s_idx]                         # (t*topk, d)
@@ -221,13 +211,16 @@ def moe_apply(params, x: Array, cfg: ArchConfig, policy: ApproxPolicy, path: str
     in_specs = (
         P(bdims if bdims else None, None, None),
         P(None, None),
-        {k: P("model", None, None) for k in ("up", "gate", "down")},
+        # exact-structure spec tree: prepacked experts carry (qw, scales)
+        # leaves; every leaf is expert-major on the model axis
+        jax.tree.map(lambda _: P("model", None, None), params["experts"]),
+        P(),
     )
     out_specs = (P(bdims if bdims else None, None, None), P())
     y, aux = jax.shard_map(
         body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
         check_vma=False,
-    )(x, params["router"]["w"], params["experts"])
+    )(x, params["router"]["w"], params["experts"], e_arr)
 
     if "shared" in params:
         from repro.models.layers import gated_mlp_apply

@@ -110,6 +110,16 @@ class Model:
 
         return cache_reset_slot(cache, slot)
 
+    def prepack(self, params):
+        """Quantize-once weight residency (DESIGN.md §9): pack every dense
+        weight whose policy spec is AXQ / *_EMUL into its int8 residency
+        form.  Idempotent; a no-op for EXACT-only policies.  Call at init,
+        checkpoint-load, or serve admission — the result is inference-only
+        (packed leaves carry no gradients)."""
+        from repro.kernels import qstore
+
+        return qstore.prepack_params(params, self.cfg, self.policy)
+
     def param_count(self, params) -> int:
         return sum(x.size for x in jax.tree_util.tree_leaves(params))
 

@@ -98,11 +98,11 @@ def rec_block_apply(bp, x: Array, cfg: ArchConfig, policy: ApproxPolicy,
         hseq = (a[:, 0] * h_prev + gated_in[:, 0])[:, None]
         new_h = hseq[:, 0]
     y = hseq.astype(x.dtype) * jax.nn.gelu(gb)
-    y = L.dense_apply(bp["wo"], y, policy, path + "/wo", degree)
-    x = x + y
+    # residual adds ride the projection epilogues (fused in-kernel on AXQ)
+    x = L.dense_apply(bp["wo"], y, policy, path + "/wo", degree, residual=x)
     h2 = L.rmsnorm_apply(bp["ln2"], x, cfg.norm_eps)
-    f = L.gated_mlp_apply(bp["mlp"], h2, policy, path + "/mlp", cfg.act, degree)
-    out = x + f
+    out = L.gated_mlp_apply(bp["mlp"], h2, policy, path + "/mlp", cfg.act,
+                            degree, residual=x)
     return out, (new_h, new_conv)
 
 
@@ -325,11 +325,11 @@ def hybrid_decode_step(params, cfg: ArchConfig, policy: ApproxPolicy,
                     q, k, v, lc, window=cfg.local_window, degree=degree,
                     active=active)
                 o = o.reshape(B, 1, pd.n_heads * cfg.head_dim)
-                o = L.dense_apply(bp["wo"], o, policy, "g/wo", degree)
-                h = h + o
+                h = L.dense_apply(bp["wo"], o, policy, "g/wo", degree,
+                                  residual=h)
                 hn = L.rmsnorm_apply(bp["ln2"], h, cfg.norm_eps)
-                f = L.gated_mlp_apply(bp["mlp"], hn, policy, "g/mlp", cfg.act, degree)
-                h = h + f
+                h = L.gated_mlp_apply(bp["mlp"], hn, policy, "g/mlp", cfg.act,
+                                      degree, residual=h)
                 ck, cv = lc2.k, lc2.v
         return h, (ck, cv, jnp.stack(nh), jnp.stack(nc))
 

@@ -149,8 +149,10 @@ def ssm_block_apply(bp, x_res: Array, cfg: ArchConfig, policy: ApproxPolicy,
 
     y = y.astype(x_res.dtype) * jax.nn.silu(z)
     y = L.rmsnorm_apply(bp["gnorm"], y, cfg.norm_eps)
-    y = L.dense_apply(bp["out_proj"], y, policy, path + "/out_proj", degree)
-    return x_res + y, new_state
+    # residual fuses into the out-projection epilogue (in-kernel on AXQ)
+    y = L.dense_apply(bp["out_proj"], y, policy, path + "/out_proj", degree,
+                      residual=x_res)
+    return y, new_state
 
 
 # ---------------------------------------------------------------------------

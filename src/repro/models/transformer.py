@@ -118,18 +118,20 @@ def block_apply(bp, x: Array, cfg: ArchConfig, tp: int, policy: ApproxPolicy,
     o = kdispatch.prefill_attention(q, k, v, causal=cfg.causal,
                                     window=cfg.swa_window)
     o = o.reshape(x.shape[0], x.shape[1], pd.n_heads * cfg.head_dim)
-    o = L.dense_apply(bp["wo"], o, policy, path + "/wo", degree)
-    x = x + o
+    # residual adds ride the projection epilogues (fused in-kernel on AXQ)
+    x = L.dense_apply(bp["wo"], o, policy, path + "/wo", degree, residual=x)
     h = L.rmsnorm_apply(bp["ln2"], x, cfg.norm_eps)
     if cfg.moe:
         f, aux = moe_mod.moe_apply(bp["moe"], h, cfg, policy, path + "/moe", degree)
+        out = x + f
     else:
-        f = L.gated_mlp_apply(bp["mlp"], h, policy, path + "/mlp", cfg.act, degree)
+        out = L.gated_mlp_apply(bp["mlp"], h, policy, path + "/mlp", cfg.act,
+                                degree, residual=x)
         aux = jnp.zeros((), jnp.float32)
-    f = L.shard_activation(f, meshctx.bspec(None, None))
+    out = L.shard_activation(out, meshctx.bspec(None, None))
     if return_kv:
-        return x + f, aux, (k, v)
-    return x + f, aux
+        return out, aux, (k, v)
+    return out, aux
 
 
 # ---------------------------------------------------------------------------
@@ -337,14 +339,15 @@ def lm_decode_step(params, cfg: ArchConfig, policy: ApproxPolicy, cache: LMCache
                                             degree=degree, active=active)
         new = (lc2.k, lc2.v, lc2.ks, lc2.vs) if quant else (lc2.k, lc2.v)
         o = o.reshape(B, 1, pd.n_heads * cfg.head_dim)
-        o = L.dense_apply(lp["wo"], o, policy, "layer/wo", degree)
-        h = h + o
+        h = L.dense_apply(lp["wo"], o, policy, "layer/wo", degree, residual=h)
         hn = L.rmsnorm_apply(lp["ln2"], h, cfg.norm_eps)
         if cfg.moe:
             f, _ = moe_mod.moe_apply(lp["moe"], hn, cfg, policy, "layer/moe", degree)
+            h = h + f
         else:
-            f = L.gated_mlp_apply(lp["mlp"], hn, policy, "layer/mlp", cfg.act, degree)
-        return h + f, new
+            h = L.gated_mlp_apply(lp["mlp"], hn, policy, "layer/mlp", cfg.act,
+                                  degree, residual=h)
+        return h, new
 
     if quant:
         x, (nk, nv, nks, nvs) = jax.lax.scan(

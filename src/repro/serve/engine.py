@@ -79,9 +79,13 @@ class ServeEngine:
                  greedy: bool = True, temperature: float = 1.0,
                  top_k: int = 0, seed: int = 0,
                  qos: Optional[QoSController] = None,
-                 degree: Optional[int] = None):
+                 degree: Optional[int] = None, prepack: bool = True):
         self.model = model
-        self.params = params
+        # quantize-once weight residency (DESIGN.md §9): AXQ/emul weights are
+        # packed at admission into the engine, so every prefill/decode step
+        # touches int8 weights only — the per-call quantize+transpose and the
+        # live f32 weight copy are gone.  No-op under an EXACT-only policy.
+        self.params = model.prepack(params) if prepack else params
         self.slots = slots
         self.max_len = max_len
         self.eos_id = eos_id

@@ -1,0 +1,314 @@
+"""Quantize-once weight residency + fused GEMM epilogues (DESIGN.md §9).
+
+The load-bearing claim: prepacking moves quantization from per-call to
+load-time without changing a single bit of the computation — asserted as
+op-level (eager) bit-identity across all four model families and both serve
+cache dtypes.  Fused epilogues (gated first half, bias/residual writeback)
+are checked against their multi-call oracles, and the axqmm custom-VJP
+(kernel fwd, qmm_ref-oracle bwd) is grad-checked against the pure-jnp path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.approx import ApproxMode, ApproxPolicy, ApproxSpec
+from repro.core.quantization import qmm_gated_ref, qmm_ref
+from repro.kernels import dispatch as kdispatch
+from repro.kernels import qstore
+from repro.kernels.axqmm import axqmm, axqmm_gated, axqmm_gated_packed, axqmm_packed
+from repro.kernels.ops import approx_matmul
+from repro.models import build_model, concrete_batch
+
+AXQ_POLICY = ApproxPolicy(default=ApproxSpec(mode=ApproxMode.AXQ, ebits=8,
+                                             block=64))
+FAMILY_ARCHS = ["tinyllama-1.1b-smoke", "qwen2-moe-a2.7b-smoke",
+                "mamba2-370m-smoke", "recurrentgemma-2b-smoke"]
+
+_CACHE: dict = {}
+
+
+def _setup(arch):
+    if arch not in _CACHE:
+        cfg = get_config(arch)
+        m = build_model(cfg, AXQ_POLICY)
+        params = m.init(jax.random.PRNGKey(0), tp=1)
+        _CACHE[arch] = (m, params, m.prepack(params))
+    return _CACHE[arch]
+
+
+# ---------------------------------------------------------------------------
+# block resolution (satellite: loud failure + caching)
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_block_shrinks_and_caches():
+    assert qstore.resolve_block(512, 512) == 512
+    assert qstore.resolve_block(192, 512) == 192     # min(requested, K)
+    assert qstore.resolve_block(192, 128) == 64      # 128 -> 64 divides 192
+    assert qstore.resolve_block(96, 64) == 32        # 64 -> 32 divides 96
+    assert qstore.resolve_block(255, 64) == 1        # odd K walks down to 1
+    before = qstore.resolve_block.cache_info().hits
+    qstore.resolve_block(255, 64)
+    assert qstore.resolve_block.cache_info().hits == before + 1
+
+
+def test_resolve_block_fails_loudly():
+    with pytest.raises(ValueError):
+        qstore.resolve_block(256, 0)
+    with pytest.raises(ValueError):
+        qstore.resolve_block(256, -64)
+    with pytest.raises(ValueError):
+        qstore.resolve_block(0, 256)
+
+
+# ---------------------------------------------------------------------------
+# kernel-level: packed vs on-the-fly, fused vs oracle
+# ---------------------------------------------------------------------------
+
+
+def _rand(shape, seed):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+@pytest.mark.parametrize("shape", [(32, 256, 96), (3, 512, 130)])
+def test_axqmm_packed_bit_identical_to_onthefly(shape):
+    M, K, N = shape
+    x, w = _rand((M, K), 0), _rand((K, N), 1)
+    pw = qstore.prepack_weight(w, qstore.resolve_block(K, 256))
+    y_fly = axqmm(x, w, block=256)
+    y_pack = axqmm_packed(x, pw)
+    assert (np.asarray(y_fly) == np.asarray(y_pack)).all()
+    # and the jnp (xla-route) oracle pair agrees with itself the same way
+    yr_fly = qmm_ref(x, w, block=qstore.resolve_block(K, 256))
+    from repro.core.quantization import qmm_packed_ref
+
+    yr_pack = qmm_packed_ref(x, pw.qw, pw.scales)
+    assert (np.asarray(yr_fly) == np.asarray(yr_pack)).all()
+
+
+def test_axqmm_gated_matches_three_call_oracle():
+    M, K, N = 40, 256, 130
+    x, wu, wg = _rand((M, K), 0), _rand((K, N), 1), _rand((K, N), 2)
+    for act, actf in (("silu", jax.nn.silu), ("gelu", jax.nn.gelu)):
+        fused = axqmm_gated(x, wu, wg, block=256, act=act)
+        # three-call path: two independent GEMMs + elementwise gate
+        up = axqmm(x, wu, block=256)
+        gate = axqmm(x, wg, block=256)
+        three = actf(gate) * up
+        np.testing.assert_allclose(np.asarray(fused), np.asarray(three),
+                                   rtol=1e-5, atol=1e-4)
+        oracle = qmm_gated_ref(x, wu, wg, actf, block=256)
+        np.testing.assert_allclose(np.asarray(fused), np.asarray(oracle),
+                                   rtol=1e-5, atol=1e-4)
+
+
+def test_axqmm_gated_packed_bit_identical_and_degradable():
+    M, K, N = 16, 128, 64
+    x, wu, wg = _rand((M, K), 3), _rand((K, N), 4), _rand((K, N), 5)
+    pu = qstore.prepack_weight(wu, 128)
+    pg = qstore.prepack_weight(wg, 128)
+    y_fly = axqmm_gated(x, wu, wg, block=128)
+    y_pack = axqmm_gated_packed(x, pu, pg)
+    assert (np.asarray(y_fly) == np.asarray(y_pack)).all()
+    # runtime degree stays a traced scalar on the packed path
+    f = jax.jit(lambda x, e: axqmm_gated_packed(x, pu, pg, e))
+    exact = jax.nn.silu(x @ wg) * (x @ wu)
+    e8 = float(jnp.abs(f(x, jnp.int32(8)) - exact).mean())
+    e4 = float(jnp.abs(f(x, jnp.int32(4)) - exact).mean())
+    assert e8 < e4
+
+
+def test_axqmm_bias_residual_epilogue():
+    M, K, N = 24, 256, 72
+    x, w = _rand((M, K), 6), _rand((K, N), 7)
+    b, r = _rand((N,), 8), _rand((M, N), 9)
+    pw = qstore.prepack_weight(w, 256)
+    y = axqmm_packed(x, pw, bias=b, residual=r)
+    base = axqmm_packed(x, pw)
+    np.testing.assert_array_equal(np.asarray(y),
+                                  np.asarray(base + b[None, :] + r))
+
+
+def test_dispatch_axq_matmul_routes_and_agrees():
+    x, w = _rand((8, 256), 0), _rand((256, 64), 1)
+    pw = qstore.prepack_weight(w, 256)
+    kdispatch.set_backend("xla")
+    try:
+        y_x = kdispatch.axq_matmul(x, pw, block=256)
+        assert kdispatch.last_route["gemm"] == "xla"
+        kdispatch.set_backend("pallas")
+        y_p = kdispatch.axq_matmul(x, pw, block=256)
+        assert kdispatch.last_route["gemm"] == "pallas"
+    finally:
+        kdispatch.set_backend(None)
+    np.testing.assert_allclose(np.asarray(y_x), np.asarray(y_p), rtol=1e-6,
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# custom-VJP: pallas-routed AXQ grads == jnp-path grads (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_axq_vjp_grads_match_jnp_path():
+    x, w = _rand((16, 256), 0), _rand((256, 32), 1)
+
+    def loss(backend):
+        kdispatch.set_backend(backend)
+        try:
+            return jax.grad(
+                lambda x, w: jnp.sum(
+                    kdispatch.axq_matmul(x, w, block=64, ebits=8) ** 2),
+                argnums=(0, 1))(x, w)
+        finally:
+            kdispatch.set_backend(None)
+
+    gp = loss("pallas")
+    gx = loss("xla")
+    gref = jax.grad(
+        lambda x, w: jnp.sum(qmm_ref(x, w, block=64, ebits=8) ** 2),
+        argnums=(0, 1))(x, w)
+    for a, b, c in zip(gp, gx, gref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c), rtol=1e-5,
+                                   atol=1e-5)
+        np.testing.assert_allclose(np.asarray(b), np.asarray(c), rtol=1e-5,
+                                   atol=1e-5)
+
+
+def test_axq_vjp_trains_under_pallas_backend():
+    """`--kernels pallas` training must route AXQ through the kernel without
+    raising (the seed silently required the jnp path)."""
+    spec = ApproxSpec(mode=ApproxMode.AXQ, ebits=8, block=64)
+    x, w = _rand((8, 128), 2), _rand((128, 16), 3)
+    kdispatch.set_backend("pallas")
+    try:
+        g = jax.grad(lambda w: jnp.sum(
+            approx_matmul(x, w, spec) ** 2))(w)
+    finally:
+        kdispatch.set_backend(None)
+    assert g.shape == w.shape and bool(jnp.isfinite(g).all())
+
+
+def test_axq_gated_vjp_ste_is_finite_and_descends():
+    x, wu, wg = _rand((8, 64), 4), _rand((64, 32), 5), _rand((64, 32), 6)
+
+    def loss(x, wu, wg):
+        return jnp.sum(kdispatch.axq_gated(x, wu, wg, block=64, ste=True) ** 2)
+
+    g = jax.grad(loss, argnums=(1, 2))(x, wu, wg)
+    scale = max(float(jnp.abs(g[0]).max()), float(jnp.abs(g[1]).max()))
+    lr = 1e-4 / scale                    # small normalized descent step
+    l0 = float(loss(x, wu, wg))
+    l1 = float(loss(x, wu - lr * g[0], wg - lr * g[1]))
+    assert np.isfinite(l1) and l1 < l0
+
+
+# ---------------------------------------------------------------------------
+# emul-mode weight residency
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode,kw", [
+    (ApproxMode.PR_EMUL, dict(p=1, r=2)),
+    (ApproxMode.RAD_EMUL, dict(k=4)),
+    (ApproxMode.ROUP_EMUL, dict(k=4, p=1, r=1)),
+])
+def test_emul_prepack_bit_identical(mode, kw):
+    spec = ApproxSpec(mode=mode, lane_bits=8, **kw)
+    x, w = _rand((16, 128), 0), _rand((128, 48), 1)
+    pw = qstore.prepack_emul_weight(w, spec)
+    y_fly = approx_matmul(x, w, spec)
+    y_pack = approx_matmul(x, pw, spec)
+    assert (np.asarray(y_fly) == np.asarray(y_pack)).all()
+
+
+def test_packed_weight_under_exact_spec_fails_loudly():
+    x, w = _rand((4, 64), 0), _rand((64, 8), 1)
+    pw = qstore.prepack_weight(w, 64)
+    with pytest.raises(ValueError):
+        approx_matmul(x, pw, ApproxSpec(mode=ApproxMode.EXACT), path="layer/wq")
+
+
+# ---------------------------------------------------------------------------
+# model-level: prepack bit-identity across the zoo (tentpole claim)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+def test_prepack_decode_bit_identical(arch):
+    """Eager (op-semantics) decode: prepacked params produce bit-identical
+    logits and cache states — quantize-once changes *when* the weight is
+    encoded, never *what* is computed."""
+    m, params, pp = _setup(arch)
+    batch = concrete_batch(m.cfg, seq=8, batch=2)
+    ca = m.init_cache(tp=1, batch=2, max_len=16)
+    cb = m.init_cache(tp=1, batch=2, max_len=16)
+    for t in range(3):
+        la, ca = m.decode_step(params, ca, batch["tokens"][:, t:t + 1])
+        lb, cb = m.decode_step(pp, cb, batch["tokens"][:, t:t + 1])
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    for a, b in zip(jax.tree_util.tree_leaves(ca), jax.tree_util.tree_leaves(cb)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+def test_prepack_prefill_bit_identical(arch):
+    m, params, pp = _setup(arch)
+    batch = concrete_batch(m.cfg, seq=8, batch=2)
+    prompt = jnp.asarray(batch["tokens"][0, :5])
+    la, ca = m.prefill(params, m.init_cache(tp=1, batch=2, max_len=16),
+                       prompt, jnp.int32(1))
+    lb, cb = m.prefill(pp, m.init_cache(tp=1, batch=2, max_len=16),
+                       prompt, jnp.int32(1))
+    np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    for a, b in zip(jax.tree_util.tree_leaves(ca), jax.tree_util.tree_leaves(cb)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("quant", [False, True])
+def test_prepack_bit_identical_both_serve_cache_dtypes(quant):
+    """The residency layer composes with both serve cache dtypes (bf16 and
+    int8 KV): decode through either cache is bit-identical prepacked vs
+    on-the-fly."""
+    m, params, pp = _setup("tinyllama-1.1b-smoke")
+    batch = concrete_batch(m.cfg, seq=8, batch=2)
+    ca = m.init_cache(tp=1, batch=2, max_len=16, quant=quant)
+    cb = m.init_cache(tp=1, batch=2, max_len=16, quant=quant)
+    for t in range(3):
+        la, ca = m.decode_step(params, ca, batch["tokens"][:, t:t + 1])
+        lb, cb = m.decode_step(pp, cb, batch["tokens"][:, t:t + 1])
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_serve_engine_prepacks_and_drains():
+    """The engine packs at admission (quantize-once at model load): packed
+    params in the live engine, same greedy tokens as a no-prepack engine."""
+    m, params, _ = _setup("tinyllama-1.1b-smoke")
+    from repro.serve.engine import ServeEngine
+
+    eng = ServeEngine(m, params, slots=2, max_len=64)
+    leaves = jax.tree_util.tree_leaves(
+        eng.params, is_leaf=qstore.is_packed)
+    assert any(qstore.is_packed(l) for l in leaves)
+    r1 = eng.submit(np.array([5, 6, 7, 8]), max_new_tokens=6)
+    eng.run_until_drained()
+    raw = ServeEngine(m, params, slots=2, max_len=64, prepack=False)
+    r2 = raw.submit(np.array([5, 6, 7, 8]), max_new_tokens=6)
+    raw.run_until_drained()
+    assert r1.out_tokens == r2.out_tokens
+
+
+def test_prepack_idempotent_and_exact_policy_noop():
+    m, params, pp = _setup("tinyllama-1.1b-smoke")
+    pp2 = m.prepack(pp)
+    for a, b in zip(jax.tree_util.tree_leaves(pp, is_leaf=qstore.is_packed),
+                    jax.tree_util.tree_leaves(pp2, is_leaf=qstore.is_packed)):
+        if qstore.is_packed(a):
+            assert a.qw is b.qw
+    exact = build_model(m.cfg)          # default EXACT policy
+    same = exact.prepack(params)
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(same)):
+        assert a is b
