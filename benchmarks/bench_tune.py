@@ -1,0 +1,84 @@
+"""Uniform-vs-planned approximation degree A/B (repro.tune, DESIGN.md §10).
+
+The claim under test is the dissertation's (and the Leon et al. surveys'):
+a *mixed per-layer* degree assignment found by calibration-driven search
+dominates the *uniform global* degree on the quality-vs-cost front.  The
+module tunes an ApproxPlan for the smoke LM on a fixed calibration batch,
+measures every uniform assignment with the same prober, and emits both
+tables plus the dominance verdict — and **asserts** that at least one
+uniform rung is strictly dominated (a planned rung with lower modeled cost
+at equal-or-better measured error), so a regression in the tuner or the
+per-layer degree plumbing fails the bench.
+
+Row convention (run.py header ``name,us_per_call,derived``): the
+``us_per_call`` column is microseconds per measured configuration during
+the search; quality rows carry ``err=..,cost=..`` in ``derived``.  Errors
+are normalized RMS logit deviation vs exact arithmetic; costs are the
+unit-gate energy proxy normalized to uniform-8 (autotune.vector_cost).
+REPRO_BENCH_TINY=1 shrinks the calibration batch and grid for the CI smoke
+job.  Committed record: benchmarks/BENCH_tune.json (full-shape run).
+"""
+import os
+
+import jax
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.models.registry import concrete_batch
+from repro.tune import ApproxPlan, build_plan, vector_cost
+from repro.tune.autotune import _Prober
+from repro.tune.plan import site_names
+
+_TINY = os.environ.get("REPRO_BENCH_TINY", "0") == "1"
+_ARCH = "tinyllama-1.1b-smoke"
+_BLOCK = 64
+
+
+def rows():
+    cfg = get_config(_ARCH)
+    policy = ApproxPlan(arch=cfg.name, sites=site_names(cfg), ladder=[],
+                        block=_BLOCK).policy(dynamic=True)
+    model = build_model(cfg, policy)
+    params = model.init(jax.random.PRNGKey(0), tp=1)
+    seq, batch = (16, 2) if _TINY else (32, 4)
+    grid = (8, 7, 6) if _TINY else (8, 7, 6, 5, 4)
+    calib = concrete_batch(cfg, seq, batch, key=jax.random.PRNGKey(7))
+    # one prober shared with the search: the uniform rows below re-query
+    # its error memo instead of re-running calibration forwards
+    prober = _Prober(model, params, calib)
+    plan = build_plan(model, params, calib, grid=grid, block=_BLOCK,
+                      prober=prober)
+    us_per_cfg = plan.meta["tune_seconds"] * 1e6 / plan.meta["visited"]
+    out = [
+        ("tune.search", us_per_cfg,
+         f"{plan.meta['strategy']}:{plan.meta['visited']}cfgs"),
+        ("tune.plan_rungs", 0.0, len(plan.ladder)),
+    ]
+
+    S = len(plan.sites)
+    uniform = {}
+    for e in grid:
+        vec = [int(e)] * S
+        uniform[e] = (prober.error(vec), vector_cost(cfg, vec))
+        out.append((f"tune.uniform_e{e}", 0.0,
+                    f"err={uniform[e][0]:.5f},cost={uniform[e][1]:.4f}"))
+    for pt in plan.ladder:
+        out.append((f"tune.{pt.name}", 0.0,
+                    f"deg={'.'.join(map(str, pt.degrees))},"
+                    f"err={pt.error:.5f},cost={pt.cost:.4f}"))
+
+    # dominance: a planned rung with strictly lower cost at <= error
+    verdicts = []
+    for e, (ue, uc) in sorted(uniform.items()):
+        doms = [pt for pt in plan.ladder if pt.cost < uc and pt.error <= ue]
+        if doms:
+            best = min(doms, key=lambda p: p.cost)
+            verdicts.append(
+                f"e{e}<{best.name}(cost-{100 * (1 - best.cost / uc):.1f}%"
+                f",err-{100 * (1 - best.error / ue) if ue else 0.0:.1f}%)")
+    out.append(("tune.dominated_uniform_rungs", 0.0,
+                "+".join(verdicts) if verdicts else "none"))
+    assert verdicts, (
+        "planned ladder failed to dominate any uniform rung — per-layer "
+        "tuning regressed (see tune.uniform_* / tune.rung_* rows)")
+    return out

@@ -1,30 +1,56 @@
-"""Ch. 6 exploration driver + Ch. 5 dynamic (QoS) demo:
-sweep the cooperative approximation space, print the Pareto front, then show
-the QoS controller walking the effective-bits ladder on a live quality signal.
+"""Ch. 6 exploration, both stages, ending in a deployable artifact:
 
-  PYTHONPATH=src python examples/approx_pareto_explore.py
+1. circuit-level — sweep the cooperative multiplier space and print its
+   Pareto front (core/pareto.py);
+2. network-level — profile per-layer error sensitivity of a smoke LM on a
+   calibration batch and search mixed per-layer degree assignments
+   (repro.tune), emitting an ``ApproxPlan`` JSON whose degree ladder
+   ``examples/serve_lm.py --plan`` (and ``launch.serve --plan``) executes
+   at runtime with zero recompiles.
+
+  PYTHONPATH=src python examples/approx_pareto_explore.py \
+      [--arch tinyllama-1.1b-smoke] [--plan-out plans/approx_plan.json]
 """
-import numpy as np
+import argparse
+
+import jax
 
 from repro.core import pareto
-from repro.core.dynamic import QoSController
 
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="tinyllama-1.1b-smoke")
+ap.add_argument("--plan-out", default="plans/approx_plan.json")
+ap.add_argument("--block", type=int, default=64)
+args = ap.parse_args()
+
+# ---- stage 1: the multiplier design space (Figs. 6.4-6.6) -----------------
 pts = pareto.explore(n=16, num_samples=1 << 15)
 front = pareto.front(pts)
 print(f"design space: {len(pts)} configs; Pareto front: {len(front)} points")
 for p in front:
     print("  " + p.row())
 
-print("\nQoS-driven dynamic approximation (Ch. 5 runtime configuration):")
-qos = QoSController(ladder=[{"ebits": 8}, {"ebits": 7}, {"ebits": 6},
-                            {"ebits": 5}],
-                    low_water=0.0, high_water=0.08, cooldown_steps=2)
-rng = np.random.default_rng(0)
-for step in range(30):
-    # synthetic quality signal: fine until step 15, then degradation
-    sig = -0.01 if step < 15 else 0.2
-    kw = qos.update(step, sig + 0.01 * rng.standard_normal())
-    if step % 5 == 0 or step == 16:
-        print(f"  step {step:>2}: quality_ema={qos.ema:+.3f} -> degree {kw}")
-print("controller ramped approximation while quality held, backed off on "
-      "violation — the paper's DyFXU runtime knob at system level.")
+# ---- stage 2: per-layer plan for a deployed network (repro.tune) ----------
+from repro.models import build_model
+from repro.models.registry import concrete_batch
+from repro.tune import ApproxPlan, build_plan
+from repro.tune.plan import site_names
+from repro.configs import get_config
+
+cfg = get_config(args.arch)
+policy = ApproxPlan(arch=cfg.name, sites=site_names(cfg), ladder=[],
+                    block=args.block).policy(dynamic=True)
+model = build_model(cfg, policy)
+params = model.init(jax.random.PRNGKey(0), tp=1)
+calib = concrete_batch(cfg, 32, 4, key=jax.random.PRNGKey(7))
+print(f"\ntuning {cfg.name}: per-layer sensitivity + mixed-degree search ...")
+plan = build_plan(model, params, calib, grid=(8, 7, 6, 5, 4),
+                  block=args.block)
+path = plan.save(args.plan_out)
+print(f"plan ({plan.meta['strategy']}, {plan.meta['visited']} configs "
+      f"measured) -> {path}")
+for pt in plan.ladder:
+    print(f"  {pt.name}: degrees={list(pt.degrees)} "
+          f"err={pt.error:.5f} cost={pt.cost:.4f}")
+print("deploy it:  PYTHONPATH=src python examples/serve_lm.py "
+      f"--plan {path}")

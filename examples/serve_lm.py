@@ -1,6 +1,9 @@
 """Batched serving driver: continuous batching over the ServeEngine.
 
   PYTHONPATH=src python examples/serve_lm.py --requests 12 --slots 4
+  # execute a tuned per-layer plan (emitted by approx_pareto_explore.py),
+  # QoS stepping its calibrated degree ladder under load:
+  PYTHONPATH=src python examples/serve_lm.py --plan plans/approx_plan.json
 """
 import argparse
 import time
@@ -9,6 +12,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.core.dynamic import QoSController
 from repro.models import build_model
 from repro.serve.engine import ServeEngine
 
@@ -19,12 +23,26 @@ def main():
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--plan", default=None,
+                    help="ApproxPlan JSON from approx_pareto_explore.py: "
+                         "serve under its per-layer degree ladder")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
-    model = build_model(cfg)
+    plan = qos = None
+    if args.plan is not None:
+        from repro.tune import ApproxPlan
+
+        plan = ApproxPlan.load(args.plan)
+        plan.validate_for(cfg)
+        qos = QoSController(ladder=plan.qos_ladder(), low_water=0.25,
+                            high_water=0.75, cooldown_steps=4)
+        model = build_model(cfg, plan.policy(dynamic=True))
+    else:
+        model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    eng = ServeEngine(model, params, slots=args.slots, max_len=256)
+    eng = ServeEngine(model, params, slots=args.slots, max_len=256,
+                      plan=plan, qos=qos)
     rng = np.random.default_rng(0)
     t0 = time.time()
     for i in range(args.requests):
@@ -38,6 +56,11 @@ def main():
     lat = [r.t_done - r.t_enqueue for r in done]
     print(f"[serve_lm] latency p50={np.percentile(lat,50)*1e3:.0f}ms "
           f"p95={np.percentile(lat,95)*1e3:.0f}ms")
+    if plan is not None and eng.stats.degree_history:
+        rungs = {tuple(d) for _, d in eng.stats.degree_history}
+        print(f"[serve_lm] plan ladder: visited {len(rungs)} of "
+              f"{len(plan.ladder)} rungs; final degrees = "
+              f"{list(eng.stats.degree_history[-1][1])}")
 
 
 if __name__ == "__main__":

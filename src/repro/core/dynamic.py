@@ -20,13 +20,39 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 
 
+def degree_operand(entry: dict):
+    """Turn one QoS ladder entry into the traced degree operand the models
+    consume: ``{"degrees": [...]}`` (an ApproxPlan rung) becomes a per-site
+    int32 vector, ``{"ebits": n}`` the legacy global scalar.  The single
+    decoder shared by the serve engine and the trainer — the ladder-entry
+    format has exactly one owner."""
+    import jax.numpy as jnp
+
+    if "degrees" in entry:
+        return jnp.asarray([int(e) for e in entry["degrees"]], jnp.int32)
+    return jnp.asarray(int(entry.get("ebits", 8)), jnp.int32)
+
+
+def degree_record(degree):
+    """Loggable/hashable form of a degree operand: a plain int for the
+    global scalar, a tuple of ints for a per-site vector.  The one
+    operand-to-record rule (engine history, trainer history/checkpoints)."""
+    import numpy as np
+
+    arr = np.asarray(degree)
+    return tuple(int(x) for x in arr.reshape(-1)) if arr.ndim else int(arr)
+
+
 @dataclass
 class QoSController:
     """Moves an integer degree along a ladder to track an error budget.
 
     degree semantics: index into `ladder`; entry 0 = most accurate.
-    `ladder` entries are opaque to the controller (they are ApproxSpec degree
-    kwargs, e.g. [{'ebits': 8}, {'ebits': 7}, {'ebits': 6}, {'ebits': 5}]).
+    `ladder` entries are opaque to the controller — either global degree
+    kwargs (`{'ebits': 8} .. {'ebits': 5}`) or whole per-layer ApproxPlan
+    rungs (`{'degrees': [...]}`, see repro.tune.plan.ApproxPlan.qos_ladder);
+    the consumer (serve engine / trainer) turns the chosen entry into the
+    traced degree operand.
     """
 
     ladder: list[dict]

@@ -39,7 +39,14 @@ class DesignPoint:
 
 
 def explore(n: int = 16, num_samples: int = 1 << 16, seed: int = 0) -> list[DesignPoint]:
-    """Evaluate the full configuration pool at bit-width n."""
+    """Evaluate the full multiplier-configuration pool at bit-width ``n``.
+
+    Enumerates every family config from ``axmult.family_configs`` plus the
+    exact CMB baseline, attaches sampled error metrics (MRED/NMED) and
+    unit-gate area/energy, and marks the (mred, energy) Pareto front in
+    place.  This is the Ch. 6 *circuit-level* exploration; the network-level
+    counterpart over per-layer degree vectors lives in ``repro.tune``
+    (which reuses :func:`front_mask` for the same dominance rule)."""
     points: list[DesignPoint] = []
     # exact baseline
     base_area = area_model.area_cmb(n)
@@ -61,26 +68,45 @@ def explore(n: int = 16, num_samples: int = 1 << 16, seed: int = 0) -> list[Desi
     return points
 
 
+def front_mask(xs, ys) -> list[bool]:
+    """Generic minimize-both Pareto mask over two parallel sequences.
+
+    ``mask[i]`` is True iff no other point weakly dominates point ``i``
+    (``x <= x_i and y <= y_i`` with at least one strict).  Duplicated points
+    all stay on the front.  Shared by :func:`mark_front` (multiplier design
+    points) and the ``repro.tune`` plan search (per-layer degree vectors) —
+    one dominance rule for both exploration stages."""
+    n = len(xs)
+    assert len(ys) == n
+    mask = []
+    for i in range(n):
+        dominated = any(
+            xs[j] <= xs[i] and ys[j] <= ys[i]
+            and (xs[j] < xs[i] or ys[j] < ys[i])
+            for j in range(n) if j != i)
+        mask.append(not dominated)
+    return mask
+
+
 def mark_front(points: list[DesignPoint], x: str = "mred", y: str = "energy") -> None:
-    """Mark Pareto-optimal points (minimize both x and y) in place."""
-    for pt in points:
-        pt.on_front = True
-        for other in points:
-            if other is pt:
-                continue
-            ox, oy = getattr(other, x), getattr(other, y)
-            px, py = getattr(pt, x), getattr(pt, y)
-            if ox <= px and oy <= py and (ox < px or oy < py):
-                pt.on_front = False
-                break
+    """Mark Pareto-optimal points (minimize both ``x`` and ``y`` attributes)
+    in place by setting ``on_front`` — the presentation layer over
+    :func:`front_mask`."""
+    mask = front_mask([getattr(p, x) for p in points],
+                      [getattr(p, y) for p in points])
+    for pt, m in zip(points, mask):
+        pt.on_front = m
 
 
 def front(points: list[DesignPoint]) -> list[DesignPoint]:
+    """The marked Pareto subset, sorted most-accurate (lowest mred) first —
+    run :func:`mark_front` (or :func:`explore`) beforehand."""
     return sorted([p for p in points if p.on_front], key=lambda p: p.mred)
 
 
 def best_under_error(points: list[DesignPoint], mred_budget: float) -> DesignPoint | None:
-    """The paper's design-selection rule: max resource gain subject to an
-    error constraint."""
+    """The paper's design-selection rule: the cheapest (minimum energy)
+    configuration whose error stays within ``mred_budget``; None when no
+    configuration qualifies."""
     ok = [p for p in points if p.mred <= mred_budget]
     return min(ok, key=lambda p: p.energy) if ok else None

@@ -33,7 +33,17 @@ Routing contract:
     routes AXQ too; :class:`~repro.kernels.qstore.PackedQWeight` operands
     take the quantize-once inference path.
 
-``last_route`` records the decision per site for tests/benchmarks.
+``last_route`` records the decision per call site — keys ``"prefill"`` /
+``"decode"`` (attention) and ``"gemm"`` / ``"gated"`` (AXQ projections) —
+for tests and benchmarks.
+
+Runtime degree contract: every router takes the DyFXU degree as a *traced*
+scalar (``ebits`` / ``degree``), so moving it never recompiles.  Per-layer
+plans (repro.tune, models/degrees.py) keep that contract by slicing their
+(n_layers + 1,) degree vector down to this layer's scalar before the call —
+inside ``lax.scan`` the slice is automatic (the vector rides the scan xs);
+unrolled call sites (e.g. the hybrid tail blocks in models/rglru.py) use
+:func:`site_degree`.
 """
 
 from __future__ import annotations
@@ -59,8 +69,9 @@ _VALID = ("auto", "pallas", "xla")
 
 _override: Optional[str] = None
 
-#: last routing decision per call site ("prefill" / "decode") — debug aid
-#: for tests and benchmarks, written at trace time.
+#: last routing decision per call site ("prefill" / "decode" attention,
+#: "gemm" / "gated" AXQ projections) — debug aid for tests and benchmarks,
+#: written at trace time.
 last_route: dict = {}
 
 
@@ -101,6 +112,20 @@ def interpret_mode() -> bool:
     from repro.kernels.flash_attention import _resolve_interpret
 
     return _resolve_interpret(None)
+
+
+def site_degree(degree, site: int):
+    """Index a per-layer degree vector down to one site's scalar knob.
+
+    ``degree`` may be None (static spec), a traced scalar (global DyFXU
+    degree — passes through), or a per-site vector (an ApproxPlan rung);
+    ``site`` is the layer id (or ``n_layers`` for the head site).  The
+    returned scalar is what the kernels scalar-prefetch — indexing a traced
+    vector keeps the zero-recompile contract."""
+    if degree is None:
+        return None
+    d = jnp.asarray(degree)
+    return d[site] if d.ndim else d
 
 
 # ---------------------------------------------------------------------------

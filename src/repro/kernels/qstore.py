@@ -29,6 +29,13 @@ This module restores the hardware cost model:
 Prepacked leaves are plain NamedTuples of arrays — jit/scan/vmap/shard_map
 slice and batch them like any pytree; the static ``block`` is derived from
 the array shapes, never carried as a traced leaf.
+
+Per-layer plans (repro.tune) compose with residency for free: packing is
+degree-independent (the int8 values are always full-precision-int8; the
+runtime ``ebits`` degrade happens in-kernel on the packed values), so ONE
+packed tree serves *every* rung of a plan's degree ladder — per-layer
+degrees are scalar-prefetch operands sliced from the plan vector
+(models/degrees.py), never a reason to repack or recompile.
 """
 
 from __future__ import annotations

@@ -4,6 +4,10 @@
   # temperature/top-k sampling, per-request latency table, QoS degree loop:
   python -m repro.launch.serve --arch tinyllama-1.1b-smoke \
       --temperature 0.8 --top-k 40 --seed 7 --qos --metrics
+  # per-layer approximation plan (repro.tune): serve the tuned degree
+  # ladder, QoS stepping whole calibrated configurations:
+  python -m repro.launch.serve --arch tinyllama-1.1b-smoke \
+      --plan plans/approx_plan.json --qos --metrics
 
 On a TPU pod the full configs drive the same engine with the decode
 sharding proven by the dry-run (KV cache TP over the model axis, optional
@@ -53,7 +57,13 @@ def main() -> None:
                          "elsewhere)")
     ap.add_argument("--approx", default="exact",
                     help="projection arithmetic: exact | axqN (block-int8 "
-                         "GEMMs at N effective bits, e.g. axq8/axq6)")
+                         "GEMMs at N effective bits, e.g. axq8/axq6); "
+                         "ignored when --plan is given (the plan carries "
+                         "its own policy)")
+    ap.add_argument("--plan", default=None,
+                    help="path to an ApproxPlan JSON (repro.tune): serve "
+                         "with per-layer degrees; with --qos the controller "
+                         "steps the plan's calibrated degree ladder")
     ap.add_argument("--no-prepack", action="store_true",
                     help="disable quantize-once weight residency (keep the "
                          "per-call weight quantization; A/B lever — prepack "
@@ -65,10 +75,19 @@ def main() -> None:
     d, m = (int(x) for x in args.mesh.split("x")[:2])
     meshctx.set_mesh(meshctx.make_mesh((d, m), ("data", "model")))
     cfg = get_config(args.arch)
-    try:
-        policy = policy_from_flag(args.approx, dynamic=args.qos)
-    except ValueError as e:
-        raise SystemExit(str(e))
+    plan = None
+    if args.plan is not None:
+        from repro.tune import ApproxPlan
+
+        plan = ApproxPlan.load(args.plan)
+        plan.validate_for(cfg)
+        # the plan pins mode/block; its degrees are the runtime knob
+        policy = plan.policy(dynamic=True)
+    else:
+        try:
+            policy = policy_from_flag(args.approx, dynamic=args.qos)
+        except ValueError as e:
+            raise SystemExit(str(e))
     model = build_model(cfg, policy)
     params = model.init(jax.random.PRNGKey(0), tp=m)
     if not args.no_prepack:
@@ -83,7 +102,7 @@ def main() -> None:
                       eos_id=args.eos_id, greedy=args.temperature <= 0,
                       temperature=max(args.temperature, 1e-6),
                       top_k=args.top_k, seed=args.seed, qos=qos,
-                      prepack=False)
+                      prepack=False, plan=plan)
     rng = np.random.default_rng(args.seed)
     t0 = time.time()
     for _ in range(args.requests):

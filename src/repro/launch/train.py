@@ -30,6 +30,10 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--mesh", default="1x1")
     ap.add_argument("--approx", default="exact")
+    ap.add_argument("--plan", default=None,
+                    help="ApproxPlan JSON (repro.tune): train under the "
+                         "plan's policy with its per-layer degree ladder as "
+                         "the QoS ladder (implies the plan's mode/block)")
     ap.add_argument("--qos", action="store_true")
     ap.add_argument("--compress-grads", action="store_true")
     ap.add_argument("--ckpt-dir", default="checkpoints/launch_train")
@@ -46,22 +50,38 @@ def main() -> None:
     meshctx.set_mesh(mesh)
 
     cfg = get_config(args.arch)
-    try:
-        policy = policy_from_flag(args.approx, dynamic=args.qos)
-    except ValueError as e:
-        raise SystemExit(str(e))
+    plan = None
+    if args.plan is not None:
+        from repro.tune import ApproxPlan
+
+        plan = ApproxPlan.load(args.plan)
+        plan.validate_for(cfg)
+        policy = plan.policy(dynamic=True)
+    else:
+        try:
+            policy = policy_from_flag(args.approx, dynamic=args.qos)
+        except ValueError as e:
+            raise SystemExit(str(e))
     model = build_model(cfg, policy)
     pipe = make_pipeline(cfg, seq_len=args.seq, global_batch=args.batch)
+    # same contract as serve: --qos steps the ladder (the plan's rungs when
+    # --plan is given); a plan WITHOUT --qos trains the most-accurate rung
+    # as a fixed configuration
+    ladder = (plan.qos_ladder() if plan is not None
+              else [{"ebits": 8}, {"ebits": 7}, {"ebits": 6}, {"ebits": 5}])
     qos = QoSController(
-        ladder=[{"ebits": 8}, {"ebits": 7}, {"ebits": 6}, {"ebits": 5}],
+        ladder=ladder,
         low_water=-0.005, high_water=0.05) if args.qos else None
+    static_degrees = (list(plan.degrees(0))
+                      if (plan is not None and qos is None) else None)
     trainer = Trainer(
         model,
         step_mod.StepConfig(remat="none", total_steps=args.steps,
                             warmup=max(args.steps // 20, 5),
                             compress_grads=args.compress_grads),
         TrainerConfig(total_steps=args.steps, ckpt_every=max(args.steps // 4, 10),
-                      ckpt_dir=args.ckpt_dir, qos=qos),
+                      ckpt_dir=args.ckpt_dir, qos=qos,
+                      static_degrees=static_degrees),
         pipe, tp=m)
     out = trainer.run()
     print(f"[launch.train] done at step {out['final_step']}; "

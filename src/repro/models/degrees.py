@@ -1,0 +1,61 @@
+"""Per-layer approximation degrees — the runtime half of an ApproxPlan.
+
+Scan-over-layers models share one parameter *path* across every stacked
+layer, so the path-keyed ``ApproxPolicy`` (DESIGN.md §2.3) cannot assign a
+different degree per layer.  This module defines the convention that can:
+the runtime ``degree`` argument of every model entry point
+(``Model.forward`` / ``loss`` / ``prefill`` / ``decode_step``) accepts
+
+  * ``None``        — static policy degrees only (no traced knob);
+  * a scalar        — one global DyFXU degree, broadcast to every site
+                      (the pre-plan behavior, still bit-identical);
+  * a ``(n_layers + 1,)`` int32 vector — one degree per *site*: entry ``i``
+    drives layer ``i``'s projections (attention, MLP, MoE experts, SSM /
+    RG-LRU projections), entry ``n_layers`` drives the head sites (tied /
+    dense unembedding and the vision/audio frontend projections).
+
+The vector is a **traced** operand: the model scan consumes it as a scan
+input alongside the stacked layer params, so each layer's kernels receive a
+scalar slice (the scalar-prefetch DyFXU knob of kernels/axqmm.py and
+kernels/flash_decode.py) and moving any entry never recompiles the
+executable.  Layer order is the architecture's stacking order; for the
+hybrid (RG-LRU) family that is group-major — layer ``g * len(pattern) + i``
+is block ``i`` of group ``g`` — followed by the tail blocks.
+
+``repro.tune`` emits plans whose ladder points are exactly these vectors.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+def num_sites(cfg) -> int:
+    """Number of degree sites for an architecture: one per layer plus one
+    shared head site (unembedding + frontend projections)."""
+    return cfg.n_layers + 1
+
+
+def split_degree(degree, n_layers: int) -> tuple[Optional[Array], Optional[Array]]:
+    """Normalize a runtime ``degree`` into (per-layer vector, head scalar).
+
+    ``None`` passes through as ``(None, None)``; a scalar is broadcast to an
+    ``(n_layers,)`` vector plus itself (so scalar and uniform-vector calls
+    trace to the identical computation); an ``(n_layers + 1,)`` vector is
+    split into its layer part and head entry.  Anything else is a loud error
+    — a silently mis-sized plan must not run.
+    """
+    if degree is None:
+        return None, None
+    d = jnp.asarray(degree, jnp.int32)
+    if d.ndim == 0:
+        return jnp.broadcast_to(d, (n_layers,)), d
+    if d.ndim != 1 or d.shape[0] != n_layers + 1:
+        raise ValueError(
+            f"per-layer degree must have shape ({n_layers + 1},) — one entry "
+            f"per layer plus the head site — got shape {tuple(d.shape)}")
+    return d[:-1], d[-1]

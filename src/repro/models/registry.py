@@ -6,6 +6,11 @@
     logits, aux = model.forward(params, batch, tp=tp)
     cache = model.init_cache(tp, batch, max_len)
     logits, cache = model.decode_step(params, cache, tokens, tp=tp)
+
+Every compute entry point takes a runtime ``degree``: None (static policy
+specs), a global scalar, or an ``(n_layers + 1,)`` per-site vector — an
+ApproxPlan rung (models/degrees.py).  All three are traced operands; moving
+a degree never recompiles.
 """
 
 from __future__ import annotations

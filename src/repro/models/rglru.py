@@ -27,9 +27,25 @@ from repro.dist import meshctx
 from repro.kernels import dispatch as kdispatch
 from repro.models import attention as attn
 from repro.models import layers as L
+from repro.models.degrees import split_degree
 
 Array = jnp.ndarray
 _C = 8.0
+
+
+def _group_degrees(degree, cfg: ArchConfig):
+    """Split a runtime degree into (per-group (n_groups, len(pat)) matrix,
+    per-tail-block vector, head scalar) following the hybrid's group-major
+    layer order (models/degrees.py): layer ``g * len(pat) + i`` is block
+    ``i`` of group ``g``; tail blocks come last."""
+    ldeg, hdeg = split_degree(degree, cfg.n_layers)
+    if ldeg is None:
+        return None, None, None
+    pat = cfg.block_pattern
+    n_groups = cfg.n_layers // len(pat)
+    gdeg = ldeg[: n_groups * len(pat)].reshape(n_groups, len(pat))
+    tdeg = ldeg[n_groups * len(pat):]
+    return gdeg, tdeg, hdeg
 
 
 # ---------------------------------------------------------------------------
@@ -162,6 +178,7 @@ def init_hybrid(key, cfg: ArchConfig, tp: int):
 
 def hybrid_forward(params, cfg: ArchConfig, policy: ApproxPolicy, batch: dict,
                    tp: int = 1, degree=None, remat: str = "dots"):
+    gdeg, tdeg, hdeg = _group_degrees(degree, cfg)
     dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
     tokens = batch["tokens"]
     x = L.embed_apply(params["embed"], tokens, dtype)
@@ -169,14 +186,16 @@ def hybrid_forward(params, cfg: ArchConfig, policy: ApproxPolicy, batch: dict,
     positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
     pat = cfg.block_pattern
 
-    def group_body(h, gp):
+    def group_body(h, xs):
+        gp, dg = (xs, None) if gdeg is None else xs
         for i, name in enumerate(pat):
             bp = gp[f"{name}{i}"]
+            di = None if dg is None else dg[i]
             if name == "rec":
-                h, _ = rec_block_apply(bp, h, cfg, policy, f"g/{name}{i}", degree)
+                h, _ = rec_block_apply(bp, h, cfg, policy, f"g/{name}{i}", di)
             else:
                 h, _ = attn_block_apply(bp, h, cfg, tp, policy, f"g/{name}{i}",
-                                        positions, degree)
+                                        positions, di)
         return h, None
 
     body = group_body
@@ -184,11 +203,13 @@ def hybrid_forward(params, cfg: ArchConfig, policy: ApproxPolicy, batch: dict,
         body = jax.checkpoint(
             group_body,
             policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
-    x, _ = jax.lax.scan(body, x, params["groups"])
+    xs = params["groups"] if gdeg is None else (params["groups"], gdeg)
+    x, _ = jax.lax.scan(body, x, xs)
     for i, bp in enumerate(params["tail"]):
-        x, _ = rec_block_apply(bp, x, cfg, policy, f"tail/{i}", degree)
+        x, _ = rec_block_apply(bp, x, cfg, policy, f"tail/{i}",
+                               kdispatch.site_degree(tdeg, i))
     x = L.rmsnorm_apply(params["ln_f"], x, cfg.norm_eps)
-    logits = L.dense_apply(params["unembed"], x, policy, "unembed", degree)
+    logits = L.dense_apply(params["unembed"], x, policy, "unembed", hdeg)
     return logits.astype(jnp.float32), jnp.zeros((), jnp.float32)
 
 
@@ -230,6 +251,7 @@ def hybrid_prefill(params, cfg: ArchConfig, policy: ApproxPolicy,
     """
     from repro.models.cache_ops import cache_reset_slot, ring_write_indices
 
+    gdeg, tdeg, hdeg = _group_degrees(degree, cfg)
     dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
     pat = cfg.block_pattern
     n_groups = cfg.n_layers // len(pat)
@@ -245,31 +267,34 @@ def hybrid_prefill(params, cfg: ArchConfig, policy: ApproxPolicy,
     x = L.embed_apply(params["embed"], tokens[None], dtype)   # (1, P, d)
     positions = jnp.arange(P, dtype=jnp.int32)[None]
 
-    def group_body(h, gp):
+    def group_body(h, xs):
+        gp, dg = (xs, None) if gdeg is None else xs
         nh, nc = [], []
         gk = gv = None
         for i, name in enumerate(pat):
             bp = gp[f"{name}{i}"]
+            di = None if dg is None else dg[i]
             if name == "rec":
                 h, (h_new, conv_new) = rec_block_apply(
-                    bp, h, cfg, policy, "g", degree)
+                    bp, h, cfg, policy, "g", di)
                 nh.append(h_new)
                 nc.append(conv_new)
             else:
                 h, _, (gk, gv) = attn_block_apply(
-                    bp, h, cfg, tp, policy, "g", positions, degree,
+                    bp, h, cfg, tp, policy, "g", positions, di,
                     return_kv=True)                        # k/v: (1, P, KVr, D)
         return h, (gk, gv, jnp.stack(nh), jnp.stack(nc))
 
-    x, (ks, vs, nhs, ncs) = jax.lax.scan(group_body, x, params["groups"])
+    xs = params["groups"] if gdeg is None else (params["groups"], gdeg)
+    x, (ks, vs, nhs, ncs) = jax.lax.scan(group_body, x, xs)
     # ks: (n_groups, 1, P, KVr, D); nhs: (n_groups, rec_per_group, 1, d)
     new_h = [nhs.reshape(n_groups * rec_per_group, cfg.d_model)]
     new_c = [ncs.reshape(n_groups * rec_per_group, 3, cfg.d_model)]
     for i, bp in enumerate(params["tail"]):
         # path "tail" matches hybrid_decode_step: a path-keyed policy must
         # resolve identically in prefill and teacher-forced decode
-        x, (h_new, conv_new) = rec_block_apply(bp, x, cfg, policy,
-                                               "tail", degree)
+        x, (h_new, conv_new) = rec_block_apply(
+            bp, x, cfg, policy, "tail", kdispatch.site_degree(tdeg, i))
         new_h.append(h_new)
         new_c.append(conv_new)
     src, dst = ring_write_indices(P, W)
@@ -282,7 +307,7 @@ def hybrid_prefill(params, cfg: ArchConfig, policy: ApproxPolicy,
         length=cache.length.at[slot].set(P),
     )
     xl = L.rmsnorm_apply(params["ln_f"], x[:, -1:], cfg.norm_eps)
-    logits = L.dense_apply(params["unembed"], xl, policy, "unembed", degree)
+    logits = L.dense_apply(params["unembed"], xl, policy, "unembed", hdeg)
     return logits.astype(jnp.float32)[:, 0], new_cache
 
 
@@ -291,6 +316,7 @@ def hybrid_decode_step(params, cfg: ArchConfig, policy: ApproxPolicy,
                        degree=None, active=None):
     from repro.models.transformer import _qkv
 
+    gdeg, tdeg, hdeg = _group_degrees(degree, cfg)
     dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
     pd = cfg.padded(tp)
     pat = cfg.block_pattern
@@ -302,14 +328,16 @@ def hybrid_decode_step(params, cfg: ArchConfig, policy: ApproxPolicy,
 
     def group_body(carry, xs):
         h = carry
-        gp, ck, cv, hs, cs = xs  # hs: (rec_per_group, B, d)
+        gp, ck, cv, hs, cs, *rest = xs  # hs: (rec_per_group, B, d)
+        dg = rest[0] if rest else None
         ri = 0
         nh, nc = [], []
         for i, name in enumerate(pat):
             bp = gp[f"{name}{i}"]
+            di = None if dg is None else dg[i]
             if name == "rec":
                 h, (h_new, conv_new) = rec_block_apply(
-                    bp, h, cfg, policy, "g", degree,
+                    bp, h, cfg, policy, "g", di,
                     state=(hs[ri], cs[ri]))
                 nh.append(h_new)
                 nc.append(conv_new)
@@ -319,17 +347,17 @@ def hybrid_decode_step(params, cfg: ArchConfig, policy: ApproxPolicy,
                 import dataclasses
 
                 cfg_l = dataclasses.replace(cfg, swa_window=cfg.local_window)
-                q, k, v = _qkv(bp, hn, cfg_l, pd, policy, "g", positions, degree)
+                q, k, v = _qkv(bp, hn, cfg_l, pd, policy, "g", positions, di)
                 lc = attn.KVCache(ck, cv, cache.length)
                 o, lc2 = kdispatch.decode_attention(
-                    q, k, v, lc, window=cfg.local_window, degree=degree,
+                    q, k, v, lc, window=cfg.local_window, degree=di,
                     active=active)
                 o = o.reshape(B, 1, pd.n_heads * cfg.head_dim)
-                h = L.dense_apply(bp["wo"], o, policy, "g/wo", degree,
+                h = L.dense_apply(bp["wo"], o, policy, "g/wo", di,
                                   residual=h)
                 hn = L.rmsnorm_apply(bp["ln2"], h, cfg.norm_eps)
                 h = L.gated_mlp_apply(bp["mlp"], hn, policy, "g/mlp", cfg.act,
-                                      degree, residual=h)
+                                      di, residual=h)
                 ck, cv = lc2.k, lc2.v
         return h, (ck, cv, jnp.stack(nh), jnp.stack(nc))
 
@@ -338,19 +366,21 @@ def hybrid_decode_step(params, cfg: ArchConfig, policy: ApproxPolicy,
         n_groups, rec_per_group, B, cfg.d_model)
     cs_groups = cache.conv[: n_groups * rec_per_group].reshape(
         n_groups, rec_per_group, B, 3, cfg.d_model)
-    x, (nk, nv, nhs, ncs) = jax.lax.scan(
-        group_body, x, (params["groups"], cache.k, cache.v, hs_groups, cs_groups))
+    xs = (params["groups"], cache.k, cache.v, hs_groups, cs_groups)
+    if gdeg is not None:
+        xs = xs + (gdeg,)
+    x, (nk, nv, nhs, ncs) = jax.lax.scan(group_body, x, xs)
     new_h = [nhs.reshape(-1, B, cfg.d_model)]
     new_c = [ncs.reshape(-1, B, 3, cfg.d_model)]
     for i, bp in enumerate(params["tail"]):
         idx = n_groups * rec_per_group + i
         x, (h_new, conv_new) = rec_block_apply(
-            bp, x, cfg, policy, "tail", degree,
+            bp, x, cfg, policy, "tail", kdispatch.site_degree(tdeg, i),
             state=(cache.h[idx], cache.conv[idx]))
         new_h.append(h_new[None])
         new_c.append(conv_new[None])
     x = L.rmsnorm_apply(params["ln_f"], x, cfg.norm_eps)
-    logits = L.dense_apply(params["unembed"], x, policy, "unembed", degree)
+    logits = L.dense_apply(params["unembed"], x, policy, "unembed", hdeg)
     new_cache = HybridCache(
         k=nk, v=nv,
         h=jnp.concatenate(new_h, axis=0),

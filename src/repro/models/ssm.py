@@ -25,6 +25,7 @@ from repro.configs.base import ArchConfig
 from repro.core.approx import ApproxPolicy
 from repro.dist import meshctx
 from repro.models import layers as L
+from repro.models.degrees import split_degree
 
 Array = jnp.ndarray
 
@@ -172,20 +173,23 @@ def init_ssm_lm(key, cfg: ArchConfig, tp: int):
 
 def ssm_forward(params, cfg: ArchConfig, policy: ApproxPolicy, batch: dict,
                 tp: int = 1, degree=None, remat: str = "dots"):
+    ldeg, hdeg = split_degree(degree, cfg.n_layers)
     dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
     x = L.embed_apply(params["embed"], batch["tokens"], dtype)
 
-    def body(h, lp):
-        h2, _ = ssm_block_apply(lp, h, cfg, policy, "layer", degree)
+    def body(h, xs):
+        lp, dg = (xs, None) if ldeg is None else xs
+        h2, _ = ssm_block_apply(lp, h, cfg, policy, "layer", dg)
         return h2, None
 
     fn = body
     if remat != "none":
         fn = jax.checkpoint(
             body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
-    x, _ = jax.lax.scan(fn, x, params["layers"])
+    xs = params["layers"] if ldeg is None else (params["layers"], ldeg)
+    x, _ = jax.lax.scan(fn, x, xs)
     x = L.rmsnorm_apply(params["ln_f"], x, cfg.norm_eps)
-    logits = L.unembed_apply(params["embed"], x, policy, "unembed", degree)
+    logits = L.unembed_apply(params["embed"], x, policy, "unembed", hdeg)
     return logits.astype(jnp.float32), jnp.zeros((), jnp.float32)
 
 
@@ -217,39 +221,47 @@ def ssm_prefill(params, cfg: ArchConfig, policy: ApproxPolicy,
     """
     from repro.models.cache_ops import cache_reset_slot
 
+    ldeg, hdeg = split_degree(degree, cfg.n_layers)
     dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
     cache = cache_reset_slot(cache, slot)
     P = tokens.shape[0]
     x = L.embed_apply(params["embed"], tokens[None], dtype)   # (1, P, d)
 
-    def body(h, lp):
-        h2, st = ssm_block_apply(lp, h, cfg, policy, "layer", degree,
+    def body(h, xs):
+        lp, dg = (xs, None) if ldeg is None else xs
+        h2, st = ssm_block_apply(lp, h, cfg, policy, "layer", dg,
                                  return_state=True)
         return h2, st
 
-    x, (nh, nc) = jax.lax.scan(body, x, params["layers"])
+    xs = params["layers"] if ldeg is None else (params["layers"], ldeg)
+    x, (nh, nc) = jax.lax.scan(body, x, xs)
     new_cache = SSMCache(
         h=cache.h.at[:, slot].set(nh[:, 0]),
         conv=cache.conv.at[:, slot].set(nc[:, 0].astype(cache.conv.dtype)),
         length=cache.length.at[slot].set(P),
     )
     xl = L.rmsnorm_apply(params["ln_f"], x[:, -1:], cfg.norm_eps)
-    logits = L.unembed_apply(params["embed"], xl, policy, "unembed", degree)
+    logits = L.unembed_apply(params["embed"], xl, policy, "unembed", hdeg)
     return logits.astype(jnp.float32)[:, 0], new_cache
 
 
 def ssm_decode_step(params, cfg: ArchConfig, policy: ApproxPolicy,
                     cache: SSMCache, tokens: Array, tp: int = 1, degree=None):
+    ldeg, hdeg = split_degree(degree, cfg.n_layers)
     dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
     x = L.embed_apply(params["embed"], tokens, dtype)
 
     def body(h, xs):
-        lp, hc, cc = xs
-        h2, (hn, cn) = ssm_block_apply(lp, h, cfg, policy, "layer", degree,
+        lp, hc, cc, *rest = xs
+        dg = rest[0] if rest else None
+        h2, (hn, cn) = ssm_block_apply(lp, h, cfg, policy, "layer", dg,
                                        state=(hc, cc))
         return h2, (hn, cn)
 
-    x, (nh, nc) = jax.lax.scan(body, x, (params["layers"], cache.h, cache.conv))
+    xs = (params["layers"], cache.h, cache.conv)
+    if ldeg is not None:
+        xs = xs + (ldeg,)
+    x, (nh, nc) = jax.lax.scan(body, x, xs)
     x = L.rmsnorm_apply(params["ln_f"], x, cfg.norm_eps)
-    logits = L.unembed_apply(params["embed"], x, policy, "unembed", degree)
+    logits = L.unembed_apply(params["embed"], x, policy, "unembed", hdeg)
     return logits.astype(jnp.float32), SSMCache(nh, nc, cache.length + 1)

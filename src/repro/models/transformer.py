@@ -27,6 +27,7 @@ from repro.kernels import dispatch as kdispatch
 from repro.models import attention as attn
 from repro.models import layers as L
 from repro.models import moe as moe_mod
+from repro.models.degrees import split_degree
 
 Array = jnp.ndarray
 
@@ -172,14 +173,18 @@ def embed_inputs(params, cfg: ArchConfig, batch: dict, dtype, policy, degree):
 
 def lm_forward(params, cfg: ArchConfig, policy: ApproxPolicy, batch: dict,
                tp: int = 1, degree=None, remat: str = "dots") -> tuple[Array, Array]:
-    """Returns (logits (B, S, vocab_padded), aux_loss)."""
+    """Returns (logits (B, S, vocab_padded), aux_loss).  ``degree`` is the
+    runtime DyFXU knob: None, a global scalar, or an (n_layers + 1,) per-site
+    vector consumed as a scan input (models/degrees.py)."""
+    ldeg, hdeg = split_degree(degree, cfg.n_layers)
     dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
-    x, positions = embed_inputs(params, cfg, batch, dtype, policy, degree)
+    x, positions = embed_inputs(params, cfg, batch, dtype, policy, hdeg)
     x = L.shard_activation(x, meshctx.bspec(None, None))
 
-    def body(carry, lp):
+    def body(carry, xs):
+        lp, dg = (xs, None) if ldeg is None else xs
         h, aux = carry
-        h2, a = block_apply(lp, h, cfg, tp, policy, "layer", positions, degree)
+        h2, a = block_apply(lp, h, cfg, tp, policy, "layer", positions, dg)
         return (h2, aux + a), None
 
     body_fn = body
@@ -189,13 +194,13 @@ def lm_forward(params, cfg: ArchConfig, policy: ApproxPolicy, batch: dict,
         body_fn = jax.checkpoint(
             body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
 
-    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
-                               params["layers"])
+    xs = params["layers"] if ldeg is None else (params["layers"], ldeg)
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)), xs)
     x = L.rmsnorm_apply(params["ln_f"], x, cfg.norm_eps)
     if cfg.tie_embeddings:
-        logits = L.unembed_apply(params["embed"], x, policy, "unembed", degree)
+        logits = L.unembed_apply(params["embed"], x, policy, "unembed", hdeg)
     else:
-        logits = L.dense_apply(params["unembed"], x, policy, "unembed", degree)
+        logits = L.dense_apply(params["unembed"], x, policy, "unembed", hdeg)
         logits = logits.astype(jnp.float32)
     logits = L.shard_activation(logits, meshctx.bspec(None, "model"))
     return logits, aux
@@ -266,6 +271,7 @@ def lm_prefill(params, cfg: ArchConfig, policy: ApproxPolicy, cache,
     """
     from repro.models.cache_ops import cache_reset_slot, ring_write_indices
 
+    ldeg, hdeg = split_degree(degree, cfg.n_layers)
     dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
     P = tokens.shape[0]
     quant = isinstance(cache, LMCacheQ)
@@ -279,12 +285,14 @@ def lm_prefill(params, cfg: ArchConfig, policy: ApproxPolicy, cache,
     x = L.embed_apply(params["embed"], tokens[None], dtype)       # (1, P, d)
     positions = jnp.arange(P, dtype=jnp.int32)[None]              # (1, P)
 
-    def body(h, lp):
+    def body(h, xs):
+        lp, dg = (xs, None) if ldeg is None else xs
         h2, _, kv = block_apply(lp, h, cfg, tp, policy, "layer", positions,
-                                degree, return_kv=True)
+                                dg, return_kv=True)
         return h2, kv
 
-    x, (ks, vs) = jax.lax.scan(body, x, params["layers"])  # (Lyr, 1, P, KVr, D)
+    xs = params["layers"] if ldeg is None else (params["layers"], ldeg)
+    x, (ks, vs) = jax.lax.scan(body, x, xs)                # (Lyr, 1, P, KVr, D)
     src, dst = ring_write_indices(P, T)
     k_sel, v_sel = ks[:, 0, src], vs[:, 0, src]            # (Lyr, n, KVr, D)
     if quant:
@@ -305,9 +313,9 @@ def lm_prefill(params, cfg: ArchConfig, policy: ApproxPolicy, cache,
         )
     xl = L.rmsnorm_apply(params["ln_f"], x[:, -1:], cfg.norm_eps)
     if cfg.tie_embeddings:
-        logits = L.unembed_apply(params["embed"], xl, policy, "unembed", degree)
+        logits = L.unembed_apply(params["embed"], xl, policy, "unembed", hdeg)
     else:
-        logits = L.dense_apply(params["unembed"], xl, policy, "unembed", degree)
+        logits = L.dense_apply(params["unembed"], xl, policy, "unembed", hdeg)
     return logits.astype(jnp.float32)[:, 0], new_cache
 
 
@@ -315,7 +323,10 @@ def lm_decode_step(params, cfg: ArchConfig, policy: ApproxPolicy, cache: LMCache
                    tokens: Array, tp: int = 1, degree=None,
                    active=None) -> tuple[Array, LMCache]:
     """tokens: (B, 1).  One decode step; returns (logits (B, 1, V), cache).
-    ``active`` (B,) bool: free-slot mask forwarded to the kernel dispatch."""
+    ``active`` (B,) bool: free-slot mask forwarded to the kernel dispatch.
+    ``degree``: None, a global scalar, or an (n_layers + 1,) per-site vector
+    scanned alongside the layer stack (models/degrees.py)."""
+    ldeg, hdeg = split_degree(degree, cfg.n_layers)
     dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
     pd = cfg.padded(tp)
     B = tokens.shape[0]
@@ -326,39 +337,44 @@ def lm_decode_step(params, cfg: ArchConfig, policy: ApproxPolicy, cache: LMCache
     def body(carry, xs):
         h = carry
         if quant:
-            lp, ck, cv, cks, cvs = xs
+            lp, ck, cv, cks, cvs, *rest = xs
         else:
-            lp, ck, cv = xs
+            lp, ck, cv, *rest = xs
+        dg = rest[0] if rest else None
         hn = L.rmsnorm_apply(lp["ln1"], h, cfg.norm_eps)
-        q, k, v = _qkv(lp, hn, cfg, pd, policy, "layer", positions, degree)
+        q, k, v = _qkv(lp, hn, cfg, pd, policy, "layer", positions, dg)
         if quant:
             lc = attn.QuantKVCache(ck, cv, cks, cvs, cache.length)
         else:
             lc = attn.KVCache(ck, cv, cache.length)
         o, lc2 = kdispatch.decode_attention(q, k, v, lc, window=cfg.swa_window,
-                                            degree=degree, active=active)
+                                            degree=dg, active=active)
         new = (lc2.k, lc2.v, lc2.ks, lc2.vs) if quant else (lc2.k, lc2.v)
         o = o.reshape(B, 1, pd.n_heads * cfg.head_dim)
-        h = L.dense_apply(lp["wo"], o, policy, "layer/wo", degree, residual=h)
+        h = L.dense_apply(lp["wo"], o, policy, "layer/wo", dg, residual=h)
         hn = L.rmsnorm_apply(lp["ln2"], h, cfg.norm_eps)
         if cfg.moe:
-            f, _ = moe_mod.moe_apply(lp["moe"], hn, cfg, policy, "layer/moe", degree)
+            f, _ = moe_mod.moe_apply(lp["moe"], hn, cfg, policy, "layer/moe", dg)
             h = h + f
         else:
             h = L.gated_mlp_apply(lp["mlp"], hn, policy, "layer/mlp", cfg.act,
-                                  degree, residual=h)
+                                  dg, residual=h)
         return h, new
 
+    xs = (params["layers"], cache.k, cache.v)
     if quant:
-        x, (nk, nv, nks, nvs) = jax.lax.scan(
-            body, x, (params["layers"], cache.k, cache.v, cache.ks, cache.vs))
+        xs = xs + (cache.ks, cache.vs)
+    if ldeg is not None:
+        xs = xs + (ldeg,)
+    if quant:
+        x, (nk, nv, nks, nvs) = jax.lax.scan(body, x, xs)
         new_cache = LMCacheQ(nk, nv, nks, nvs, cache.length + 1)
     else:
-        x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], cache.k, cache.v))
+        x, (nk, nv) = jax.lax.scan(body, x, xs)
         new_cache = LMCache(nk, nv, cache.length + 1)
     x = L.rmsnorm_apply(params["ln_f"], x, cfg.norm_eps)
     if cfg.tie_embeddings:
-        logits = L.unembed_apply(params["embed"], x, policy, "unembed", degree)
+        logits = L.unembed_apply(params["embed"], x, policy, "unembed", hdeg)
     else:
-        logits = L.dense_apply(params["unembed"], x, policy, "unembed", degree)
+        logits = L.dense_apply(params["unembed"], x, policy, "unembed", hdeg)
     return logits.astype(jnp.float32), new_cache

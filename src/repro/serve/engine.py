@@ -11,9 +11,15 @@ into a reused slot is bit-identical to a solo run on a fresh engine.
 The serve step is a single compiled executable across the whole engine
 lifetime: sampling mode (greedy / top-k) is baked at construction, while the
 PRNG key, temperature, and the DyFXU approximation ``degree`` (Ch. 5 §5.2.3)
-are traced scalars.  An optional :class:`~repro.core.dynamic.QoSController`
+are traced operands — a global scalar or, under an
+:class:`~repro.tune.plan.ApproxPlan`, a per-layer degree *vector*
+(models/degrees.py).  An optional :class:`~repro.core.dynamic.QoSController`
 moves the degree with serving load — the dissertation's runtime-configuration
 contract at system level: heavy load -> cheaper arithmetic, idle -> exact.
+With a plan the controller steps along the plan's calibrated degree ladder
+(whole mixed per-layer configurations, Pareto points from ``repro.tune``)
+instead of rescaling one global knob; either way the compiled executable
+never changes.
 
   eos_id semantics: ``-1`` (the default) disables EOS stopping — no vocab id
   compares equal.  When set, sampling ``eos_id`` finishes the request; the
@@ -33,7 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.dynamic import QoSController
+from repro.core.dynamic import QoSController, degree_operand, degree_record
 from repro.models.cache_ops import cache_mask_update
 from repro.models.registry import Model
 from repro.serve.metrics import EngineStats
@@ -74,12 +80,25 @@ class Request:
 
 
 class ServeEngine:
+    """Continuous-batching engine over a fixed decode batch of ``slots``.
+
+    Construction compiles the fused serve step once; afterwards ``submit``
+    enqueues requests and ``tick`` / ``run_until_drained`` advance the batch.
+    ``qos`` drives the runtime approximation degree from load; ``plan``
+    replaces the controller's global-ebits ladder with the plan's calibrated
+    per-layer degree ladder (and supplies the initial degree vector), so QoS
+    moves between whole tuned configurations.  ``degree`` pins a static
+    initial degree (scalar or per-site vector) without a controller.
+    ``prepack`` packs AXQ/emul weights into int8 residency at admission
+    (DESIGN.md §9).
+    """
+
     def __init__(self, model: Model, params, *, slots: int = 8,
                  max_len: int = 512, eos_id: int = -1, tp: int = 1,
                  greedy: bool = True, temperature: float = 1.0,
                  top_k: int = 0, seed: int = 0,
                  qos: Optional[QoSController] = None,
-                 degree: Optional[int] = None, prepack: bool = True):
+                 degree=None, prepack: bool = True, plan=None):
         self.model = model
         # quantize-once weight residency (DESIGN.md §9): AXQ/emul weights are
         # packed at admission into the engine, so every prefill/decode step
@@ -114,12 +133,36 @@ class ServeEngine:
             self._max_prompt = None
         else:
             self._max_prompt = max_len
+        # approximation plan: validate against the arch, and point the QoS
+        # controller's ladder at the plan's calibrated per-layer rungs
+        self.plan = plan
+        if plan is not None:
+            plan.validate_for(cfg)
+            if qos is not None:
+                qos.ladder = plan.qos_ladder()
+                qos.degree = min(qos.degree, len(qos.ladder) - 1)
         # degree is traced only when someone will drive it; None keeps the
-        # static policy spec (and a leaner step signature).
-        self._use_degree = qos is not None or degree is not None
-        self._degree = (
-            jnp.asarray(_DEFAULT_EBITS if degree is None else degree, jnp.int32)
-            if self._use_degree else None)
+        # static policy spec (and a leaner step signature).  With a plan (or
+        # any ladder of per-layer rungs) the traced operand is the degree
+        # vector (models/degrees.py) — its shape is fixed by the arch, so
+        # ladder moves never retrace.  The initial degree comes from the
+        # controller's current rung so the first QoS update cannot change
+        # the operand's shape (scalar -> vector would recompile).
+        self._use_degree = (qos is not None or degree is not None
+                            or plan is not None)
+        if degree is not None:
+            self._degree = jnp.asarray(degree, jnp.int32)
+        elif qos is not None and qos.ladder:
+            self._degree = degree_operand(qos.ladder[qos.degree])
+        elif plan is not None:
+            self._degree = jnp.asarray(plan.degrees(0), jnp.int32)
+        else:
+            self._degree = (jnp.asarray(_DEFAULT_EBITS, jnp.int32)
+                            if self._use_degree else None)
+        if self._degree is not None:
+            # the construction-time degree is served until the first QoS
+            # update: record it so the history covers every degree used
+            self.stats.degree_history.append((-1, degree_record(self._degree)))
         vocab = model.cfg.vocab
 
         def serve_step(p, cache, tokens, active, key, temp, deg):
@@ -139,6 +182,11 @@ class ServeEngine:
     # ------------------------------------------------------------------
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> Request:
+        """Enqueue one request (FIFO).  Returns the live Request object —
+        tokens appear in ``request.out_tokens`` as ticks generate them, and
+        latency fields populate when it finishes.  Raises at submit time for
+        empty prompts or prompts exceeding the cache capacity (rejecting
+        mid-tick would lose the request)."""
         prompt = np.asarray(prompt, np.int32)
         if prompt.size == 0:
             raise ValueError("empty prompt")
@@ -178,16 +226,21 @@ class ServeEngine:
     def _update_degree(self, n_active: int):
         """Feed the QoS controller a load-headroom signal: overload drives
         the approximation degree down the ladder (cheaper arithmetic), idle
-        capacity drives it back to exact — at fixed compiled executable."""
+        capacity drives it back to exact — at fixed compiled executable.
+        Plan ladders step whole per-layer degree vectors; the legacy global
+        ladder steps one ebits scalar."""
         occupancy = (n_active + len(self.queue)) / self.slots
         headroom = max(0.0, 1.0 - occupancy)
         kw = self.qos.update(self._ticks, headroom)
-        ebits = int(kw.get("ebits", _DEFAULT_EBITS))
-        self._degree = jnp.asarray(ebits, jnp.int32)
-        self.stats.degree_history.append((self._ticks, ebits))
+        self._degree = degree_operand(kw)
+        self.stats.degree_history.append(
+            (self._ticks, degree_record(self._degree)))
 
     def tick(self) -> int:
-        """One engine iteration; returns number of active slots."""
+        """One engine iteration: admit queued requests into free slots
+        (fused prefill per admission), update the QoS degree, run ONE fused
+        decode step over all slots, and harvest sampled tokens / finished
+        requests.  Returns the number of active slots (0 = idle)."""
         # FIFO admission into free slots
         for s in range(self.slots):
             if self.slot_req[s] is None and self.queue:
@@ -230,6 +283,8 @@ class ServeEngine:
         return len(active)
 
     def run_until_drained(self, max_ticks: int = 10_000) -> list[Request]:
+        """Tick until the queue and every slot are empty (or ``max_ticks``);
+        returns all finished requests, completion order."""
         ticks = 0
         while (self.queue or any(r is not None for r in self.slot_req)) \
                 and ticks < max_ticks:

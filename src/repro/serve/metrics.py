@@ -26,7 +26,9 @@ class EngineStats:
     decode_tokens: int = 0      # slot-steps executed by the fused decode step
     decode_steps: int = 0       # engine ticks that ran the fused step
     admitted: int = 0           # requests admitted into a slot
-    # recent (tick, ebits) trace; bounded so long-lived engines don't leak
+    # recent (tick, degree) trace — degree is a global ebits int or, under
+    # an ApproxPlan ladder, the per-layer degrees tuple of the active rung;
+    # bounded so long-lived engines don't leak
     degree_history: deque = field(default_factory=lambda: deque(maxlen=512))
 
 
@@ -64,5 +66,8 @@ def summarize(done, stats: EngineStats | None = None,
         out["engine_decode_tokens"] = stats.decode_tokens
         out["engine_decode_steps"] = stats.decode_steps
         if stats.degree_history:
-            out["degree_final_ebits"] = stats.degree_history[-1][1]
+            final = stats.degree_history[-1][1]
+            # global ladder: an int; plan ladder: the rung's per-layer tuple
+            out["degree_final_ebits"] = (
+                list(final) if isinstance(final, (tuple, list)) else final)
     return out

@@ -7,8 +7,10 @@ Single-process here; the multi-host contract is documented per hook:
   * SIGTERM/SIGINT -> synchronous checkpoint then clean exit (preemption);
   * the step-time watchdog flags stragglers (per-host EMA vs median across
     hosts arrives via the launcher's heartbeat file in multi-host runs);
-  * the QoS controller moves the DyFXU degree (traced scalar — no recompile)
-    to hold quality within budget while harvesting approximation gains.
+  * the QoS controller moves the DyFXU degree (a traced scalar, or a traced
+    per-layer vector when the ladder holds ApproxPlan rungs — no recompile
+    either way) to hold quality within budget while harvesting
+    approximation gains.
 """
 
 from __future__ import annotations
@@ -23,7 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer
-from repro.core.dynamic import QoSController
+from repro.core.dynamic import QoSController, degree_operand, degree_record
 from repro.data.pipeline import SyntheticPipeline
 from repro.models.registry import Model
 from repro.train import step as step_mod
@@ -62,6 +64,11 @@ class TrainerConfig:
     # QoS-driven dynamic approximation (None = static degree)
     qos: Optional[QoSController] = None
     qos_every: int = 20
+    # static degree used when qos is None: an ApproxPlan rung's per-site
+    # degree list, or None for the global default (ebits 8) — lets
+    # `launch.train --plan` (no --qos) train a fixed tuned configuration,
+    # mirroring the serve engine's plan-without-controller behavior
+    static_degrees: Optional[list] = None
 
 
 class Trainer:
@@ -114,9 +121,13 @@ class Trainer:
         self._install_signal_handlers()
         key = key if key is not None else jax.random.PRNGKey(0)
         state, start = self.init_or_restore(key)
-        degree_kwargs = (self.tcfg.qos.ladder[self.tcfg.qos.degree]
-                         if self.tcfg.qos else {"ebits": 8})
-        degree = jnp.asarray(degree_kwargs.get("ebits", 8), jnp.int32)
+        if self.tcfg.qos:
+            degree_kwargs = self.tcfg.qos.ladder[self.tcfg.qos.degree]
+        elif self.tcfg.static_degrees is not None:
+            degree_kwargs = {"degrees": self.tcfg.static_degrees}
+        else:
+            degree_kwargs = {"ebits": 8}
+        degree = degree_operand(degree_kwargs)
         t_last_loss = None
         step = start
         while step < self.tcfg.total_steps:
@@ -129,7 +140,7 @@ class Trainer:
             slow = self.watchdog.observe(step, dt)
             rec = {"step": step, "loss": loss, "time_s": dt,
                    "grad_norm": float(metrics["grad_norm"]),
-                   "degree": int(degree), "straggler": slow}
+                   "degree": degree_record(degree), "straggler": slow}
             self.history.append(rec)
             if step % self.tcfg.log_every == 0:
                 print(f"[trainer] step {step} loss {loss:.4f} "
@@ -138,7 +149,7 @@ class Trainer:
             if self.tcfg.qos and step % self.tcfg.qos_every == 0 and step > start:
                 signal_q = (t_last_loss - loss) if t_last_loss is not None else 0.0
                 kw = self.tcfg.qos.update(step, signal_q)
-                degree = jnp.asarray(kw.get("ebits", 8), jnp.int32)
+                degree = degree_operand(kw)
                 t_last_loss = loss
             elif t_last_loss is None:
                 t_last_loss = loss
@@ -146,7 +157,7 @@ class Trainer:
             if step % self.tcfg.ckpt_every == 0 or self._preempted:
                 self.ckpt.save(
                     step, state,
-                    extra={"data_step": step, "degree": int(degree)},
+                    extra={"data_step": step, "degree": degree_record(degree)},
                     blocking=self._preempted or not self.tcfg.async_ckpt)
                 if self._preempted:
                     print(f"[trainer] preempted: checkpointed at {step}, exiting")
@@ -154,7 +165,8 @@ class Trainer:
         self.ckpt.wait()
         if not self._preempted and (step % self.tcfg.ckpt_every):
             self.ckpt.save(step, state,
-                           extra={"data_step": step, "degree": int(degree)},
+                           extra={"data_step": step,
+                                  "degree": degree_record(degree)},
                            blocking=True)
         return {"final_step": step, "history": self.history,
                 "preempted": self._preempted,

@@ -1,0 +1,19 @@
+"""repro.tune — calibration-driven per-layer approximation plans.
+
+Offline half: :func:`build_plan` / :func:`profile_sensitivity` explore mixed
+per-layer degree assignments on a calibration batch and emit a serializable
+:class:`ApproxPlan` (plan.py).  Runtime half: the plan's degree ladder is
+executed by the models' per-layer degree vectors (models/degrees.py) and
+stepped by the serve QoS controller (serve/engine.py ``plan=``).
+See docs/plans.md for the workflow.
+"""
+
+from repro.tune.autotune import (build_plan, energy_per_mac, measure_error,
+                                 profile_sensitivity, site_macs, vector_cost)
+from repro.tune.plan import (ApproxPlan, PlanPoint, site_names, uniform_plan)
+
+__all__ = [
+    "ApproxPlan", "PlanPoint", "build_plan", "energy_per_mac",
+    "measure_error", "profile_sensitivity", "site_macs", "site_names",
+    "uniform_plan", "vector_cost",
+]

@@ -1,0 +1,38 @@
+"""Docs health inside the tier-1 suite: the same gates the CI `docs` job
+runs (tools/check_docs.py) — intra-repo markdown links resolve and the
+docs/ python snippets compile."""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "tools"))
+
+import check_docs  # noqa: E402
+
+
+def test_docs_exist():
+    root = check_docs.ROOT
+    assert (root / "docs" / "approximation.md").exists()
+    assert (root / "docs" / "plans.md").exists()
+
+
+def test_intra_repo_links_resolve():
+    errors = [e for p in check_docs.doc_paths() for e in check_docs.check_links(p)]
+    assert not errors, "\n".join(errors)
+
+
+def test_doc_snippets_compile():
+    docs = sorted((check_docs.ROOT / "docs").glob("*.md"))
+    assert docs
+    errors = [e for p in docs for e in check_docs.check_snippets(p)]
+    assert not errors, "\n".join(errors)
+
+
+def test_checker_catches_broken_link(tmp_path, monkeypatch):
+    """The gate itself must fail on rot (guards against a regex regression
+    making the job vacuously green)."""
+    bad = tmp_path / "bad.md"
+    bad.write_text("see [missing](does/not/exist.md) and "
+                   "[ok](https://example.com)\n"
+                   "```python\ndef broken(:\n```\n")
+    assert check_docs.check_links(bad)
+    assert check_docs.check_snippets(bad)

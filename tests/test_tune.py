@@ -1,0 +1,271 @@
+"""repro.tune: plan round-tripping, per-layer == global degree equivalence
+across all four families, QoS plan-ladder stepping, and the zero-recompile
+contract of the per-layer degree vector."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.approx import ApproxMode, ApproxSpec, uniform
+from repro.core.dynamic import QoSController
+from repro.models import build_model
+from repro.models.degrees import num_sites, split_degree
+from repro.models.registry import concrete_batch
+from repro.serve.engine import ServeEngine
+from repro.tune import (ApproxPlan, PlanPoint, build_plan, uniform_plan,
+                        vector_cost)
+from repro.tune.plan import site_names
+
+FAMILIES = ["tinyllama-1.1b-smoke", "qwen2-moe-a2.7b-smoke",
+            "mamba2-370m-smoke", "recurrentgemma-2b-smoke"]
+
+_CACHE: dict = {}
+
+
+def _setup(arch: str):
+    """Model under the plan-execution policy (uniform dynamic AXQ)."""
+    if arch not in _CACHE:
+        cfg = get_config(arch)
+        policy = uniform(ApproxSpec(mode=ApproxMode.AXQ, ebits=8,
+                                    dynamic=True, block=64))
+        m = build_model(cfg, policy)
+        params = m.init(jax.random.PRNGKey(0), tp=1)
+        _CACHE[arch] = (cfg, m, params)
+    return _CACHE[arch]
+
+
+def _tuned_plan():
+    if "plan" not in _CACHE:
+        cfg, m, params = _setup("tinyllama-1.1b-smoke")
+        calib = concrete_batch(cfg, 16, 2, key=jax.random.PRNGKey(7))
+        _CACHE["plan"] = build_plan(m, params, calib, grid=(8, 7, 6),
+                                    block=64, max_rungs=4)
+    return _CACHE["plan"]
+
+
+# ---------------------------------------------------------------------------
+# plan serialization
+# ---------------------------------------------------------------------------
+
+
+def test_plan_roundtrip_bit_stable(tmp_path):
+    plan = _tuned_plan()
+    path = plan.save(tmp_path / "plan.json")
+    loaded = ApproxPlan.load(path)
+    assert loaded == plan
+    assert loaded.to_dict() == plan.to_dict()
+    # degrees survive exactly (ints, not floats)
+    for a, b in zip(plan.ladder, loaded.ladder):
+        assert a.degrees == b.degrees
+        assert isinstance(b.degrees[0], int)
+    # saving the loaded plan reproduces the bytes
+    p2 = loaded.save(tmp_path / "plan2.json")
+    assert p2.read_bytes() == path.read_bytes()
+
+
+def test_plan_validate_mismatch():
+    cfg = get_config("tinyllama-1.1b-smoke")
+    plan = uniform_plan(cfg)
+    plan.validate_for(cfg)
+    # wrong arch: calibrated numbers don't transfer, even at equal depth
+    other = get_config("recurrentgemma-2b-smoke")
+    with pytest.raises(ValueError, match="tuned for"):
+        plan.validate_for(other)
+    # right arch, corrupted site list
+    bad = ApproxPlan(arch=cfg.name, sites=site_names(cfg)[:-1],
+                     ladder=uniform_plan(cfg).ladder)
+    with pytest.raises(ValueError, match="sites"):
+        bad.validate_for(cfg)
+    with pytest.raises(ValueError, match="empty ladder"):
+        ApproxPlan(arch=cfg.name, sites=site_names(cfg),
+                   ladder=[]).validate_for(cfg)
+
+
+def test_uniform_plan_shape():
+    cfg = get_config("tinyllama-1.1b-smoke")
+    plan = uniform_plan(cfg, ebits_ladder=(8, 6))
+    assert plan.num_sites() == num_sites(cfg) == cfg.n_layers + 1
+    assert (plan.degrees(0) == 8).all() and (plan.degrees(1) == 6).all()
+    assert plan.qos_ladder() == [{"degrees": [8] * 3}, {"degrees": [6] * 3}]
+
+
+def test_split_degree_contract():
+    assert split_degree(None, 4) == (None, None)
+    l, h = split_degree(6, 4)
+    assert l.shape == (4,) and h.shape == ()
+    l, h = split_degree(jnp.asarray([8, 7, 6, 5, 4], jnp.int32), 4)
+    assert l.tolist() == [8, 7, 6, 5] and int(h) == 4
+    with pytest.raises(ValueError, match="per-layer degree"):
+        split_degree(jnp.asarray([8, 7], jnp.int32), 4)
+
+
+# ---------------------------------------------------------------------------
+# per-layer == global when uniform (all four families)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_uniform_vector_equals_global_scalar(arch):
+    """A uniform plan rung must execute bit-identically to the legacy global
+    scalar degree — forward and decode."""
+    cfg, m, params = _setup(arch)
+    batch = concrete_batch(cfg, 16, 2, key=jax.random.PRNGKey(3))
+    vec = jnp.asarray([6] * num_sites(cfg), jnp.int32)
+    ls, _ = m.forward(params, batch, degree=jnp.asarray(6, jnp.int32))
+    lv, _ = m.forward(params, batch, degree=vec)
+    np.testing.assert_array_equal(np.asarray(ls), np.asarray(lv))
+
+    cache = m.init_cache(tp=1, batch=2, max_len=32)
+    toks = np.array([[3], [5]], np.int32)
+    ds, _ = m.decode_step(params, cache, toks, degree=jnp.asarray(6, jnp.int32))
+    dv, _ = m.decode_step(params, cache, toks, degree=vec)
+    np.testing.assert_array_equal(np.asarray(ds), np.asarray(dv))
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_mixed_vector_changes_output(arch):
+    """A genuinely mixed assignment must not silently collapse to uniform."""
+    cfg, m, params = _setup(arch)
+    batch = concrete_batch(cfg, 16, 2, key=jax.random.PRNGKey(3))
+    S = num_sites(cfg)
+    mixed = jnp.asarray([8, 4] + [6] * (S - 2), jnp.int32)
+    lu, _ = m.forward(params, batch, degree=jnp.asarray(6, jnp.int32))
+    lm, _ = m.forward(params, batch, degree=mixed)
+    assert not np.array_equal(np.asarray(lu), np.asarray(lm))
+
+
+def test_prefill_accepts_plan_vector():
+    cfg, m, params = _setup("tinyllama-1.1b-smoke")
+    S = num_sites(cfg)
+    cache = m.init_cache(tp=1, batch=2, max_len=32)
+    vec = jnp.asarray([7] * S, jnp.int32)
+    lg_v, _ = m.prefill(params, cache, jnp.asarray([1, 2, 3], jnp.int32),
+                        jnp.asarray(0), degree=vec)
+    lg_s, _ = m.prefill(params, cache, jnp.asarray([1, 2, 3], jnp.int32),
+                        jnp.asarray(0), degree=jnp.asarray(7, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(lg_v), np.asarray(lg_s))
+
+
+# ---------------------------------------------------------------------------
+# tuner output
+# ---------------------------------------------------------------------------
+
+
+def test_plan_ladder_is_pareto_and_ordered():
+    plan = _tuned_plan()
+    pts = plan.ladder
+    assert len(pts) >= 2
+    # most accurate first; monotone cost descent along the ladder
+    costs = [p.cost for p in pts]
+    assert costs == sorted(costs, reverse=True)
+    # no rung dominates another (front property survives subsampling)
+    for a in pts:
+        for b in pts:
+            if a is b:
+                continue
+            assert not (a.cost <= b.cost and a.error <= b.error
+                        and (a.cost < b.cost or a.error < b.error))
+    # rung 0 is the most accurate configuration visited
+    assert pts[0].error == min(p.error for p in pts)
+
+
+def test_vector_cost_monotone():
+    cfg = get_config("tinyllama-1.1b-smoke")
+    S = num_sites(cfg)
+    costs = [vector_cost(cfg, [e] * S) for e in (8, 7, 6, 5, 4)]
+    assert costs[0] == pytest.approx(1.0)
+    assert all(a > b for a, b in zip(costs, costs[1:]))
+
+
+# ---------------------------------------------------------------------------
+# serving: QoS ladder stepping + zero recompiles
+# ---------------------------------------------------------------------------
+
+
+def test_qos_plan_ladder_steps_every_rung_zero_recompiles():
+    """Under sustained overload the QoS controller must walk the plan's
+    ladder rung by rung — and the whole walk must reuse ONE compiled serve
+    step (the degree vector is a traced operand)."""
+    cfg, m, params = _setup("tinyllama-1.1b-smoke")
+    plan = _tuned_plan()
+    qos = QoSController(ladder=[], low_water=0.25, high_water=0.75,
+                        cooldown_steps=1)
+    eng = ServeEngine(m, params, slots=2, max_len=64, qos=qos, plan=plan)
+    assert qos.ladder == plan.qos_ladder()
+    rng = np.random.default_rng(0)
+    for _ in range(12):                   # overload: queue >> slots
+        eng.submit(rng.integers(0, cfg.vocab, 4), 8)
+    done = eng.run_until_drained()
+    assert len(done) == 12
+    visited = {d for _, d in eng.stats.degree_history}
+    assert visited == {tuple(pt.degrees) for pt in plan.ladder}, visited
+    assert eng._step._cache_size() == 1, "degree ladder must not recompile"
+
+
+def test_engine_plan_static_degree_no_qos():
+    """plan without qos: engine serves the most-accurate rung statically."""
+    cfg, m, params = _setup("tinyllama-1.1b-smoke")
+    plan = _tuned_plan()
+    eng = ServeEngine(m, params, slots=2, max_len=64, plan=plan)
+    eng.submit(np.array([1, 2, 3]), 4)
+    done = eng.run_until_drained()
+    assert len(done) == 1 and len(done[0].out_tokens) == 4
+    assert np.asarray(eng._degree).tolist() == list(plan.ladder[0].degrees)
+
+
+def test_engine_plan_matches_manual_degree():
+    """Serving under a plan rung == serving with that vector passed as the
+    static degree (the plan is transport, not arithmetic)."""
+    cfg, m, params = _setup("tinyllama-1.1b-smoke")
+    plan = _tuned_plan()
+    rung = plan.ladder[-1]
+    prompt = np.array([5, 6, 7])
+    a = ServeEngine(m, params, slots=2, max_len=64, plan=plan,
+                    degree=rung.degree_array())
+    a.submit(prompt, 5)
+    ta = a.run_until_drained()[0].out_tokens
+    b = ServeEngine(m, params, slots=2, max_len=64,
+                    degree=rung.degree_array())
+    b.submit(prompt, 5)
+    tb = b.run_until_drained()[0].out_tokens
+    assert ta == tb
+
+
+def test_degree_operand_decoder():
+    """The one shared ladder-entry decoder + record rule (engine, trainer)."""
+    from repro.core.dynamic import degree_operand, degree_record
+
+    d = degree_operand({"degrees": [8, 7, 6]})
+    assert d.shape == (3,) and d.dtype == jnp.int32
+    s = degree_operand({"ebits": 5})
+    assert s.shape == () and int(s) == 5
+    assert degree_record(d) == (8, 7, 6)
+    assert degree_record(s) == 5
+
+
+def test_site_degree_helper():
+    from repro.kernels.dispatch import site_degree
+
+    assert site_degree(None, 2) is None
+    sc = site_degree(jnp.asarray(6, jnp.int32), 2)
+    assert sc.ndim == 0 and int(sc) == 6          # scalar passes through
+    vec = jnp.asarray([8, 7, 6], jnp.int32)
+    assert int(site_degree(vec, 1)) == 7
+
+
+def test_qos_degrees_ladder_without_plan_no_retrace():
+    """A controller carrying per-layer rungs but no plan= must still start
+    on its current rung (vector), not a scalar — a scalar->vector swap at
+    the first update would recompile the serve step."""
+    cfg, m, params = _setup("tinyllama-1.1b-smoke")
+    plan = _tuned_plan()
+    qos = QoSController(ladder=plan.qos_ladder(), low_water=0.25,
+                        high_water=0.75, cooldown_steps=1)
+    eng = ServeEngine(m, params, slots=2, max_len=64, qos=qos)
+    assert np.asarray(eng._degree).shape == (num_sites(cfg),)
+    rng = np.random.default_rng(0)
+    for _ in range(8):
+        eng.submit(rng.integers(0, cfg.vocab, 4), 6)
+    eng.run_until_drained()
+    assert eng._step._cache_size() == 1

@@ -1,0 +1,102 @@
+"""Docs health check (CI `docs` job; also run by tests/test_docs.py).
+
+Two gates, stdlib-only so the job needs no installs:
+
+1. **intra-repo links** — every relative markdown link in README.md,
+   DESIGN.md, ROADMAP.md and docs/*.md must resolve to a file or directory
+   in the repo (anchors stripped; http(s)/mailto links skipped).
+2. **doc snippets** — every fenced ``python`` block in docs/*.md must at
+   least compile (`compile(..., "exec")` — the compileall-style gate), so
+   examples can't rot into syntax errors silently.  Blocks marked with a
+   ``# doctest: skip`` first line are exempt (e.g. deliberately elided
+   fragments).
+
+Exit code 0 = healthy; non-zero prints every violation.
+
+  python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+DOC_FILES = ["README.md", "DESIGN.md", "ROADMAP.md"]
+SNIPPET_DIRS = ["docs"]
+
+_LINK = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")
+_FENCE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def _rel(path: pathlib.Path) -> str:
+    try:
+        return str(path.relative_to(ROOT))
+    except ValueError:            # outside the repo (tests use tmp files)
+        return str(path)
+
+
+def doc_paths() -> list:
+    out = [ROOT / f for f in DOC_FILES if (ROOT / f).exists()]
+    for d in SNIPPET_DIRS:
+        out.extend(sorted((ROOT / d).glob("*.md")))
+    return out
+
+
+def check_links(path: pathlib.Path) -> list:
+    """Return broken-link messages for one markdown file."""
+    errors = []
+    for target in _LINK.findall(path.read_text()):
+        if target.startswith(_EXTERNAL) or target.startswith("#"):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        resolved = (path.parent / rel).resolve()
+        if not resolved.exists():
+            errors.append(f"{_rel(path)}: broken link -> {target}")
+    return errors
+
+
+def check_snippets(path: pathlib.Path) -> list:
+    """Return compile-failure messages for one markdown file's ```python
+    fences."""
+    errors = []
+    for i, block in enumerate(_FENCE.findall(path.read_text())):
+        if block.lstrip().startswith("# doctest: skip"):
+            continue
+        try:
+            compile(block, f"{path.name}[snippet {i}]", "exec")
+        except SyntaxError as e:
+            errors.append(f"{_rel(path)} snippet {i}: {e}")
+    return errors
+
+
+def run() -> list:
+    errors = []
+    snippet_files = []
+    for d in SNIPPET_DIRS:
+        snippet_files.extend(sorted((ROOT / d).glob("*.md")))
+    for p in doc_paths():
+        errors.extend(check_links(p))
+    for p in snippet_files:
+        errors.extend(check_snippets(p))
+    return errors
+
+
+def main() -> int:
+    errors = run()
+    for e in errors:
+        print(f"[check_docs] {e}", file=sys.stderr)
+    n_docs = len(doc_paths())
+    if errors:
+        print(f"[check_docs] FAILED: {len(errors)} problem(s) in {n_docs} "
+              f"file(s)", file=sys.stderr)
+        return 1
+    print(f"[check_docs] OK: {n_docs} markdown file(s), links + snippets")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
