@@ -82,8 +82,10 @@ def _flash_rows():
     w = S // 8
     (_, st_band) = run(True, window=w)
     us_band = _time(lambda: run(True, w), reps=3)
-    out.append(("kern.flash_banded_w%d_us" % w, round(us_band, 0),
-                f"steps {int(st_band)} (O(S*W) vs {int(st_dense)} dense)"))
+    # shape-stable row name (W = S/8 differs between tiny and full runs;
+    # the regression gate diffs fresh-vs-committed rows by name)
+    out.append(("kern.flash_banded_us", round(us_band, 0),
+                f"W={w}, steps {int(st_band)} (O(S*W) vs {int(st_dense)} dense)"))
     return out
 
 

@@ -4,11 +4,13 @@ Prints ``name,us_per_call,derived`` CSV.
 For the perf-tracked modules (bench_kernels, bench_serving) the rows are also
 written to ``benchmarks/BENCH_kernels.json`` / ``benchmarks/BENCH_serving.json``
 — machine-readable perf records (skip-grid block-steps, decode µs/step,
-tok/s) that future PRs regress against.
+tok/s) that future PRs regress against (``tools/check_bench.py`` /
+``repro.obs.regress`` gate on their scale-invariant invariants).
 """
 import json
 import pathlib
 import platform
+import subprocess
 import sys
 import time
 import traceback
@@ -18,25 +20,50 @@ _JSON_MODULES = {"bench_kernels": "BENCH_kernels.json",
                  "bench_gemm": "BENCH_gemm.json",
                  "bench_tune": "BENCH_tune.json"}
 
+# bump when the record layout changes; repro.obs.regress pins this
+SCHEMA_VERSION = 2
 
-def _write_record(name: str, rows: list) -> None:
+
+def _git_sha() -> str:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=pathlib.Path(__file__).parent, timeout=10)
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else "unknown"
+    except Exception:
+        return "unknown"
+
+
+def make_record(name: str, rows: list) -> dict:
+    """Build a schema-v2 BENCH record: provenance stamps (git SHA, platform,
+    JAX + kernel backends) make records comparable across machines — the
+    regression gate refuses unstamped or cross-schema diffs."""
     import os
 
     import jax
 
-    rec = {
+    from repro.kernels import dispatch as kdispatch
+
+    return {
         "bench": name,
+        "schema_version": SCHEMA_VERSION,
         "unix_time": int(time.time()),
+        "git_sha": _git_sha(),
         "platform": platform.platform(),
         "jax_backend": jax.default_backend(),
+        "kernels_backend": kdispatch.resolved_backend(),
         # tiny CI-smoke runs use shrunk shapes: never compare their rows
         # against a full-shape baseline (row names overlap)
         "tiny_shapes": os.environ.get("REPRO_BENCH_TINY", "0") == "1",
         "columns": ["name", "us_per_call", "derived"],
         "rows": [[str(x) for x in r] for r in rows],
     }
+
+
+def _write_record(name: str, rows: list) -> None:
     path = pathlib.Path(__file__).parent / _JSON_MODULES[name]
-    path.write_text(json.dumps(rec, indent=1) + "\n")
+    path.write_text(json.dumps(make_record(name, rows), indent=1) + "\n")
 
 
 def main() -> None:

@@ -4,6 +4,10 @@
   # execute a tuned per-layer plan (emitted by approx_pareto_explore.py),
   # QoS stepping its calibrated degree ladder under load:
   PYTHONPATH=src python examples/serve_lm.py --plan plans/approx_plan.json
+
+Every run writes observability artifacts (repro.obs): a Chrome trace of
+the engine lifecycle (open --trace-out in chrome://tracing / Perfetto)
+and a Prometheus text snapshot of the engine counters and histograms.
 """
 import argparse
 import time
@@ -14,6 +18,8 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.dynamic import QoSController
 from repro.models import build_model
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serve.engine import ServeEngine
 
 
@@ -26,6 +32,10 @@ def main():
     ap.add_argument("--plan", default=None,
                     help="ApproxPlan JSON from approx_pareto_explore.py: "
                          "serve under its per-layer degree ladder")
+    ap.add_argument("--trace-out", default="serve_trace.json",
+                    help="Chrome trace_event JSON path ('' disables)")
+    ap.add_argument("--metrics-out", default="serve_metrics.prom",
+                    help="Prometheus text-format path ('' disables)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -41,8 +51,11 @@ def main():
     else:
         model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    if args.trace_out:
+        obs_trace.enable()
+    registry = obs_metrics.get_registry() if args.metrics_out else None
     eng = ServeEngine(model, params, slots=args.slots, max_len=256,
-                      plan=plan, qos=qos)
+                      plan=plan, qos=qos, registry=registry)
     rng = np.random.default_rng(0)
     t0 = time.time()
     for i in range(args.requests):
@@ -61,6 +74,12 @@ def main():
         print(f"[serve_lm] plan ladder: visited {len(rungs)} of "
               f"{len(plan.ladder)} rungs; final degrees = "
               f"{list(eng.stats.degree_history[-1][1])}")
+    if args.trace_out:
+        obs_trace.get_tracer().write(args.trace_out)
+        print(f"[serve_lm] wrote Chrome trace -> {args.trace_out}")
+    if args.metrics_out:
+        obs_metrics.get_registry().write(args.metrics_out)
+        print(f"[serve_lm] wrote Prometheus metrics -> {args.metrics_out}")
 
 
 if __name__ == "__main__":

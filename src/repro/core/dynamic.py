@@ -33,14 +33,21 @@ def degree_operand(entry: dict):
     return jnp.asarray(int(entry.get("ebits", 8)), jnp.int32)
 
 
-def degree_record(degree):
+def degree_record(degree, *, as_tuple: bool = False):
     """Loggable/hashable form of a degree operand: a plain int for the
     global scalar, a tuple of ints for a per-site vector.  The one
-    operand-to-record rule (engine history, trainer history/checkpoints)."""
+    operand-to-record rule (engine history, trainer history/checkpoints).
+
+    ``as_tuple=True`` normalizes the scalar case to a 1-tuple as well, so
+    consumers that iterate record streams (metrics exporters, trace
+    events, tests) never isinstance-branch on int-vs-tuple — the serve
+    engine's ``degree_history`` records in this form."""
     import numpy as np
 
     arr = np.asarray(degree)
-    return tuple(int(x) for x in arr.reshape(-1)) if arr.ndim else int(arr)
+    if arr.ndim or as_tuple:
+        return tuple(int(x) for x in arr.reshape(-1))
+    return int(arr)
 
 
 @dataclass

@@ -35,7 +35,12 @@ Routing contract:
 
 ``last_route`` records the decision per call site — keys ``"prefill"`` /
 ``"decode"`` (attention) and ``"gemm"`` / ``"gated"`` (AXQ projections) —
-for tests and benchmarks.
+for tests and benchmarks.  Every decision is also published through
+``repro.obs`` (DESIGN.md §11): a ``repro_kernel_route_trace_total{site=..,
+backend=..}`` counter on the process-global metrics registry plus a
+``kernel_route`` trace event.  Routers run at *trace* time (inside jit
+tracing), so these count compilations — the serve engine's
+``repro_kernel_route_steps_total`` counts executed steps per backend.
 
 Runtime degree contract: every router takes the DyFXU degree as a *traced*
 scalar (``ebits`` / ``degree``), so moving it never recompiles.  Per-layer
@@ -73,6 +78,22 @@ _override: Optional[str] = None
 #: "gemm" / "gated" AXQ projections) — debug aid for tests and benchmarks,
 #: written at trace time.
 last_route: dict = {}
+
+
+def _record_route(site: str, backend: str) -> None:
+    """Publish one routing decision: ``last_route`` (tests), the global
+    metrics registry (counter by site x backend), and a trace event.
+    Called at trace time — counts reflect compilations, not executions."""
+    last_route[site] = backend
+    from repro.obs import metrics as obs_metrics
+    from repro.obs import trace as obs_trace
+
+    obs_metrics.get_registry().counter(
+        "repro_kernel_route_trace_total",
+        "kernel routing decisions at trace time, by call site and backend",
+        labels=("site", "backend")).labels(site=site, backend=backend).inc()
+    obs_trace.event("kernel_route_trace", track="dispatch", site=site,
+                    backend=backend)
 
 
 def set_backend(name: Optional[str]) -> None:
@@ -141,7 +162,7 @@ def prefill_attention(q: Array, k: Array, v: Array, *, causal: bool,
 
     B, S, H, D = q.shape
     qualifies = use_pallas() and S > 1 and (causal or window is None)
-    last_route["prefill"] = "pallas" if qualifies else "xla"
+    _record_route("prefill", "pallas" if qualifies else "xla")
     if not qualifies:
         return attn.attn_blockwise(q, k, v, causal=causal, window=window)
     kf = attn.repeat_kv(k, H)
@@ -167,10 +188,10 @@ def decode_attention(q1: Array, knew: Array, vnew: Array, cache, *,
     from repro.models import attention as attn
 
     if use_pallas():
-        last_route["decode"] = "pallas"
+        _record_route("decode", "pallas")
         return decode_attn_flash(q1, knew, vnew, cache, window=window,
                                  active=active, degree=degree)
-    last_route["decode"] = "xla"
+    _record_route("decode", "xla")
     if isinstance(cache, attn.QuantKVCache):
         return attn.decode_attn_quant(q1, knew, vnew, cache, window=window)
     return attn.decode_attn(q1, knew, vnew, cache, window=window)
@@ -280,7 +301,7 @@ def axq_matmul(x2: Array, w, *, block: int = 256, ebits=8,
     (training) route and the jnp fallback apply them as the same-ordered f32
     adds after the matmul, so every route computes identical values."""
     route = _gemm_route()
-    last_route["gemm"] = route
+    _record_route("gemm", route)
     e = jnp.asarray(ebits, jnp.int32)
     x2 = x2.astype(jnp.float32)
     if isinstance(w, PackedQWeight):
@@ -307,7 +328,7 @@ def axq_gated(x2: Array, w_up, w_gate, *, act: str = "silu",
     Same float-vs-packed contract as :func:`axq_matmul`; the pallas route
     streams one shared x tile through both GEMMs and gates in-VMEM."""
     route = _gemm_route()
-    last_route["gated"] = route
+    _record_route("gated", route)
     e = jnp.asarray(ebits, jnp.int32)
     x2 = x2.astype(jnp.float32)
     if isinstance(w_up, PackedQWeight):

@@ -25,6 +25,8 @@ from repro.core.dynamic import QoSController
 from repro.dist import meshctx
 from repro.kernels import dispatch as kdispatch
 from repro.models import build_model
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serve.engine import ServeEngine
 from repro.serve.metrics import summarize
 
@@ -68,9 +70,23 @@ def main() -> None:
                     help="disable quantize-once weight residency (keep the "
                          "per-call weight quantization; A/B lever — prepack "
                          "is bit-identical and strictly cheaper)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome trace_event JSON of the run "
+                         "(enqueue/prefill/decode/QoS-rung spans; open in "
+                         "chrome://tracing or Perfetto)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write Prometheus text-format metrics (engine "
+                         "counters, latency histograms, kernel routes, "
+                         "degree gauges) at exit")
+    ap.add_argument("--quality-every", type=int, default=0, metavar="N",
+                    help="sample the live-vs-exact logit error every N "
+                         "ticks into a per-rung histogram (0 = off; needs "
+                         "--qos/--plan or an approx degree)")
     args = ap.parse_args()
 
     kdispatch.set_backend(args.kernels)
+    if args.trace_out:
+        obs_trace.enable()
 
     d, m = (int(x) for x in args.mesh.split("x")[:2])
     meshctx.set_mesh(meshctx.make_mesh((d, m), ("data", "model")))
@@ -98,11 +114,13 @@ def main() -> None:
         ladder=[{"ebits": e} for e in (8, 7, 6, 5)],
         low_water=0.25, high_water=0.75, cooldown_steps=8,
     ) if args.qos else None
+    registry = obs_metrics.get_registry() if args.metrics_out else None
     eng = ServeEngine(model, params, slots=args.slots, max_len=512, tp=m,
                       eos_id=args.eos_id, greedy=args.temperature <= 0,
                       temperature=max(args.temperature, 1e-6),
                       top_k=args.top_k, seed=args.seed, qos=qos,
-                      prepack=False, plan=plan)
+                      prepack=False, plan=plan, registry=registry,
+                      quality_every=args.quality_every)
     rng = np.random.default_rng(args.seed)
     t0 = time.time()
     for _ in range(args.requests):
@@ -120,6 +138,12 @@ def main() -> None:
         if qos is not None:
             print(f"[launch.serve]   degree ladder visits: "
                   f"{[e for _, e in list(eng.stats.degree_history)[-8:]]} (last 8)")
+    if args.trace_out:
+        obs_trace.get_tracer().write(args.trace_out)
+        print(f"[launch.serve] wrote Chrome trace -> {args.trace_out}")
+    if args.metrics_out:
+        obs_metrics.get_registry().write(args.metrics_out)
+        print(f"[launch.serve] wrote Prometheus metrics -> {args.metrics_out}")
 
 
 if __name__ == "__main__":

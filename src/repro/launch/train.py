@@ -18,6 +18,8 @@ from repro.data.pipeline import make_pipeline
 from repro.dist import meshctx
 from repro.kernels import dispatch as kdispatch
 from repro.models import build_model
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.train import step as step_mod
 from repro.train.trainer import Trainer, TrainerConfig
 
@@ -41,9 +43,19 @@ def main() -> None:
                     choices=("auto", "pallas", "xla"),
                     help="attention kernel backend (default: REPRO_KERNELS "
                          "env or auto = pallas on TPU, xla elsewhere)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome trace_event JSON of the run "
+                         "(data/step/checkpoint spans, straggler and "
+                         "QoS-rung events)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write Prometheus text-format metrics (step/loss/"
+                         "checkpoint counters, step-time histogram, degree "
+                         "gauges) at exit")
     args = ap.parse_args()
 
     kdispatch.set_backend(args.kernels)
+    if args.trace_out:
+        obs_trace.enable()
 
     d, m = (int(x) for x in args.mesh.split("x")[:2])
     mesh = meshctx.make_mesh((d, m), ("data", "model"))
@@ -82,10 +94,17 @@ def main() -> None:
         TrainerConfig(total_steps=args.steps, ckpt_every=max(args.steps // 4, 10),
                       ckpt_dir=args.ckpt_dir, qos=qos,
                       static_degrees=static_degrees),
-        pipe, tp=m)
+        pipe, tp=m,
+        registry=obs_metrics.get_registry() if args.metrics_out else None)
     out = trainer.run()
     print(f"[launch.train] done at step {out['final_step']}; "
           f"preempted={out['preempted']}; stragglers={len(out['stragglers'])}")
+    if args.trace_out:
+        obs_trace.get_tracer().write(args.trace_out)
+        print(f"[launch.train] wrote Chrome trace -> {args.trace_out}")
+    if args.metrics_out:
+        obs_metrics.get_registry().write(args.metrics_out)
+        print(f"[launch.train] wrote Prometheus metrics -> {args.metrics_out}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,27 @@
+"""repro.obs — end-to-end observability for the approximate serving stack.
+
+Zero-dependency tracing + metrics + quality telemetry (DESIGN.md §11):
+
+  * :mod:`repro.obs.trace` — process-global span/instant tracer with
+    bounded ring buffers and Chrome ``trace_event`` export
+    (``chrome://tracing`` / Perfetto).
+  * :mod:`repro.obs.metrics` — typed counter/gauge/histogram registry
+    with a Prometheus text exporter and a JSON snapshot.
+  * :mod:`repro.obs.quality` — online per-rung logit-error telemetry
+    (the serving-time twin of the calibration prober).
+  * :mod:`repro.obs.regress` — the bench-record regression gate behind
+    ``tools/check_bench.py``.
+
+The runtime-adjustable approximation scheme is only trustworthy if the
+system can show which degree served which request and what it cost; this
+package is that evidence layer.
+"""
+
+from repro.obs.metrics import Registry, get_registry, parse_text
+from repro.obs.quality import QualityTap
+from repro.obs.trace import Tracer, get_tracer
+
+__all__ = ["Registry", "get_registry", "parse_text", "QualityTap",
+           "Tracer", "get_tracer", "trace", "metrics"]
+
+from repro.obs import metrics, trace  # noqa: E402  (re-export modules)

@@ -1,0 +1,352 @@
+"""Bench-record regression gate (``tools/check_bench.py`` backend).
+
+The four committed perf records — ``benchmarks/BENCH_kernels.json``,
+``BENCH_serving.json``, ``BENCH_gemm.json``, ``BENCH_tune.json`` — are the
+repo's performance memory: every claim in CHANGES.md (skip-grid step
+counts, fused-GEMM speedups, planned-rung dominance) is anchored in them.
+Until now nothing machine-checked them, so a record could silently rot
+(a bench renamed, a speedup regressed, a hand-edited number) and CI would
+stay green.  This module makes each record's claims executable:
+
+1. **meta integrity** — every record must carry the v2 stamp
+   (``schema_version``, ``git_sha``, ``platform``, ``jax_backend``,
+   ``kernels_backend``, ``tiny_shapes``) so records are attributable and
+   comparable across machines.
+2. **declared invariants** — per-bench checks with explicit tolerances on
+   the *derived* (scale-invariant) columns: error envelopes, kernel-vs-ref
+   max deviations, skip-grid step ratios, fused-GEMM speedups, planned-
+   ladder dominance/ordering.  Perturbing a committed record beyond a
+   tolerance fails the gate loudly.
+3. **fresh diff** — re-run the benches (tiny shapes under
+   ``REPRO_BENCH_TINY=1``) and require every fresh row name to exist in
+   the committed record (coverage can only grow, never silently shrink)
+   and the fresh record to satisfy the same invariants.  Raw timings are
+   deliberately NOT diffed across machines/shapes — only the declared
+   invariants are portable.
+
+All tolerances live in this file, next to the checks that use them.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import re
+from typing import Callable, Optional
+
+__all__ = ["BENCH_RECORDS", "SCHEMA_VERSION", "load_record", "check_meta",
+           "check_invariants", "check_record", "check_committed",
+           "compare_fresh", "run_fresh_rows", "bench_dir"]
+
+#: record files under benchmarks/ — the four perf-tracked benches
+BENCH_RECORDS = {
+    "bench_kernels": "BENCH_kernels.json",
+    "bench_serving": "BENCH_serving.json",
+    "bench_gemm": "BENCH_gemm.json",
+    "bench_tune": "BENCH_tune.json",
+}
+
+#: current record schema (benchmarks/run.py stamps this)
+SCHEMA_VERSION = 2
+
+_REQUIRED_META = ("bench", "schema_version", "unix_time", "git_sha",
+                  "platform", "jax_backend", "kernels_backend",
+                  "tiny_shapes", "columns", "rows")
+
+# ---- declared tolerances (the contract the records must satisfy) ---------
+
+#: AXQ relative error at 8 effective bits (committed: ~0.010)
+AXQMM_E8_RELERR_MAX = 0.03
+#: Pallas kernel vs jnp reference max absolute deviation (bit-closeness)
+KERNEL_VS_REF_MAXDIFF = 1e-3
+#: causal skip grid must run at most this fraction of the dense grid's steps
+FLASH_SKIP_STEP_RATIO_MAX = 0.75
+#: fused+prepacked GEMM speedup vs the three-call on-the-fly baseline
+GEMM_PACKED_FUSED_SPEEDUP_MIN = 1.2
+GEMM_PACKED_FUSED_SPEEDUP_MIN_TINY = 1.0
+
+
+def bench_dir() -> pathlib.Path:
+    """benchmarks/ directory (repo-root-relative, resolved from this file)."""
+    return pathlib.Path(__file__).resolve().parents[3] / "benchmarks"
+
+
+def load_record(bench: str, directory=None) -> dict:
+    path = pathlib.Path(directory or bench_dir()) / BENCH_RECORDS[bench]
+    return json.loads(path.read_text())
+
+
+def rows_by_name(rec: dict) -> dict:
+    """{row_name: (us_per_call, derived)} — duplicate names are an error."""
+    out: dict = {}
+    for r in rec.get("rows", []):
+        name, us, derived = r[0], r[1], r[2]
+        if name in out:
+            raise ValueError(f"duplicate bench row {name!r}")
+        out[name] = (float(us), str(derived))
+    return out
+
+
+def _derived_float(rows: dict, name: str) -> Optional[float]:
+    if name not in rows:
+        return None
+    try:
+        return float(rows[name][1])
+    except ValueError:
+        return None
+
+
+# ---------------------------------------------------------------------------
+# checks — each returns a list of violation strings (empty == pass)
+# ---------------------------------------------------------------------------
+
+
+def check_meta(rec: dict) -> list:
+    errs = []
+    for k in _REQUIRED_META:
+        if k not in rec:
+            errs.append(f"missing meta field {k!r} "
+                        f"(schema v{SCHEMA_VERSION} stamp)")
+    if errs:
+        return errs
+    if int(rec["schema_version"]) < SCHEMA_VERSION:
+        errs.append(f"schema_version {rec['schema_version']} < "
+                    f"{SCHEMA_VERSION} — regenerate via benchmarks/run.py")
+    if not rec["git_sha"] or rec["git_sha"] == "unknown":
+        errs.append("git_sha not stamped (record not attributable)")
+    if rec["kernels_backend"] not in ("pallas", "xla"):
+        errs.append(f"kernels_backend {rec['kernels_backend']!r} not in "
+                    f"('pallas', 'xla')")
+    if rec["columns"] != ["name", "us_per_call", "derived"]:
+        errs.append(f"unexpected columns {rec['columns']}")
+    if not rec["rows"]:
+        errs.append("record has no rows")
+    return errs
+
+
+def _check_kernels(rec: dict, tiny: bool) -> list:
+    errs = []
+    rows = rows_by_name(rec)
+    # degree scaling: error grows monotonically as effective bits drop
+    relerr = {e: _derived_float(rows, f"kern.axqmm_e{e}_relerr")
+              for e in (8, 6, 4)}
+    for e, v in relerr.items():
+        if v is None:
+            errs.append(f"missing row kern.axqmm_e{e}_relerr")
+    if None not in relerr.values():
+        if relerr[8] > AXQMM_E8_RELERR_MAX:
+            errs.append(f"axqmm e8 relerr {relerr[8]} > "
+                        f"{AXQMM_E8_RELERR_MAX} (tolerance)")
+        if not (relerr[8] < relerr[6] < relerr[4]):
+            errs.append(f"axqmm relerr not monotone in degree: {relerr}")
+    for e in (8, 6, 4):
+        v = _derived_float(rows, f"kern.axqmm_e{e}_vs_ref_maxdiff")
+        if v is None:
+            errs.append(f"missing row kern.axqmm_e{e}_vs_ref_maxdiff")
+        elif v > KERNEL_VS_REF_MAXDIFF:
+            errs.append(f"axqmm e{e} kernel-vs-ref maxdiff {v} > "
+                        f"{KERNEL_VS_REF_MAXDIFF} (tolerance)")
+    # skip grid: parse "steps A/B (skip/dense)"
+    if "kern.flash_causal_skip_us" not in rows:
+        errs.append("missing row kern.flash_causal_skip_us")
+    else:
+        m = re.search(r"steps (\d+)/(\d+)",
+                      rows["kern.flash_causal_skip_us"][1])
+        if not m:
+            errs.append("flash_causal_skip_us derived lost its "
+                        "'steps A/B' accounting")
+        else:
+            skip, dense = int(m.group(1)), int(m.group(2))
+            if not skip < dense:
+                errs.append(f"skip grid did not skip: {skip}/{dense} steps")
+            elif skip / dense > FLASH_SKIP_STEP_RATIO_MAX:
+                errs.append(f"skip/dense step ratio {skip}/{dense} = "
+                            f"{skip / dense:.2f} > "
+                            f"{FLASH_SKIP_STEP_RATIO_MAX} (tolerance)")
+    # fused decode: parse "maxdiff 1.23e-05 vs jnp"
+    if "kern.decode_flash_us" not in rows:
+        errs.append("missing row kern.decode_flash_us")
+    else:
+        m = re.search(r"maxdiff ([0-9.e+-]+)", rows["kern.decode_flash_us"][1])
+        if not m:
+            errs.append("decode_flash_us derived lost its maxdiff")
+        elif float(m.group(1)) > KERNEL_VS_REF_MAXDIFF:
+            errs.append(f"flash_decode vs jnp maxdiff {m.group(1)} > "
+                        f"{KERNEL_VS_REF_MAXDIFF} (tolerance)")
+    return errs
+
+
+def _check_gemm(rec: dict, tiny: bool) -> list:
+    errs = []
+    rows = rows_by_name(rec)
+    variants = ["fly_unfused", "fly_fused", "packed_unfused", "packed_fused"]
+    for v in variants:
+        if f"gemm.mlp_{v}_us" not in rows:
+            errs.append(f"missing row gemm.mlp_{v}_us")
+    if errs:
+        return errs
+    base = rows["gemm.mlp_fly_unfused_us"][0]
+    fused = rows["gemm.mlp_packed_fused_us"][0]
+    floor = (GEMM_PACKED_FUSED_SPEEDUP_MIN_TINY if tiny
+             else GEMM_PACKED_FUSED_SPEEDUP_MIN)
+    if fused <= 0 or base / fused < floor:
+        errs.append(f"packed_fused speedup {base / max(fused, 1e-9):.2f}x < "
+                    f"{floor}x vs fly_unfused (tolerance)")
+    m = re.match(r"([0-9.]+)x vs fly_unfused",
+                 rows["gemm.mlp_packed_fused_us"][1])
+    if not m:
+        errs.append("packed_fused derived lost its speedup annotation")
+    elif abs(float(m.group(1)) - base / fused) > 0.05 * (base / fused) + 0.02:
+        errs.append(f"packed_fused derived speedup {m.group(1)}x "
+                    f"inconsistent with us columns ({base / fused:.2f}x)")
+    return errs
+
+
+def _check_serving(rec: dict, tiny: bool) -> list:
+    errs = []
+    rows = rows_by_name(rec)
+    groups = sorted({m.group(1) for name in rows
+                     if (m := re.match(r"serve\.((?:\w+_)?slots\d+)_", name))})
+    if not groups:
+        return ["no serve.slots rows found"]
+    for g in groups:
+        tps = _derived_float(rows, f"serve.{g}_gen_tok_per_s")
+        if tps is None:
+            errs.append(f"missing row serve.{g}_gen_tok_per_s")
+        elif tps <= 0:
+            errs.append(f"serve.{g} generated throughput {tps} <= 0")
+        pd = rows.get(f"serve.{g}_prefill_vs_decode_tok")
+        if pd is None:
+            errs.append(f"missing row serve.{g}_prefill_vs_decode_tok")
+        else:
+            m = re.match(r"(\d+)/(\d+)", pd[1])
+            if not m or int(m.group(2)) <= 0:
+                errs.append(f"serve.{g} prefill/decode accounting "
+                            f"malformed: {pd[1]!r}")
+    return errs
+
+
+_ERRCOST = re.compile(r"err=([0-9.e+-]+),cost=([0-9.e+-]+)")
+
+
+def _check_tune(rec: dict, tiny: bool) -> list:
+    errs = []
+    rows = rows_by_name(rec)
+    n_rungs = _derived_float(rows, "tune.plan_rungs")
+    if n_rungs is None or n_rungs < 1:
+        errs.append(f"tune.plan_rungs missing or < 1 ({n_rungs})")
+    # uniform-e8 must be the most accurate uniform assignment
+    uni = {}
+    for name, (_, derived) in rows.items():
+        m = re.match(r"tune\.uniform_e(\d+)$", name)
+        if m and (ec := _ERRCOST.search(derived)):
+            uni[int(m.group(1))] = (float(ec.group(1)), float(ec.group(2)))
+    if 8 not in uni:
+        errs.append("missing row tune.uniform_e8")
+    elif uni[8][0] > min(e for e, _ in uni.values()) + 1e-12:
+        errs.append(f"uniform_e8 is not the most accurate uniform rung: {uni}")
+    # ladder: most accurate first => cost non-increasing, error non-decreasing
+    ladder = []
+    for name, (_, derived) in rows.items():
+        m = re.match(r"tune\.rung_(\d+)$", name)
+        if m and (ec := _ERRCOST.search(derived)):
+            ladder.append((int(m.group(1)), float(ec.group(1)),
+                           float(ec.group(2))))
+    ladder.sort()
+    for (r0, e0, c0), (r1, e1, c1) in zip(ladder, ladder[1:]):
+        if c1 > c0 + 1e-9 or e1 < e0 - 1e-9:
+            errs.append(f"ladder rung_{r1} (err={e1}, cost={c1}) breaks "
+                        f"Pareto order vs rung_{r0} (err={e0}, cost={c0})")
+    dom = rows.get("tune.dominated_uniform_rungs")
+    if dom is None:
+        errs.append("missing row tune.dominated_uniform_rungs")
+    elif dom[1] == "none":
+        errs.append("planned ladder dominates no uniform rung — the "
+                    "per-layer tuning claim regressed")
+    return errs
+
+
+_CHECKS: dict = {
+    "bench_kernels": _check_kernels,
+    "bench_serving": _check_serving,
+    "bench_gemm": _check_gemm,
+    "bench_tune": _check_tune,
+}
+
+
+def check_invariants(rec: dict, tiny: Optional[bool] = None) -> list:
+    bench = rec.get("bench")
+    fn: Optional[Callable] = _CHECKS.get(bench)
+    if fn is None:
+        return [f"unknown bench {bench!r} (no declared invariants)"]
+    if tiny is None:
+        tiny = bool(rec.get("tiny_shapes", False))
+    try:
+        return [f"{bench}: {e}" for e in fn(rec, tiny)]
+    except Exception as e:               # malformed rows fail loudly, not raise
+        return [f"{bench}: invariant check crashed: {e!r}"]
+
+
+def check_record(rec: dict, tiny: Optional[bool] = None) -> list:
+    """Meta integrity + declared invariants for one record."""
+    errs = [f"{rec.get('bench', '?')}: {e}" for e in check_meta(rec)]
+    return errs + check_invariants(rec, tiny)
+
+
+def check_committed(directory=None, benches=None) -> list:
+    """Check every committed BENCH record; returns all violations."""
+    errs = []
+    for bench in benches or sorted(BENCH_RECORDS):
+        try:
+            rec = load_record(bench, directory)
+        except FileNotFoundError:
+            errs.append(f"{bench}: committed record "
+                        f"{BENCH_RECORDS[bench]} missing")
+            continue
+        except json.JSONDecodeError as e:
+            errs.append(f"{bench}: committed record unparseable: {e}")
+            continue
+        errs.extend(check_record(rec))
+    return errs
+
+
+# ---------------------------------------------------------------------------
+# fresh-run diff
+# ---------------------------------------------------------------------------
+
+
+def run_fresh_rows(bench: str) -> list:
+    """Run one bench module in-process and return its rows.  Honors
+    ``REPRO_BENCH_TINY`` (set it to "1" before first import for the tiny
+    CI shapes).  Requires the repo root on sys.path (benchmarks/ package)."""
+    import importlib
+
+    mod = importlib.import_module(f"benchmarks.{bench}")
+    return list(mod.rows())
+
+
+def compare_fresh(committed: dict, fresh: dict) -> list:
+    """Diff a fresh record against the committed one.
+
+    Coverage: every fresh row name must exist in the committed record —
+    a row that vanished from the committed side means the record rotted
+    behind the bench.  (Committed-only rows are fine: full-shape runs emit
+    supersets of the tiny CI shapes.)  The fresh record must also satisfy
+    the same declared invariants, at tiny tolerances when applicable."""
+    bench = committed.get("bench")
+    errs = []
+    if fresh.get("bench") != bench:
+        return [f"bench mismatch: committed {bench!r} vs "
+                f"fresh {fresh.get('bench')!r}"]
+    try:
+        cnames = set(rows_by_name(committed))
+        fnames = set(rows_by_name(fresh))
+    except ValueError as e:
+        return [f"{bench}: {e}"]
+    missing = sorted(fnames - cnames)
+    if missing:
+        errs.append(f"{bench}: fresh rows missing from the committed "
+                    f"record (regenerate it via benchmarks/run.py): "
+                    f"{missing}")
+    errs.extend(check_invariants(fresh))
+    return errs

@@ -39,9 +39,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.dynamic import QoSController, degree_operand, degree_record
+from repro.core.dynamic import QoSController, degree_operand
+from repro.kernels import dispatch as kdispatch
 from repro.models.cache_ops import cache_mask_update
 from repro.models.registry import Model
+from repro.obs import trace as obs_trace
 from repro.serve.metrics import EngineStats
 from repro.serve.sampling import sample_tokens
 
@@ -60,6 +62,10 @@ class Request:
     t_admitted: float = 0.0
     t_first_token: float = 0.0
     t_done: float = 0.0
+    # degree tuple that served the first generated token (None until then,
+    # or engine running without a traced degree): makes mid-run QoS rung
+    # moves visible per request, not just the engine-final degree
+    degree_at_first_token: Optional[tuple] = None
 
     # -- latency breakdown (valid once done) --
     @property
@@ -91,6 +97,16 @@ class ServeEngine:
     initial degree (scalar or per-site vector) without a controller.
     ``prepack`` packs AXQ/emul weights into int8 residency at admission
     (DESIGN.md §9).
+
+    Observability (DESIGN.md §11): every lifecycle edge — enqueue,
+    admission/prefill, per-tick decode, first token, completion, QoS rung
+    transitions (with the per-site degree vector attached) — is traced
+    through ``tracer`` (the process-global :mod:`repro.obs.trace` tracer
+    by default; free when disabled), and every counter lives in
+    ``stats.registry`` (a fresh :class:`repro.obs.metrics.Registry`, or
+    pass ``registry=`` to co-export with the dispatch counters).
+    ``quality_every=N`` samples the live-vs-exact logit error every N
+    ticks into a per-rung histogram (``obs/quality.py``).
     """
 
     def __init__(self, model: Model, params, *, slots: int = 8,
@@ -98,7 +114,8 @@ class ServeEngine:
                  greedy: bool = True, temperature: float = 1.0,
                  top_k: int = 0, seed: int = 0,
                  qos: Optional[QoSController] = None,
-                 degree=None, prepack: bool = True, plan=None):
+                 degree=None, prepack: bool = True, plan=None,
+                 registry=None, tracer=None, quality_every: int = 0):
         self.model = model
         # quantize-once weight residency (DESIGN.md §9): AXQ/emul weights are
         # packed at admission into the engine, so every prefill/decode step
@@ -118,7 +135,8 @@ class ServeEngine:
         self.slot_budget = np.zeros(slots, np.int32)
         self.queue: deque[Request] = deque()
         self.done: list[Request] = []
-        self.stats = EngineStats()
+        self.stats = EngineStats(registry)
+        self._tracer = tracer if tracer is not None else obs_trace.get_tracer()
         self._tokens = np.zeros((slots, 1), np.int32)
         self._rid = itertools.count()
         self._ticks = 0
@@ -159,10 +177,33 @@ class ServeEngine:
         else:
             self._degree = (jnp.asarray(_DEFAULT_EBITS, jnp.int32)
                             if self._use_degree else None)
+        # plan site names label the repro_degree_ebits{site=..} gauge family
+        # (and trace events); scalar degrees export as site="global"
+        from repro.tune.plan import site_names as _site_names
+
+        self._site_names = _site_names(cfg)
+        self._degree_rec: Optional[tuple] = None
         if self._degree is not None:
             # the construction-time degree is served until the first QoS
             # update: record it so the history covers every degree used
-            self.stats.degree_history.append((-1, degree_record(self._degree)))
+            self._degree_rec = self.stats.record_degree(
+                -1, self._degree, self._site_names)
+        # per-rung online quality telemetry (obs/quality.py): compare the
+        # live degree's logits against the exact rung every N ticks
+        self._tap = None
+        if quality_every > 0:
+            if self._degree is None:
+                raise ValueError(
+                    "quality_every needs a traced degree (pass degree=, "
+                    "qos=, or plan=)")
+            from repro.obs.quality import QualityTap
+
+            self._tap = QualityTap(model, tp=tp, every=quality_every,
+                                   registry=self.stats.registry,
+                                   tracer=self._tracer)
+        # resolved kernel backend for the per-tick route counters: captured
+        # from dispatch.last_route after the first traced step/prefill
+        self._route: dict = {}
         vocab = model.cfg.vocab
 
         def serve_step(p, cache, tokens, active, key, temp, deg):
@@ -200,6 +241,10 @@ class ServeEngine:
                       max_new_tokens=max_new_tokens,
                       t_enqueue=time.time())
         self.queue.append(req)
+        self._tracer.event("enqueue", track="engine", rid=req.rid,
+                           prompt_tokens=int(prompt.size),
+                           max_new_tokens=max_new_tokens,
+                           queue_depth=len(self.queue))
         return req
 
     def _admit(self, slot: int, req: Request):
@@ -209,19 +254,22 @@ class ServeEngine:
         req.t_admitted = time.time()
         prompt = req.prompt
         sl = jnp.asarray(slot, jnp.int32)
-        if prompt.size > 1:
-            _, self.cache = self._prefill(self.params, self.cache,
-                                          jnp.asarray(prompt[:-1]), sl,
-                                          self._degree)
-            req.prefill_tokens = int(prompt.size) - 1
-            self.stats.prefill_tokens += int(prompt.size) - 1
-            self.stats.prefill_calls += 1
-        else:
-            self.cache = self._reset(self.cache, sl)
+        with self._tracer.span("prefill", track="engine", rid=req.rid,
+                               slot=slot, prompt_tokens=int(prompt.size)):
+            if prompt.size > 1:
+                _, self.cache = self._prefill(self.params, self.cache,
+                                              jnp.asarray(prompt[:-1]), sl,
+                                              self._degree)
+                req.prefill_tokens = int(prompt.size) - 1
+                self.stats.c_prefill_tokens.inc(int(prompt.size) - 1)
+                self.stats.c_prefill_calls.inc()
+                self._count_route("prefill")
+            else:
+                self.cache = self._reset(self.cache, sl)
         self._tokens[slot, 0] = int(prompt[-1])
         self.slot_req[slot] = req
         self.slot_budget[slot] = req.max_new_tokens
-        self.stats.admitted += 1
+        self.stats.c_admitted.inc()
 
     def _update_degree(self, n_active: int):
         """Feed the QoS controller a load-headroom signal: overload drives
@@ -233,8 +281,30 @@ class ServeEngine:
         headroom = max(0.0, 1.0 - occupancy)
         kw = self.qos.update(self._ticks, headroom)
         self._degree = degree_operand(kw)
-        self.stats.degree_history.append(
-            (self._ticks, degree_record(self._degree)))
+        rec = self.stats.record_degree(self._ticks, self._degree,
+                                       self._site_names)
+        if rec != self._degree_rec:
+            # QoS rung transition: the event carries the full per-site
+            # degree vector so the trace shows WHICH arithmetic served
+            # every span that follows
+            self._tracer.event("qos_rung", track="engine", tick=self._ticks,
+                               rung=self.qos.degree, degrees=list(rec),
+                               headroom=round(headroom, 4))
+            self._degree_rec = rec
+
+    def _count_route(self, site: str) -> None:
+        """Per-call kernel-route counter: the backend is read from
+        ``dispatch.last_route`` (written at trace time of this engine's
+        jitted step/prefill) and cached — so the counters reflect what
+        actually compiled, and `sum(route counters) == call count`."""
+        backend = self._route.get(site)
+        if backend is None:
+            backend = kdispatch.last_route.get(site,
+                                               kdispatch.resolved_backend())
+            self._route[site] = backend
+            self._tracer.event("kernel_route", track="engine", site=site,
+                               backend=backend)
+        self.stats.c_route_steps.labels(site=site, backend=backend).inc()
 
     def tick(self) -> int:
         """One engine iteration: admit queued requests into free slots
@@ -252,15 +322,26 @@ class ServeEngine:
             self._update_degree(len(active))
         mask = np.zeros(self.slots, bool)
         mask[active] = True
+        if self._tap is not None and self._tap.due(self._ticks):
+            # probe BEFORE the step: same inputs the fused step is about to
+            # consume, cache untouched (the tap discards its cache updates)
+            self._tap.sample(self._ticks, self.params, self.cache,
+                             self._tokens, mask, self._degree)
         self._key, sub = jax.random.split(self._key)
-        nxt, self.cache = self._step(self.params, self.cache,
-                                     jnp.asarray(self._tokens),
-                                     jnp.asarray(mask), sub,
-                                     self.temperature, self._degree)
-        nxt = np.asarray(nxt)
+        with self._tracer.span("decode_tick", track="engine",
+                               tick=self._ticks, active=len(active),
+                               queued=len(self.queue)):
+            nxt, self.cache = self._step(self.params, self.cache,
+                                         jnp.asarray(self._tokens),
+                                         jnp.asarray(mask), sub,
+                                         self.temperature, self._degree)
+            nxt = np.asarray(nxt)
         self._ticks += 1
-        self.stats.decode_steps += 1
-        self.stats.decode_tokens += len(active)
+        self.stats.c_decode_steps.inc()
+        self.stats.c_decode_tokens.inc(len(active))
+        self._count_route("decode")
+        self._tracer.counter("slots", track="engine", active=len(active),
+                             queued=len(self.queue))
         now = time.time()
         for s in active:
             req = self.slot_req[s]
@@ -272,6 +353,10 @@ class ServeEngine:
                 # t_first_token == 0 (excluded from TTFT stats)
                 if req.t_first_token == 0.0:
                     req.t_first_token = now
+                    req.degree_at_first_token = self._degree_rec
+                    self._tracer.event("first_token", track="engine",
+                                       rid=req.rid, slot=s,
+                                       ttft_ms=round(req.ttft * 1e3, 3))
                 req.out_tokens.append(tok)
                 self._tokens[s, 0] = tok
                 self.slot_budget[s] -= 1
@@ -280,6 +365,11 @@ class ServeEngine:
                 req.t_done = now
                 self.done.append(req)
                 self.slot_req[s] = None
+                self.stats.record_completion(req)
+                self._tracer.event("request_done", track="engine",
+                                   rid=req.rid, slot=s, eos=hit_eos,
+                                   tokens=len(req.out_tokens),
+                                   e2e_ms=round(req.e2e * 1e3, 3))
         return len(active)
 
     def run_until_drained(self, max_ticks: int = 10_000) -> list[Request]:

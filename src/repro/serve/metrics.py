@@ -9,35 +9,144 @@ MLPerf-style definitions:
 Token accounting is split prefill-vs-decode: prompt tokens are ingested by
 the fused prefill call (plus the final prompt token, which rides the decode
 step that emits the first output token); generated tokens are decode tokens.
+
+Counters live in a :class:`repro.obs.metrics.Registry` (DESIGN.md §11):
+:class:`EngineStats` is a thin view over one — the legacy attribute reads
+(``stats.prefill_tokens`` etc.) keep working, while the same numbers export
+as Prometheus text / JSON through ``stats.registry``.  ``degree_history``
+entries are normalized to ``(tick, degrees_tuple)`` at record time
+(``core.dynamic.degree_record(as_tuple=True)``): a global scalar degree
+records as a 1-tuple, so consumers never isinstance-branch.
 """
 
 from __future__ import annotations
 
 from collections import deque
-from dataclasses import dataclass, field
+
+from repro.core.dynamic import degree_record
+from repro.obs import metrics as obs_metrics
+
+#: latency histogram buckets (seconds) shared by the TTFT/TPOT/queue/e2e
+#: families — smoke-scale CPU serving sits in the low milliseconds, TPU
+#: decode in the sub-millisecond rungs
+LATENCY_BUCKETS = (1e-4, 2.5e-4, 5e-4, 1e-3, 2.5e-3, 5e-3, 0.01, 0.025,
+                   0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0)
 
 
-@dataclass
 class EngineStats:
-    """Engine-lifetime counters (all ticks / admissions)."""
+    """Engine-lifetime counters (all ticks / admissions), registry-backed.
 
-    prefill_tokens: int = 0     # prompt tokens ingested via fused prefill
-    prefill_calls: int = 0      # fused prefill invocations (== admissions P>1)
-    decode_tokens: int = 0      # slot-steps executed by the fused decode step
-    decode_steps: int = 0       # engine ticks that ran the fused step
-    admitted: int = 0           # requests admitted into a slot
-    # recent (tick, degree) trace — degree is a global ebits int or, under
-    # an ApproxPlan ladder, the per-layer degrees tuple of the active rung;
-    # bounded so long-lived engines don't leak
-    degree_history: deque = field(default_factory=lambda: deque(maxlen=512))
+    Every counter the engine maintains is a family in ``self.registry``
+    (a fresh per-engine :class:`~repro.obs.metrics.Registry` by default,
+    so co-resident engines don't sum into each other; pass a shared one
+    to co-export with the kernel-dispatch counters).  The legacy scalar
+    attributes are read-only properties over the registry.
+    """
+
+    def __init__(self, registry: obs_metrics.Registry | None = None):
+        self.registry = (registry if registry is not None
+                         else obs_metrics.Registry())
+        r = self.registry
+        self.c_prefill_tokens = r.counter(
+            "repro_prefill_tokens_total",
+            "prompt tokens ingested via fused prefill")
+        self.c_prefill_calls = r.counter(
+            "repro_prefill_calls_total", "fused prefill invocations")
+        self.c_decode_tokens = r.counter(
+            "repro_decode_tokens_total",
+            "active slot-steps executed by the fused decode step")
+        self.c_decode_steps = r.counter(
+            "repro_decode_steps_total", "engine ticks that ran the fused step")
+        self.c_admitted = r.counter(
+            "repro_requests_admitted_total", "requests admitted into a slot")
+        self.c_completed = r.counter(
+            "repro_requests_completed_total", "requests finished (EOS/budget)")
+        self.c_route_steps = r.counter(
+            "repro_kernel_route_steps_total",
+            "engine ticks by resolved kernel backend", labels=("site", "backend"))
+        self.h_ttft = r.histogram(
+            "repro_ttft_seconds", "enqueue -> first generated token",
+            buckets=LATENCY_BUCKETS)
+        self.h_tpot = r.histogram(
+            "repro_tpot_seconds", "mean inter-token time after the first",
+            buckets=LATENCY_BUCKETS)
+        self.h_queue = r.histogram(
+            "repro_queue_seconds", "enqueue -> admission into a slot",
+            buckets=LATENCY_BUCKETS)
+        self.h_e2e = r.histogram(
+            "repro_e2e_seconds", "enqueue -> completion",
+            buckets=LATENCY_BUCKETS)
+        self.g_degree = r.gauge(
+            "repro_degree_ebits", "live approximation degree by plan site",
+            labels=("site",))
+        # recent (tick, degrees_tuple) trace — ALWAYS a tuple (a global
+        # scalar records as a 1-tuple); bounded so long engines don't leak
+        self.degree_history: deque = deque(maxlen=512)
+
+    # ---- legacy scalar reads (tests, benches, summarize) -------------
+
+    @property
+    def prefill_tokens(self) -> int:
+        return int(self.c_prefill_tokens.value)
+
+    @property
+    def prefill_calls(self) -> int:
+        return int(self.c_prefill_calls.value)
+
+    @property
+    def decode_tokens(self) -> int:
+        return int(self.c_decode_tokens.value)
+
+    @property
+    def decode_steps(self) -> int:
+        return int(self.c_decode_steps.value)
+
+    @property
+    def admitted(self) -> int:
+        return int(self.c_admitted.value)
+
+    # ---- recording ---------------------------------------------------
+
+    def record_degree(self, tick: int, degree, site_names=None) -> tuple:
+        """Append a tuple-normalized degree to the history and refresh the
+        ``repro_degree_ebits{site=..}`` gauge family.  ``site_names`` maps
+        vector positions to plan site names (``layer_i`` / ``head``); a
+        1-entry record without names exports as ``site="global"``."""
+        rec = degree_record(degree, as_tuple=True)
+        self.degree_history.append((tick, rec))
+        if site_names is not None and len(site_names) == len(rec):
+            for name, e in zip(site_names, rec):
+                self.g_degree.labels(site=name).set(e)
+        elif len(rec) == 1:
+            self.g_degree.labels(site="global").set(rec[0])
+        else:
+            for i, e in enumerate(rec):
+                self.g_degree.labels(site=f"site_{i}").set(e)
+        return rec
+
+    def record_completion(self, req) -> None:
+        """Observe one finished request into the latency histograms."""
+        self.c_completed.inc()
+        self.h_queue.observe(req.queue_time)
+        self.h_e2e.observe(req.e2e)
+        if req.t_first_token > 0:
+            self.h_ttft.observe(req.ttft)
+        if len(req.out_tokens) > 1:
+            self.h_tpot.observe(req.tpot)
 
 
-def _pct(xs, q):
+def _pct(xs, q: float) -> float:
+    """Linearly-interpolated percentile (inclusive / numpy ``linear``
+    method) — the nearest-rank rounding it replaces put p95 on an observed
+    sample, which over-reported tails at small n."""
     if not xs:
         return 0.0
     xs = sorted(xs)
-    i = min(len(xs) - 1, int(round(q * (len(xs) - 1))))
-    return xs[i]
+    pos = q * (len(xs) - 1)
+    lo = int(pos)
+    hi = min(lo + 1, len(xs) - 1)
+    frac = pos - lo
+    return xs[lo] * (1.0 - frac) + xs[hi] * frac
 
 
 def summarize(done, stats: EngineStats | None = None,
@@ -46,6 +155,7 @@ def summarize(done, stats: EngineStats | None = None,
     ttft = [r.ttft for r in done if r.t_first_token > 0]
     tpot = [r.tpot for r in done if len(r.out_tokens) > 1]
     queue = [r.queue_time for r in done]
+    e2e = [r.e2e for r in done]
     gen = sum(len(r.out_tokens) for r in done)
     out = {
         "requests": len(done),
@@ -53,11 +163,24 @@ def summarize(done, stats: EngineStats | None = None,
         "prompt_tokens": sum(int(r.prompt.size) for r in done),
         "ttft_p50_ms": round(_pct(ttft, 0.50) * 1e3, 2),
         "ttft_p95_ms": round(_pct(ttft, 0.95) * 1e3, 2),
+        "ttft_p99_ms": round(_pct(ttft, 0.99) * 1e3, 2),
         "tpot_p50_ms": round(_pct(tpot, 0.50) * 1e3, 2),
         "tpot_p95_ms": round(_pct(tpot, 0.95) * 1e3, 2),
         "queue_p50_ms": round(_pct(queue, 0.50) * 1e3, 2),
         "queue_p95_ms": round(_pct(queue, 0.95) * 1e3, 2),
+        "e2e_p50_ms": round(_pct(e2e, 0.50) * 1e3, 2),
+        "e2e_p95_ms": round(_pct(e2e, 0.95) * 1e3, 2),
     }
+    # which degree served each request's FIRST token: a mid-run rung change
+    # is visible here even when every request finishes on the final rung
+    first_deg: dict = {}
+    for r in done:
+        d = getattr(r, "degree_at_first_token", None)
+        if d is not None:
+            key = ".".join(str(x) for x in d)
+            first_deg[key] = first_deg.get(key, 0) + 1
+    if first_deg:
+        out["degree_at_first_token"] = dict(sorted(first_deg.items()))
     if wall_s is not None and wall_s > 0:
         out["gen_tok_per_s"] = round(gen / wall_s, 1)
     if stats is not None:
@@ -66,8 +189,7 @@ def summarize(done, stats: EngineStats | None = None,
         out["engine_decode_tokens"] = stats.decode_tokens
         out["engine_decode_steps"] = stats.decode_steps
         if stats.degree_history:
-            final = stats.degree_history[-1][1]
-            # global ladder: an int; plan ladder: the rung's per-layer tuple
-            out["degree_final_ebits"] = (
-                list(final) if isinstance(final, (tuple, list)) else final)
+            # entries are tuple-normalized at record time: a global ladder
+            # records 1-tuples, a plan ladder the rung's per-site tuple
+            out["degree_final_ebits"] = list(stats.degree_history[-1][1])
     return out

@@ -28,6 +28,8 @@ from repro.checkpoint.checkpointer import Checkpointer
 from repro.core.dynamic import QoSController, degree_operand, degree_record
 from repro.data.pipeline import SyntheticPipeline
 from repro.models.registry import Model
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.train import step as step_mod
 
 
@@ -72,9 +74,14 @@ class TrainerConfig:
 
 
 class Trainer:
+    """``registry`` / ``tracer`` (DESIGN.md §11): step/checkpoint spans and
+    QoS ladder events go to the process-global tracer by default (free when
+    disabled); counters/gauges land in a fresh per-trainer registry unless
+    a shared one is passed (``launch.train --metrics-out`` exports it)."""
+
     def __init__(self, model: Model, scfg: step_mod.StepConfig,
                  tcfg: TrainerConfig, pipeline: SyntheticPipeline,
-                 tp: int = 1):
+                 tp: int = 1, registry=None, tracer=None):
         self.model = model
         self.scfg = scfg
         self.tcfg = tcfg
@@ -88,6 +95,22 @@ class Trainer:
                 model, scfg, state, batch, tp=tp, degree=degree),
             donate_argnums=(0,))
         self.history: list[dict] = []
+        self.registry = (registry if registry is not None
+                         else obs_metrics.Registry())
+        self._tracer = tracer if tracer is not None else obs_trace.get_tracer()
+        r = self.registry
+        self._c_steps = r.counter("repro_train_steps_total",
+                                  "optimizer steps executed")
+        self._c_ckpts = r.counter("repro_train_checkpoints_total",
+                                  "checkpoints written")
+        self._c_stragglers = r.counter("repro_train_straggler_steps_total",
+                                       "steps flagged by the watchdog")
+        self._g_loss = r.gauge("repro_train_loss", "last step's loss")
+        self._g_degree = r.gauge(
+            "repro_degree_ebits", "live approximation degree by plan site",
+            labels=("site",))
+        self._h_step = r.histogram("repro_train_step_seconds",
+                                   "wall time per optimizer step")
 
     # ------------------------------------------------------------------
 
@@ -100,6 +123,20 @@ class Trainer:
                 signal.signal(sig, handler)
             except ValueError:
                 pass  # non-main thread (tests)
+
+    def _record_degree(self, degree) -> tuple:
+        """Refresh the ``repro_degree_ebits{site=..}`` gauge family from the
+        current degree operand (scalar -> ``site="global"``)."""
+        from repro.tune.plan import site_names
+
+        rec = degree_record(degree, as_tuple=True)
+        names = site_names(self.model.cfg)
+        if len(rec) == len(names):
+            for name, e in zip(names, rec):
+                self._g_degree.labels(site=name).set(e)
+        else:
+            self._g_degree.labels(site="global").set(rec[0])
+        return rec
 
     def init_or_restore(self, key) -> tuple[step_mod.TrainState, int]:
         state = step_mod.init_state(self.model, key, tp=self.tp)
@@ -128,16 +165,26 @@ class Trainer:
         else:
             degree_kwargs = {"ebits": 8}
         degree = degree_operand(degree_kwargs)
+        self._record_degree(degree)
         t_last_loss = None
         step = start
         while step < self.tcfg.total_steps:
-            batch = {k: jnp.asarray(v)
-                     for k, v in self.pipeline.batch_at(step).items()}
+            with self._tracer.span("data_batch", track="train", step=step):
+                batch = {k: jnp.asarray(v)
+                         for k, v in self.pipeline.batch_at(step).items()}
             t0 = time.time()
-            state, metrics = self._step_fn(state, batch, degree)
-            loss = float(metrics["loss"])
+            with self._tracer.span("train_step", track="train", step=step):
+                state, metrics = self._step_fn(state, batch, degree)
+                loss = float(metrics["loss"])
             dt = time.time() - t0
             slow = self.watchdog.observe(step, dt)
+            self._c_steps.inc()
+            self._g_loss.set(loss)
+            self._h_step.observe(dt)
+            if slow:
+                self._c_stragglers.inc()
+                self._tracer.event("straggler", track="train", step=step,
+                                   dt_s=round(dt, 4))
             rec = {"step": step, "loss": loss, "time_s": dt,
                    "grad_norm": float(metrics["grad_norm"]),
                    "degree": degree_record(degree), "straggler": slow}
@@ -149,16 +196,27 @@ class Trainer:
             if self.tcfg.qos and step % self.tcfg.qos_every == 0 and step > start:
                 signal_q = (t_last_loss - loss) if t_last_loss is not None else 0.0
                 kw = self.tcfg.qos.update(step, signal_q)
+                old = degree_record(degree, as_tuple=True)
                 degree = degree_operand(kw)
+                new = self._record_degree(degree)
+                if new != old:
+                    # ladder move: the event carries the full degree vector,
+                    # mirroring the serve engine's qos_rung transitions
+                    self._tracer.event("qos_rung", track="train", step=step,
+                                       rung=self.tcfg.qos.degree,
+                                       degrees=list(new))
                 t_last_loss = loss
             elif t_last_loss is None:
                 t_last_loss = loss
             step += 1
             if step % self.tcfg.ckpt_every == 0 or self._preempted:
-                self.ckpt.save(
-                    step, state,
-                    extra={"data_step": step, "degree": degree_record(degree)},
-                    blocking=self._preempted or not self.tcfg.async_ckpt)
+                with self._tracer.span("checkpoint", track="train", step=step):
+                    self.ckpt.save(
+                        step, state,
+                        extra={"data_step": step,
+                               "degree": degree_record(degree)},
+                        blocking=self._preempted or not self.tcfg.async_ckpt)
+                self._c_ckpts.inc()
                 if self._preempted:
                     print(f"[trainer] preempted: checkpointed at {step}, exiting")
                     break
@@ -168,6 +226,7 @@ class Trainer:
                            extra={"data_step": step,
                                   "degree": degree_record(degree)},
                            blocking=True)
+            self._c_ckpts.inc()
         return {"final_step": step, "history": self.history,
                 "preempted": self._preempted,
                 "stragglers": self.watchdog.flagged}

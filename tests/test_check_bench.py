@@ -1,0 +1,176 @@
+"""Bench-record regression gate (repro.obs.regress / tools/check_bench.py).
+
+The committed ``benchmarks/BENCH_*.json`` records must pass their own
+declared invariants, and the gate must demonstrably FAIL when a record is
+perturbed — a gate that can't fail is not a gate.  Fresh-diff logic is
+exercised on fabricated records (actual bench re-runs live in the CI
+``bench-regress`` job, not the unit suite).
+"""
+import copy
+import json
+import subprocess
+import sys
+
+import pytest
+
+from repro.obs import regress
+
+
+@pytest.fixture(scope="module")
+def committed():
+    return {b: regress.load_record(b) for b in regress.BENCH_RECORDS}
+
+
+def test_committed_records_pass(committed):
+    errs = regress.check_committed()
+    assert errs == [], "\n".join(errs)
+
+
+def test_meta_stamp_complete(committed):
+    for bench, rec in committed.items():
+        assert rec["schema_version"] == regress.SCHEMA_VERSION
+        assert rec["git_sha"] not in ("", "unknown")
+        assert rec["kernels_backend"] in ("pallas", "xla")
+        assert rec["tiny_shapes"] is False  # committed = full shapes
+
+
+def test_missing_meta_fails():
+    rec = {"bench": "bench_kernels", "rows": [["a", "1", "x"]]}
+    errs = regress.check_meta(rec)
+    assert any("schema_version" in e for e in errs)
+    assert any("git_sha" in e for e in errs)
+
+
+def test_unknown_sha_fails(committed):
+    rec = copy.deepcopy(committed["bench_kernels"])
+    rec["git_sha"] = "unknown"
+    assert any("git_sha" in e for e in regress.check_meta(rec))
+
+
+@pytest.mark.parametrize("row,value,needle", [
+    ("kern.axqmm_e8_relerr", "0.5", "relerr"),           # error envelope
+    ("kern.axqmm_e8_vs_ref_maxdiff", "0.1", "maxdiff"),  # kernel drift
+])
+def test_perturbed_kernels_record_fails(committed, row, value, needle):
+    rec = copy.deepcopy(committed["bench_kernels"])
+    rec["rows"] = [[r[0], r[1], value] if r[0] == row else r
+                   for r in rec["rows"]]
+    errs = regress.check_invariants(rec)
+    assert errs and any(needle in e for e in errs), errs
+
+
+def test_perturbed_skip_ratio_fails(committed):
+    rec = copy.deepcopy(committed["bench_kernels"])
+    for r in rec["rows"]:
+        if r[0] == "kern.flash_causal_skip_us":
+            r[2] = "steps 99/100 (skip/dense)"
+    errs = regress.check_invariants(rec)
+    assert any("ratio" in e for e in errs), errs
+
+
+def test_perturbed_gemm_speedup_fails(committed):
+    rec = copy.deepcopy(committed["bench_gemm"])
+    base = fused = None
+    for r in rec["rows"]:
+        if r[0] == "gemm.mlp_fly_unfused_us":
+            base = float(r[1])
+    for r in rec["rows"]:
+        if r[0] == "gemm.mlp_packed_fused_us":
+            # regress the fused path to slower-than-baseline
+            r[1] = str(base * 2)
+            fused = float(r[1])
+            r[2] = f"{base / fused:.2f}x vs fly_unfused"
+    errs = regress.check_invariants(rec)
+    assert any("speedup" in e for e in errs), errs
+
+
+def test_dropped_row_fails(committed):
+    rec = copy.deepcopy(committed["bench_serving"])
+    rec["rows"] = [r for r in rec["rows"] if "gen_tok_per_s" not in r[0]]
+    errs = regress.check_invariants(rec)
+    assert any("missing row" in e for e in errs), errs
+
+
+def test_tune_ladder_order_fails_when_scrambled(committed):
+    rec = copy.deepcopy(committed["bench_tune"])
+    # make rung_1 MORE costly than rung_0 (breaks Pareto descent)
+    rungs = {r[0]: r for r in rec["rows"] if r[0].startswith("tune.rung_")}
+    if len(rungs) < 2:
+        pytest.skip("committed plan ladder has < 2 rungs")
+    r0 = rungs["tune.rung_0"]
+    import re
+
+    ec = re.search(r"err=([0-9.e+-]+),cost=([0-9.e+-]+)", r0[2])
+    c0 = float(ec.group(2))
+    r1 = rungs["tune.rung_1"]
+    r1[2] = re.sub(r"cost=[0-9.e+-]+", f"cost={c0 * 10}", r1[2])
+    errs = regress.check_invariants(rec)
+    assert any("Pareto" in e for e in errs), errs
+
+
+# ---------------------------------------------------------------------------
+# fresh-diff logic (fabricated records; real re-runs live in CI)
+# ---------------------------------------------------------------------------
+
+
+def test_compare_fresh_subset_ok(committed):
+    com = committed["bench_serving"]
+    fresh = copy.deepcopy(com)
+    fresh["tiny_shapes"] = True
+    # tiny runs emit a subset of the full-shape rows: keep one slots group
+    groups = sorted({r[0].split("_")[0] for r in fresh["rows"]})
+    keep = [r for r in fresh["rows"] if "slots2" in r[0]] or fresh["rows"][:4]
+    fresh["rows"] = keep
+    errs = regress.compare_fresh(com, fresh)
+    # subset coverage passes; invariants may or may not apply to the subset
+    assert not any("missing from the committed" in e for e in errs), (groups,
+                                                                      errs)
+
+
+def test_compare_fresh_new_row_fails(committed):
+    com = committed["bench_serving"]
+    fresh = copy.deepcopy(com)
+    fresh["rows"] = fresh["rows"] + [["serve.slots64_gen_tok_per_s",
+                                     "1.0", "42.0"]]
+    errs = regress.compare_fresh(com, fresh)
+    assert any("missing from the committed" in e for e in errs), errs
+
+
+def test_compare_fresh_bench_mismatch(committed):
+    errs = regress.compare_fresh(committed["bench_serving"],
+                                 committed["bench_gemm"])
+    assert any("mismatch" in e for e in errs)
+
+
+def test_duplicate_row_names_rejected(committed):
+    rec = copy.deepcopy(committed["bench_gemm"])
+    rec["rows"].append(list(rec["rows"][0]))
+    with pytest.raises(ValueError):
+        regress.rows_by_name(rec)
+    # check_record surfaces it as a violation instead of raising
+    errs = regress.check_invariants(rec)
+    assert errs
+
+
+def test_cli_passes_on_committed():
+    out = subprocess.run(
+        [sys.executable, str(regress.bench_dir().parent / "tools" /
+                             "check_bench.py")],
+        capture_output=True, text=True)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "OK" in out.stdout
+
+
+def test_cli_fails_on_perturbed(tmp_path, committed):
+    # a perturbed copy of all four records in a scratch dir must fail
+    for bench, fname in regress.BENCH_RECORDS.items():
+        rec = copy.deepcopy(committed[bench])
+        (tmp_path / fname).write_text(json.dumps(rec))
+    bad = copy.deepcopy(committed["bench_kernels"])
+    bad["rows"] = [[r[0], r[1], "0.5"]
+                   if r[0] == "kern.axqmm_e8_relerr" else r
+                   for r in bad["rows"]]
+    (tmp_path / regress.BENCH_RECORDS["bench_kernels"]).write_text(
+        json.dumps(bad))
+    errs = regress.check_committed(directory=tmp_path)
+    assert errs and any("relerr" in e for e in errs)

@@ -1,0 +1,428 @@
+"""Observability subsystem (repro.obs): tracer, metric registry, engine
+instrumentation, quality tap, trainer spans.
+
+The trace-validation tests pin the DESIGN.md §11 contract: every admitted
+request shows enqueue -> prefill -> first_token with matching rids, QoS
+rung transitions carry the full per-site degree vector, and the per-tick
+kernel-route counters sum exactly to the executed decode steps.
+"""
+import json
+import time
+
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container image has no hypothesis wheel
+    from _hypothesis_fallback import given, settings, st
+
+from repro.configs import get_config
+from repro.core.dynamic import QoSController
+from repro.models import build_model
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import Registry, parse_text
+from repro.obs.quality import QualityTap, rung_label
+from repro.obs.trace import Tracer
+from repro.serve.engine import ServeEngine
+from repro.serve.metrics import EngineStats, _pct, summarize
+
+_CACHE: dict = {}
+
+
+def _setup(arch: str = "tinyllama-1.1b-smoke", policy=None):
+    key = (arch, id(policy) if policy is not None else None)
+    if key not in _CACHE:
+        cfg = get_config(arch)
+        m = build_model(cfg, policy) if policy is not None else build_model(cfg)
+        params = m.init(jax.random.PRNGKey(0), tp=1)
+        _CACHE[key] = (m, params)
+    return _CACHE[key]
+
+
+# ---------------------------------------------------------------------------
+# tracer
+# ---------------------------------------------------------------------------
+
+
+def test_tracer_spans_nest_and_export():
+    tr = Tracer(enabled=True)
+    with tr.span("outer", track="t", a=1):
+        with tr.span("inner", track="t"):
+            time.sleep(0.001)
+        tr.event("mark", track="t", x=2)
+    evs = tr.events
+    names = [e["name"] for e in evs]
+    # inner exits before outer -> emitted first
+    assert names == ["inner", "mark", "outer"]
+    inner = evs[0]
+    outer = evs[2]
+    assert inner["ph"] == "X" and outer["ph"] == "X"
+    assert inner["dur"] > 0
+    # nesting: inner fully contained in outer's [ts, ts+dur]
+    assert outer["ts"] <= inner["ts"]
+    assert inner["ts"] + inner["dur"] <= outer["ts"] + outer["dur"] + 1e-3
+    assert evs[1]["ph"] == "i" and evs[1]["args"] == {"x": 2}
+
+    chrome = tr.to_chrome()
+    # loadable chrome://tracing object: thread_name metadata + serializable
+    assert any(e["ph"] == "M" and e["args"]["name"] == "t"
+               for e in chrome["traceEvents"])
+    json.dumps(chrome)                    # must be JSON-serializable
+    assert chrome["displayTimeUnit"] == "ms"
+
+
+def test_tracer_ring_buffer_bounded():
+    tr = Tracer(capacity=8, enabled=True)
+    for i in range(20):
+        tr.event("e", n=i)
+    assert len(tr.events) == 8
+    assert tr.dropped == 12
+    # oldest evicted: the survivors are the 8 most recent
+    assert [e["args"]["n"] for e in tr.events] == list(range(12, 20))
+    assert tr.to_chrome()["otherData"]["dropped"] == 12
+
+
+def test_tracer_disabled_is_noop():
+    tr = Tracer(enabled=False)
+    with tr.span("s", a=1) as sp:
+        pass
+    tr.event("e")
+    tr.counter("c", v=1)
+    assert tr.events == []
+    # the disabled path hands out one shared null span (no allocation)
+    with tr.span("s2") as sp2:
+        pass
+    assert sp is sp2
+
+
+def test_tracer_write_and_global_swap(tmp_path):
+    old = obs_trace.get_tracer()
+    try:
+        tr = obs_trace.set_tracer(Tracer(enabled=True))
+        obs_trace.span("x")  # context manager unused: no event
+        obs_trace.event("y", track="g")
+        p = tmp_path / "trace.json"
+        tr.write(p)
+        loaded = json.loads(p.read_text())
+        assert any(e["name"] == "y" for e in loaded["traceEvents"])
+    finally:
+        obs_trace.set_tracer(old)
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_prometheus_roundtrip():
+    r = Registry()
+    c = r.counter("repro_x_total", "things")
+    c.inc()
+    c.inc(2)
+    g = r.gauge("repro_g", "a gauge")
+    g.set(1.5)
+    lab = r.counter("repro_lab_total", "by site", labels=("site", "backend"))
+    lab.labels(site="decode", backend="xla").inc(4)
+    h = r.histogram("repro_h_seconds", "lat", buckets=(0.1, 1.0))
+    for v in (0.05, 0.5, 5.0):
+        h.observe(v)
+
+    text = r.to_prometheus()
+    d = parse_text(text)
+    assert d[("repro_x_total", ())] == 3
+    assert d[("repro_g", ())] == 1.5
+    assert d[("repro_lab_total",
+              (("backend", "xla"), ("site", "decode")))] == 4
+    # cumulative buckets + +Inf == count
+    assert d[("repro_h_seconds_bucket", (("le", "0.1"),))] == 1
+    assert d[("repro_h_seconds_bucket", (("le", "1"),))] == 2
+    assert d[("repro_h_seconds_bucket", (("le", "+Inf"),))] == 3
+    assert d[("repro_h_seconds_count", ())] == 3
+    assert d[("repro_h_seconds_sum", ())] == pytest.approx(5.55)
+    # snapshot is JSON-able and agrees
+    snap = r.snapshot()
+    json.dumps(snap)
+    assert snap["repro_x_total"]["values"][""] == 3
+
+
+def test_registry_idempotent_and_conflicts():
+    r = Registry()
+    a = r.counter("repro_dup_total", "x")
+    b = r.counter("repro_dup_total", "x")
+    assert a is b
+    with pytest.raises(ValueError):
+        r.gauge("repro_dup_total", "now a gauge")
+    with pytest.raises(ValueError):
+        r.counter("repro_dup_total", "x", labels=("site",))
+    with pytest.raises(ValueError):
+        r.counter("0bad name")
+    c = r.counter("repro_neg_total")
+    with pytest.raises(ValueError):
+        c.inc(-1)
+
+
+def test_labelled_family_interning():
+    r = Registry()
+    f = r.counter("repro_l_total", "x", labels=("site",))
+    f.labels(site="a").inc()
+    f.labels(site="a").inc()
+    f.labels(site="b").inc()
+    assert f.labels(site="a").value == 2
+    assert f.labels(site="b").value == 1
+    with pytest.raises(ValueError):
+        f.labels(wrong="a")
+    with pytest.raises(ValueError):
+        f.inc()                           # labelled family has no solo child
+
+
+# ---------------------------------------------------------------------------
+# serve metrics: percentiles + summarize edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_pct_linear_interpolation():
+    xs = [0.0, 1.0, 2.0, 3.0]
+    assert _pct(xs, 0.0) == 0.0
+    assert _pct(xs, 1.0) == 3.0
+    assert _pct(xs, 0.5) == pytest.approx(1.5)     # nearest-rank gave 1.0
+    assert _pct(xs, 0.95) == pytest.approx(2.85)
+    assert _pct([], 0.5) == 0.0
+    assert _pct([7.0], 0.99) == 7.0
+
+
+@settings(max_examples=24, deadline=None)
+@given(st.integers(1, 40), st.integers(0, 2 ** 31 - 1))
+def test_pct_monotone_in_q(n, seed):
+    """Interpolated percentiles are monotone non-decreasing in q and stay
+    inside [min, max] of the sample."""
+    rng = np.random.default_rng(seed)
+    xs = rng.uniform(-100, 100, size=n).tolist()
+    qs = [0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99, 1.0]
+    vals = [_pct(xs, q) for q in qs]
+    assert all(a <= b + 1e-9 for a, b in zip(vals, vals[1:])), (qs, vals)
+    assert min(xs) - 1e-9 <= vals[0] and vals[-1] <= max(xs) + 1e-9
+
+
+class _FakeReq:
+    def __init__(self, t_enqueue=0.0, t_admitted=0.0, t_first_token=0.0,
+                 t_done=0.0, out_tokens=(), prompt_len=3, degree=None):
+        self.t_enqueue = t_enqueue
+        self.t_admitted = t_admitted
+        self.t_first_token = t_first_token
+        self.t_done = t_done
+        self.out_tokens = list(out_tokens)
+        self.prompt = np.zeros(prompt_len, np.int32)
+        self.degree_at_first_token = degree
+
+    @property
+    def queue_time(self):
+        return self.t_admitted - self.t_enqueue
+
+    @property
+    def ttft(self):
+        return self.t_first_token - self.t_enqueue
+
+    @property
+    def tpot(self):
+        return (self.t_done - self.t_first_token) / max(len(self.out_tokens) - 1, 1)
+
+    @property
+    def e2e(self):
+        return self.t_done - self.t_enqueue
+
+
+def test_summarize_empty_done():
+    s = summarize([])
+    assert s["requests"] == 0
+    assert s["generated_tokens"] == 0
+    assert s["ttft_p50_ms"] == 0.0 and s["e2e_p95_ms"] == 0.0
+    assert "degree_at_first_token" not in s
+    assert "gen_tok_per_s" not in s
+
+
+def test_summarize_zero_tokens_and_single_token():
+    # EOS-before-first-token: no TTFT sample; single token: no TPOT sample
+    r0 = _FakeReq(t_admitted=0.1, t_done=0.2, out_tokens=[])
+    r1 = _FakeReq(t_admitted=0.1, t_first_token=0.3, t_done=0.3,
+                  out_tokens=[5])
+    s = summarize([r0, r1], wall_s=1.0)
+    assert s["requests"] == 2
+    assert s["generated_tokens"] == 1
+    assert s["ttft_p50_ms"] == pytest.approx(300.0)  # only r1 contributes
+    assert s["tpot_p50_ms"] == 0.0                   # no multi-token request
+    assert s["e2e_p50_ms"] == pytest.approx(250.0)
+    assert s["gen_tok_per_s"] == 1.0
+
+
+def test_summarize_no_wall_clock_and_first_token_degrees():
+    r0 = _FakeReq(t_first_token=0.1, t_done=0.5, out_tokens=[1, 2],
+                  degree=(8,))
+    r1 = _FakeReq(t_first_token=0.2, t_done=0.6, out_tokens=[3, 4],
+                  degree=(8, 7, 6))
+    s = summarize([r0, r1])
+    assert "gen_tok_per_s" not in s
+    assert s["degree_at_first_token"] == {"8": 1, "8.7.6": 1}
+    assert s["ttft_p99_ms"] >= s["ttft_p95_ms"] >= s["ttft_p50_ms"]
+
+
+def test_engine_stats_registry_view():
+    st_ = EngineStats()
+    st_.c_decode_steps.inc(3)
+    st_.c_prefill_tokens.inc(7)
+    assert st_.decode_steps == 3 and st_.prefill_tokens == 7
+    rec = st_.record_degree(0, 6)
+    assert rec == (6,)
+    assert st_.degree_history[-1] == (0, (6,))
+    d = parse_text(st_.registry.to_prometheus())
+    assert d[("repro_decode_steps_total", ())] == 3
+    assert d[("repro_degree_ebits", (("site", "global"),))] == 6
+
+
+# ---------------------------------------------------------------------------
+# engine trace validation (the §11 contract)
+# ---------------------------------------------------------------------------
+
+
+def _events(tracer, name):
+    return [e for e in tracer.events if e["name"] == name]
+
+
+def test_engine_trace_lifecycle_and_route_counters():
+    m, params = _setup()
+    tr = Tracer(enabled=True)
+    reg = Registry()
+    eng = ServeEngine(m, params, slots=2, max_len=64, registry=reg, tracer=tr)
+    for _ in range(4):
+        eng.submit(np.array([1, 2, 3]), max_new_tokens=4)
+    done = eng.run_until_drained()
+    assert len(done) == 4
+
+    enq = _events(tr, "enqueue")
+    pre = _events(tr, "prefill")
+    ft = _events(tr, "first_token")
+    fin = _events(tr, "request_done")
+    rids = {r.rid for r in done}
+    # every admitted request has enqueue -> prefill -> first_token ->
+    # request_done, with matching rids across the event kinds
+    assert {e["args"]["rid"] for e in enq} == rids
+    assert {e["args"]["rid"] for e in pre} == rids
+    assert {e["args"]["rid"] for e in ft} == rids
+    assert {e["args"]["rid"] for e in fin} == rids
+    # prefill spans carry the slot and token payload and measured time
+    assert all(e["ph"] == "X" and e["dur"] >= 0 for e in pre)
+    assert all(e["args"]["prompt_tokens"] == 3 for e in pre)
+    # per-rid ordering: enqueue < prefill end < first_token
+    t_enq = {e["args"]["rid"]: e["ts"] for e in enq}
+    t_ft = {e["args"]["rid"]: e["ts"] for e in ft}
+    for e in pre:
+        rid = e["args"]["rid"]
+        assert t_enq[rid] <= e["ts"] + e["dur"] <= t_ft[rid]
+    # one decode_tick span per engine tick
+    ticks = _events(tr, "decode_tick")
+    assert len(ticks) == eng.stats.decode_steps
+
+    # kernel-route counters: decode-site counts sum EXACTLY to decode steps
+    fam = eng.stats.c_route_steps
+    by_site: dict = {}
+    for (site, backend), child in fam.children.items():
+        by_site[site] = by_site.get(site, 0) + child.value
+    assert by_site["decode"] == eng.stats.decode_steps
+    assert by_site["prefill"] == eng.stats.prefill_calls
+    # the route event names a real backend
+    routes = _events(tr, "kernel_route")
+    assert {e["args"]["backend"] for e in routes} <= {"pallas", "xla"}
+
+
+def test_engine_qos_rung_events_carry_degrees():
+    m, params = _setup()
+    tr = Tracer(enabled=True)
+    qos = QoSController(ladder=[{"ebits": 8}, {"ebits": 6}],
+                        low_water=0.5, high_water=0.9, cooldown_steps=0)
+    eng = ServeEngine(m, params, slots=2, max_len=64, qos=qos, tracer=tr)
+    for _ in range(6):
+        eng.submit(np.array([1, 2, 3]), 8)
+    done = eng.run_until_drained()
+    rungs = _events(tr, "qos_rung")
+    assert rungs, "overload never moved the QoS rung"
+    for e in rungs:
+        assert isinstance(e["args"]["degrees"], list) and e["args"]["degrees"]
+        assert 0.0 <= e["args"]["headroom"] <= 1.0
+    # the ladder visited ebits 6 somewhere; history is tuple-normalized
+    assert any(e["args"]["degrees"] == [6] for e in rungs)
+    # each request records the degree serving its first token
+    assert all(r.degree_at_first_token in {(8,), (6,)} for r in done)
+    s = summarize(done, eng.stats)
+    assert sum(s["degree_at_first_token"].values()) == len(done)
+
+
+def test_engine_disabled_tracer_records_nothing():
+    m, params = _setup()
+    tr = Tracer(enabled=False)
+    eng = ServeEngine(m, params, slots=2, max_len=64, tracer=tr)
+    eng.submit(np.array([1, 2, 3]), 4)
+    eng.run_until_drained()
+    assert tr.events == []
+    # counters still work without tracing
+    assert eng.stats.decode_steps > 0
+
+
+def test_quality_tap_records_per_rung():
+    from repro.core.approx import policy_from_flag
+
+    policy = policy_from_flag("axq8", dynamic=True)
+    m, params = _setup(policy=policy)
+    tr = Tracer(enabled=True)
+    eng = ServeEngine(m, params, slots=2, max_len=64, degree=6,
+                      quality_every=2, prepack=False, tracer=tr)
+    eng.submit(np.array([1, 2, 3]), 8)
+    eng.run_until_drained()
+    assert eng._tap is not None and eng._tap.samples > 0
+    hist = eng.stats.registry.get("repro_quality_logit_rms")
+    child = hist.labels(rung="6")
+    assert child.count == eng._tap.samples
+    assert child.sum > 0                  # approx rung 6 deviates from exact
+    probes = [e for e in tr.events if e["name"] == "quality_probe"]
+    assert len(probes) == eng._tap.samples
+    assert all(e["args"]["rung"] == "6" for e in probes)
+
+
+def test_quality_tap_requires_traced_degree():
+    m, params = _setup()
+    with pytest.raises(ValueError):
+        ServeEngine(m, params, slots=2, max_len=64, quality_every=4)
+
+
+def test_rung_label():
+    assert rung_label(np.int32(8)) == "8"
+    assert rung_label(np.array([8, 7, 6])) == "8.7.6"
+
+
+def test_trainer_spans_and_metrics(tmp_path):
+    from repro.data.pipeline import make_pipeline
+    from repro.train import step as step_mod
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg = get_config("tinyllama-1.1b-smoke")
+    model = build_model(cfg)
+    tr = Tracer(enabled=True)
+    reg = Registry()
+    trainer = Trainer(
+        model, step_mod.StepConfig(remat="none", total_steps=4, warmup=1),
+        TrainerConfig(total_steps=4, ckpt_every=2, log_every=10,
+                      ckpt_dir=str(tmp_path), async_ckpt=False),
+        make_pipeline(cfg, seq_len=16, global_batch=2),
+        registry=reg, tracer=tr)
+    out = trainer.run()
+    assert out["final_step"] == 4
+    steps = [e for e in tr.events if e["name"] == "train_step"]
+    assert len(steps) == 4
+    assert all(e["ph"] == "X" for e in steps)
+    ckpts = [e for e in tr.events if e["name"] == "checkpoint"]
+    assert len(ckpts) >= 2
+    d = parse_text(reg.to_prometheus())
+    assert d[("repro_train_steps_total", ())] == 4
+    assert d[("repro_train_checkpoints_total", ())] >= 2
+    assert d[("repro_train_step_seconds_count", ())] == 4
+    assert d[("repro_degree_ebits", (("site", "global"),))] == 8

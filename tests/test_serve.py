@@ -211,8 +211,10 @@ def test_qos_degree_moves_with_load():
     eng = ServeEngine(m, params, slots=2, max_len=64, qos=qos)
     outs = [eng.submit(np.array([1, 2, 3]), 8) for _ in range(6)]
     eng.run_until_drained()
+    # history entries are tuple-normalized at record time (a global scalar
+    # ladder records 1-tuples — core.dynamic.degree_record(as_tuple=True))
     ebits_seen = {e for _, e in eng.stats.degree_history}
-    assert 6 in ebits_seen            # overloaded -> approximated harder
+    assert (6,) in ebits_seen         # overloaded -> approximated harder
     assert [r.out_tokens for r in outs] == [r.out_tokens for r in refs]
 
 

@@ -1,0 +1,77 @@
+"""Bench-record regression gate (CI `bench-regress` job).
+
+Thin CLI over :mod:`repro.obs.regress`.  Two modes:
+
+* default — validate the four committed ``benchmarks/BENCH_*.json``
+  records: schema-v2 meta stamp (git SHA, platform, JAX + kernel
+  backends) plus each bench's declared scale-invariant invariants
+  (error envelopes, skip-grid step ratios, fused-GEMM speedup floors,
+  planned-ladder Pareto order).  Catches hand-edits, rotted rows, and
+  regenerations that silently regressed a claim.
+* ``--fresh`` — additionally re-run the bench modules in-process (tiny
+  shapes when ``REPRO_BENCH_TINY=1`` is exported, as CI does) and
+  require every fresh row name to exist in the committed record and the
+  fresh record to satisfy the same invariants.  Raw timings are never
+  diffed across machines — only the declared invariants are portable.
+
+Exit code 0 = all records healthy; non-zero prints every violation.
+
+  PYTHONPATH=src python tools/check_bench.py
+  REPRO_BENCH_TINY=1 PYTHONPATH=src python tools/check_bench.py --fresh
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+for p in (str(ROOT), str(ROOT / "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+from repro.obs import regress  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--bench", action="append", default=None,
+                    choices=sorted(regress.BENCH_RECORDS),
+                    help="check only this bench (repeatable; default: all)")
+    ap.add_argument("--fresh", action="store_true",
+                    help="also re-run the benches and diff against the "
+                         "committed records (tiny shapes when "
+                         "REPRO_BENCH_TINY=1 is exported)")
+    args = ap.parse_args(argv)
+
+    benches = args.bench or sorted(regress.BENCH_RECORDS)
+    errs = regress.check_committed(benches=benches)
+    for e in errs:
+        print(f"[check_bench] FAIL {e}")
+
+    if args.fresh and not errs:
+        tiny = os.environ.get("REPRO_BENCH_TINY", "0") == "1"
+        from benchmarks.run import make_record
+
+        for bench in benches:
+            committed = regress.load_record(bench)
+            print(f"[check_bench] fresh run: {bench} "
+                  f"({'tiny' if tiny else 'full'} shapes) ...", flush=True)
+            fresh = make_record(bench, regress.run_fresh_rows(bench))
+            found = regress.compare_fresh(committed, fresh)
+            for e in found:
+                print(f"[check_bench] FAIL {e}")
+            errs.extend(found)
+
+    n = len(benches)
+    if errs:
+        print(f"[check_bench] {len(errs)} violation(s) across {n} record(s)")
+        return 1
+    mode = "committed+fresh" if args.fresh else "committed"
+    print(f"[check_bench] OK — {n} record(s) pass ({mode})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
