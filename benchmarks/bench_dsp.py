@@ -1,21 +1,15 @@
 """Ch. 7 (Tables 7.1/7.2/7.5, Fig. 7.8): approximate DSP accelerators —
 1D FIR filtering and 2D Gaussian blur with the paper's multipliers, SNR/PSNR
 vs the exact fixed-point pipeline.  The PR path runs through the
-kernels/axmult_elem Pallas kernel (the accelerator datapath)."""
+``kernels.dispatch`` fir/conv2d routes (the same router the serve engine
+uses), so the bench exercises the accelerator datapath end to end."""
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import encodings as enc
-from repro.kernels.axmult_elem import pr_multiply
-
-
-def _snr(ref, x):
-    err = ref.astype(np.float64) - x.astype(np.float64)
-    return 10 * np.log10((ref.astype(np.float64) ** 2).mean()
-                         / np.maximum((err ** 2).mean(), 1e-30))
+from repro.core.error_analysis import psnr_db, snr_db
+from repro.kernels import dispatch as kdispatch
 
 
 def _fir_exact(sig_q, taps_q):
@@ -23,19 +17,6 @@ def _fir_exact(sig_q, taps_q):
     for i, t in enumerate(taps_q):
         acc += t * sig_q[i:i + len(acc)]
     return acc
-
-
-def _fir_pr(sig_q, taps_q, p, r):
-    """All taps in one batched DyFXU call: operands stacked (taps, Lpad),
-    tap rows broadcast against their shifted signal windows."""
-    T = len(taps_q)
-    L = len(sig_q) - T
-    Lpad = ((L + 2047) // 2048) * 2048
-    a = np.ascontiguousarray(np.broadcast_to(taps_q[:, None], (T, Lpad)))
-    b = np.zeros((T, Lpad), np.int32)
-    b[:, :L] = np.lib.stride_tricks.sliding_window_view(sig_q, L)[:T]
-    prod = np.asarray(pr_multiply(jnp.asarray(a), jnp.asarray(b), p, r, n=16))
-    return prod.astype(np.int64).sum(axis=0)[:L]
 
 
 def rows():
@@ -52,36 +33,29 @@ def rows():
     ref = _fir_exact(sig_q, taps_q)
     for p, r in [(1, 4), (2, 8), (3, 8)]:
         t0 = time.perf_counter()
-        y = _fir_pr(sig_q, taps_q, p, r)
+        y = kdispatch.fir(sig_q, taps_q, p=p, r=r)
         us = (time.perf_counter() - t0) * 1e6
         out.append((f"dsp.fir_pr_p{p}r{r}_snr_db", round(us, 0),
-                    round(_snr(ref, y), 1)))
+                    round(snr_db(ref, y), 1)))
     # RAD FIR (taps approximately encoded — weight-stationary accelerator)
     for k in (6, 8):
         taps_rad = enc.np_rad_encode(taps_q, 16, k)
         y = _fir_exact(sig_q, taps_rad)
-        out.append((f"dsp.fir_rad{2**k}_snr_db", 0.0, round(_snr(ref, y), 1)))
+        out.append((f"dsp.fir_rad{2**k}_snr_db", 0.0, round(snr_db(ref, y), 1)))
 
     # ---- Gaussian blur (8-bit image, 5x5 kernel) ----
     img = (rng.random((128, 128)) * 255).astype(np.int32)
     img[32:96, 32:96] += 60  # structure
     g1 = np.array([1, 4, 6, 4, 1], np.int64)
-    g2 = np.outer(g1, g1)  # sum 256
-    def blur(mul):
-        padded = np.pad(img, 2, mode="edge")
-        acc = np.zeros_like(img, np.int64)
-        for dy in range(5):
-            for dx in range(5):
-                w = int(g2[dy, dx])
-                patch = padded[dy:dy + 128, dx:dx + 128]
-                acc += mul(np.full_like(patch, w), patch)
-        return np.clip(acc >> 8, 0, 255)
+    g2 = np.outer(g1, g1).astype(np.int32)  # sum 256 == 2**8
 
-    ref_img = blur(lambda w, x: w.astype(np.int64) * x)
+    def blur(p, r):
+        y = kdispatch.conv2d(img[None], g2, p=p, r=r, shift=8, pad="edge")
+        return np.clip(np.asarray(y)[0], 0, 255)
+
+    ref_img = blur(0, 0)
     for p, r in [(1, 2), (2, 4)]:
-        approx = blur(lambda w, x: np.asarray(
-            enc.np_perforate_operand(x, 16, p)) * enc.np_round_operand(w, r))
-        mse = ((ref_img - approx) ** 2).mean()
-        psnr = 10 * np.log10(255**2 / max(mse, 1e-12))
-        out.append((f"dsp.blur_pr_p{p}r{r}_psnr_db", 0.0, round(psnr, 1)))
+        approx = blur(p, r)
+        out.append((f"dsp.blur_pr_p{p}r{r}_psnr_db", 0.0,
+                    round(psnr_db(ref_img, approx, peak=255), 1)))
     return out

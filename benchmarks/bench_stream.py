@@ -1,0 +1,123 @@
+"""Streaming DSP/vision serving on the generic engine (ISSUE 7, Ch. 7).
+
+The claim under test: the SAME serving core that batches token decode also
+serves the approximate FIR + conv2d pipeline frame-by-frame — steady-state
+throughput, a PSNR-calibrated per-site degree ladder, and QoS rung moves at
+ONE compiled step executable.  Rows:
+
+* ``stream.slots{N}_frames_per_s`` — steady-state frames/s through the
+  continuous-batching engine (warm jit; us column is µs per frame).
+* ``stream.plan_search`` / ``stream.plan_rungs`` — the PSNR-metric
+  calibration search (``tune.build_plan`` with ``psnr_metric``).
+* ``stream.uniform_e{e}`` / ``stream.rung_{k}`` — ``err=..,cost=..`` pairs
+  on the (neg-PSNR, modeled-cost) Pareto axes, same convention as
+  bench_tune; ``stream.rung_{k}_psnr_db`` carries the rung's calibrated
+  PSNR in dB (the gate checks it is monotone non-increasing down the
+  ladder).
+* ``stream.dominated_uniform_rungs`` — the mixed-ladder dominance verdict
+  (asserted non-empty, like bench_tune).
+* ``stream.qos_walk_compiles`` — number of compiled step executables after
+  serving every ladder rung (asserted == 1: the traced degree vector keeps
+  rung moves recompile-free).
+
+REPRO_BENCH_TINY=1 shrinks clips/grid for the CI smoke job.  Committed
+record: benchmarks/BENCH_stream.json (full-shape run).
+"""
+import os
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.stream import (StreamAdapter, StreamServeEngine, make_clip,
+                                psnr_metric)
+from repro.tune import build_plan, vector_cost
+from repro.tune.autotune import _Prober
+
+_TINY = os.environ.get("REPRO_BENCH_TINY", "0") == "1"
+
+
+def rows():
+    out = []
+    adapter = StreamAdapter()
+    cfg = adapter.cfg
+    params = adapter.init_params()
+
+    # ---- PSNR-calibrated plan (the stream analogue of bench_tune) ----
+    # the grid must reach below 6 even in tiny mode: dominance needs a
+    # mixed vector that undercuts a uniform rung's cost (grid (8, 6) has
+    # no room under uniform-6)
+    n_clips, n_frames = (2, 4) if _TINY else (4, 8)
+    grid = (8, 6, 4)
+    calib = {"frames": np.stack([make_clip(n_frames, cfg.frame, q=cfg.q,
+                                           seed=i) for i in range(n_clips)])}
+    prober = _Prober(adapter, params, calib, metric=psnr_metric)
+    plan = build_plan(adapter, params, calib, grid=grid, prober=prober,
+                      metric=psnr_metric)
+    us_per_cfg = plan.meta["tune_seconds"] * 1e6 / plan.meta["visited"]
+    out.append(("stream.plan_search", round(us_per_cfg, 0),
+                f"{plan.meta['strategy']}:{plan.meta['visited']}cfgs,"
+                f"metric={plan.meta['metric']}"))
+    out.append(("stream.plan_rungs", 0.0, len(plan.ladder)))
+
+    # uniform baseline = the legacy global-knob QoS ladder (8..4), denser
+    # than the search grid: the odd rungs are where one global ebits hurts
+    # (e.g. e=5 rounds the conv weights to garbage while a mixed plan
+    # holds conv at 6 and spends the savings on the FIR)
+    S = len(plan.sites)
+    uniform = {}
+    for e in (8, 7, 6, 5, 4):
+        vec = [int(e)] * S
+        uniform[e] = (prober.error(vec), vector_cost(cfg, vec))
+        out.append((f"stream.uniform_e{e}", 0.0,
+                    f"err={uniform[e][0]:.4f},cost={uniform[e][1]:.4f}"))
+    for pt in plan.ladder:
+        out.append((f"stream.{pt.name}", 0.0,
+                    f"deg={'.'.join(map(str, pt.degrees))},"
+                    f"err={pt.error:.4f},cost={pt.cost:.4f}"))
+        # the rung's calibrated quality in application units (dB): the
+        # error axis is neg-PSNR, so quality is its negation
+        out.append((f"stream.{pt.name}_psnr_db", 0.0, round(-pt.error, 2)))
+
+    verdicts = []
+    for e, (ue, uc) in sorted(uniform.items()):
+        doms = [pt for pt in plan.ladder if pt.cost < uc and pt.error <= ue]
+        if doms:
+            best = min(doms, key=lambda p: p.cost)
+            verdicts.append(f"e{e}<{best.name}"
+                            f"(cost-{100 * (1 - best.cost / uc):.1f}%)")
+    out.append(("stream.dominated_uniform_rungs", 0.0,
+                "+".join(verdicts) if verdicts else "none"))
+    assert verdicts, (
+        "stream plan failed to dominate any uniform rung — the PSNR "
+        "calibration or per-site degree plumbing regressed")
+
+    # ---- steady-state serving throughput ----
+    n_req, clip_frames = (3, 4) if _TINY else (8, 16)
+    for slots in ((2,) if _TINY else (2, 4)):
+        eng = StreamServeEngine(adapter, params, slots=slots, plan=plan)
+        eng.submit(make_clip(2, cfg.frame, q=cfg.q, seed=99))
+        eng.run_until_drained()                  # warm the compiled step
+        eng.done.clear()
+        t0 = time.perf_counter()
+        for i in range(n_req):
+            eng.submit(make_clip(clip_frames, cfg.frame, q=cfg.q, seed=i))
+        done = eng.run_until_drained()
+        dt = time.perf_counter() - t0
+        frames = sum(len(r.out) for r in done)
+        out.append((f"stream.slots{slots}_frames_per_s",
+                    round(dt * 1e6 / max(frames, 1), 1),
+                    round(frames / dt, 1)))
+
+    # ---- QoS rung walk at one compile ----
+    eng = StreamServeEngine(adapter, params, slots=2, plan=plan)
+    for rung in range(len(plan.ladder)):
+        eng._degree = jnp.asarray(plan.degrees(rung), jnp.int32)
+        eng.submit(make_clip(2, cfg.frame, q=cfg.q, seed=rung))
+        eng.run_until_drained()
+    compiles = int(eng._step._cache_size())
+    out.append(("stream.qos_walk_compiles", 0.0, compiles))
+    assert compiles == 1, (
+        f"rung walk recompiled the stream step ({compiles} executables) — "
+        "the degree operand stopped being shape-stable")
+    return out

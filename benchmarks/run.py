@@ -18,7 +18,8 @@ import traceback
 _JSON_MODULES = {"bench_kernels": "BENCH_kernels.json",
                  "bench_serving": "BENCH_serving.json",
                  "bench_gemm": "BENCH_gemm.json",
-                 "bench_tune": "BENCH_tune.json"}
+                 "bench_tune": "BENCH_tune.json",
+                 "bench_stream": "BENCH_stream.json"}
 
 # bump when the record layout changes; repro.obs.regress pins this
 SCHEMA_VERSION = 2
@@ -69,11 +70,11 @@ def _write_record(name: str, rows: list) -> None:
 def main() -> None:
     from benchmarks import (bench_cnn, bench_dlsb, bench_dsp, bench_dynamic,
                             bench_gemm, bench_kernels, bench_pareto, bench_pr,
-                            bench_rad, bench_serving, bench_tune)
+                            bench_rad, bench_serving, bench_stream, bench_tune)
 
     mods = [bench_dlsb, bench_rad, bench_pr, bench_dynamic, bench_pareto,
             bench_dsp, bench_cnn, bench_kernels, bench_gemm, bench_tune,
-            bench_serving]
+            bench_serving, bench_stream]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")
     failed = []

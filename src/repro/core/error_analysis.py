@@ -110,3 +110,65 @@ def evaluate_float(mult_fn, num: int = 1 << 18, seed: int = 0, scale: float = 4.
     exact = a.astype(np.float64) * b.astype(np.float64)
     approx = np.asarray(mult_fn(a, b), dtype=np.float64)
     return _report(exact, approx)
+
+
+# ---------------------------------------------------------------------------
+# signal/vision quality metrics (stream-workload calibration — ISSUE 7)
+# ---------------------------------------------------------------------------
+# The plan autotuner and the serve quality tap calibrate stream workloads on
+# application-level quality (the approximate-computing surveys' requirement:
+# PSNR/SSIM for signal & vision, not logit error).  All numpy-only, defined
+# on arbitrary-shape arrays; ``ref`` is the exact-arithmetic output.
+
+
+def mse(ref, x) -> float:
+    """Mean squared error."""
+    ref = np.asarray(ref, np.float64)
+    x = np.asarray(x, np.float64)
+    return float(np.mean((ref - x) ** 2))
+
+
+def snr_db(ref, x) -> float:
+    """Signal-to-noise ratio in dB: signal power over error power (the
+    dissertation's FIR quality figure; shared by bench_dsp and the DSP
+    example — previously duplicated in both)."""
+    ref = np.asarray(ref, np.float64)
+    x = np.asarray(x, np.float64)
+    err = ref - x
+    p_sig = float(np.mean(ref ** 2))
+    p_err = float(np.mean(err ** 2))
+    return float(10.0 * np.log10(p_sig / max(p_err, 1e-30)))
+
+
+def psnr_db(ref, x, peak=None) -> float:
+    """Peak signal-to-noise ratio in dB.  ``peak`` defaults to the
+    reference's max magnitude (1.0 for an all-zero reference).  The MSE is
+    floored at ``peak**2 * 1e-18`` (180 dB ceiling), so identical inputs
+    give a large *finite* value — monotone in MSE, JSON-safe, and usable
+    negated as a Pareto error axis (``-psnr_db``)."""
+    ref = np.asarray(ref, np.float64)
+    x = np.asarray(x, np.float64)
+    if peak is None:
+        peak = float(np.max(np.abs(ref))) or 1.0
+    m = max(mse(ref, x), float(peak) ** 2 * 1e-18)
+    return float(10.0 * np.log10(float(peak) ** 2 / m))
+
+
+def ssim(ref, x, peak=None) -> float:
+    """Structural similarity (global-statistics variant, Wang et al. 2004
+    constants C1=(0.01*peak)^2, C2=(0.03*peak)^2): luminance x contrast x
+    structure over the whole array rather than a sliding window — the
+    scale-invariant per-rung quality figure the bench gate checks.  Exactly
+    1.0 on identical inputs; finite on constant signals (the stabilizing
+    constants keep every denominator positive)."""
+    ref = np.asarray(ref, np.float64)
+    x = np.asarray(x, np.float64)
+    if peak is None:
+        peak = float(np.max(np.abs(ref))) or 1.0
+    c1 = (0.01 * peak) ** 2
+    c2 = (0.03 * peak) ** 2
+    mu_r, mu_x = float(np.mean(ref)), float(np.mean(x))
+    var_r, var_x = float(np.var(ref)), float(np.var(x))
+    cov = float(np.mean((ref - mu_r) * (x - mu_x)))
+    return ((2 * mu_r * mu_x + c1) * (2 * cov + c2)
+            / ((mu_r ** 2 + mu_x ** 2 + c1) * (var_r + var_x + c2)))

@@ -339,3 +339,120 @@ def axq_gated(x2: Array, w_up, w_gate, *, act: str = "silu",
     blk = resolve_block(x2.shape[-1], block)
     return _axq_gated_core(blk, route, act, ste)(
         x2, w_up.astype(jnp.float32), w_gate.astype(jnp.float32), e)
+
+
+# ---------------------------------------------------------------------------
+# DSP routing (approximate FIR / conv2d — the Ch. 7 accelerators)
+# ---------------------------------------------------------------------------
+
+
+def _pr_knobs(degree, p, r):
+    """Resolve the PR knobs: either a ladder ``degree`` (effective bits,
+    mapped via ``dsp.degree_to_pr``) or explicit raw (p, r) — not both."""
+    from repro.kernels import dsp as _dsp
+
+    if degree is not None:
+        if p is not None or r is not None:
+            raise ValueError("pass either degree= or explicit p=/r=, not both")
+        return _dsp.degree_to_pr(degree)
+    return (jnp.int32(0) if p is None else jnp.asarray(p, jnp.int32),
+            jnp.int32(0) if r is None else jnp.asarray(r, jnp.int32))
+
+
+def fir(x, taps, *, tail=None, degree=None, p=None, r=None, n: int = 16,
+        shift: int = 0):
+    """Approximate-FIR router (DyFXU PR datapath): pallas kernel vs the
+    bit-identical jnp ref, selected like every other site (``REPRO_KERNELS``
+    / :func:`set_backend`), recorded under ``last_route["fir"]``.
+
+    Two call modes (int32 operands; the float/differentiable entry is
+    :func:`fir_approx`):
+
+    * offline / valid-mode (``tail=None``): ``x`` is a whole (L,) signal;
+      host-side int64 accumulation (arbitrary Q14 operands), returns a
+      numpy (L - T,) array.  Benchmarks and examples.
+    * streaming (``tail`` given): ``x`` (B, L) frame batch, ``tail``
+      (B, T-1) carried history; jit-safe int32 accumulation (taps l1 norm
+      <= ``2**shift``), returns ``(y, new_tail)``.  The serve engine.
+
+    ``degree`` is the ladder knob (None = exact, traced scalar = runtime
+    rung); raw (p, r) may be passed instead for sweep-style benches."""
+    from repro.kernels import dsp as _dsp
+
+    backend = "pallas" if use_pallas() else "xla"
+    _record_route("fir", backend)
+    pk, rk = _pr_knobs(degree, p, r)
+    interp = interpret_mode()
+    if tail is None:
+        return _dsp.fir_valid(x, taps, pk, rk, n=n, backend=backend,
+                              interpret=interp)
+    return _dsp.fir_frames(x, tail, taps, pk, rk, n=n, shift=shift,
+                           backend=backend, interpret=interp)
+
+
+def conv2d(img, kern, *, degree=None, p=None, r=None, n: int = 16,
+           shift: int = 0, pad: str = "zero"):
+    """Approximate-conv2d router (same-size 2D correlation on the PR
+    datapath): img (B, H, W) int32, kern (kh, kw) int32 with l1 norm <=
+    ``2**shift``; jit-safe, recorded under ``last_route["conv2d"]``.  Same
+    degree/knob contract as :func:`fir`."""
+    from repro.kernels import dsp as _dsp
+
+    backend = "pallas" if use_pallas() else "xla"
+    _record_route("conv2d", backend)
+    pk, rk = _pr_knobs(degree, p, r)
+    return _dsp.conv2d_pr(img, kern, pk, rk, n=n, shift=shift, pad=pad,
+                          backend=backend, interpret=interpret_mode())
+
+
+@functools.lru_cache(maxsize=None)
+def _fir_core(T: int, q: int, n: int, route: str, interp: bool):
+    """Differentiable float FIR core, cached per (taps, Q format, backend):
+    quantize -> PR streaming kernel -> dequantize forward; exact-correlation
+    STE backward (the PR bit surgery is piecewise-constant), ``_float0``
+    cotangents for the integer knobs — the GEMM ``_axq_core`` pattern."""
+    from repro.kernels import dsp as _dsp
+
+    scale = float(1 << q)
+    lim = float((1 << (n - 1)) - 1)
+
+    def run(x, t, pk, rk):
+        xq = jnp.clip(jnp.round(x * scale), -lim, lim).astype(jnp.int32)
+        tq = jnp.clip(jnp.round(t * scale), -lim, lim).astype(jnp.int32)
+        tail = jnp.zeros((x.shape[0], T - 1), jnp.int32)
+        y, _ = _dsp.fir_frames(xq, tail, tq, pk, rk, n=n, shift=0,
+                               backend=route, interpret=interp)
+        return y.astype(jnp.float32) / (scale * scale)
+
+    core = jax.custom_vjp(run)
+
+    def exact(x, t):
+        ext = jnp.concatenate(
+            [jnp.zeros((x.shape[0], T - 1), x.dtype), x], axis=1)
+        win = jnp.stack([ext[:, i:i + x.shape[1]] for i in range(T)])
+        return jnp.einsum("i,ibl->bl", t, win)
+
+    def fwd(x, t, pk, rk):
+        return run(x, t, pk, rk), (x, t)
+
+    def bwd(res, g):
+        x, t = res
+        _, vjp = jax.vjp(exact, x, t)
+        dx, dt = vjp(g)
+        return dx, dt, _float0(jnp.int32(0)), _float0(jnp.int32(0))
+
+    core.defvjp(fwd, bwd)
+    return core
+
+
+def fir_approx(x: Array, taps: Array, *, degree=None, q: int = 12,
+               n: int = 16) -> Array:
+    """Differentiable float FIR entry (custom-VJP like the GEMM routes):
+    x (B, L) f32 in ~[-1, 1], taps (T,) f32 with |l1| <~ 1 (so Q-``q``
+    products fit int32 lanes).  Zero-history causal filtering; forward runs
+    the int PR datapath, backward is the exact correlation (STE)."""
+    route = "pallas" if use_pallas() else "xla"
+    _record_route("fir", route)
+    pk, rk = _pr_knobs(degree, None, None)
+    return _fir_core(int(taps.shape[0]), q, n, route, interpret_mode())(
+        x.astype(jnp.float32), taps.astype(jnp.float32), pk, rk)

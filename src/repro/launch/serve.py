@@ -1,4 +1,4 @@
-"""Serving entrypoint: continuous-batching engine over a selected arch.
+"""Serving entrypoint: continuous-batching engine over a selected workload.
 
   python -m repro.launch.serve --arch tinyllama-1.1b-smoke --requests 16
   # temperature/top-k sampling, per-request latency table, QoS degree loop:
@@ -8,6 +8,13 @@
   # ladder, QoS stepping whole calibrated configurations:
   python -m repro.launch.serve --arch tinyllama-1.1b-smoke \
       --plan plans/approx_plan.json --qos --metrics
+  # streaming DSP/vision pipeline (Ch. 7 accelerators) on the same engine:
+  python -m repro.launch.serve --workload stream --requests 8 --qos --metrics
+
+``--workload lm`` (default) decodes tokens; ``--workload stream`` serves
+frame clips through the approximate FIR + conv2d pipeline
+(repro.serve.stream) — same slot lifecycle, continuous batching, plan
+ladder, QoS controller, and observability surfaces.
 
 On a TPU pod the full configs drive the same engine with the decode
 sharding proven by the dry-run (KV cache TP over the model axis, optional
@@ -31,12 +38,66 @@ from repro.serve.engine import ServeEngine
 from repro.serve.metrics import summarize
 
 
+def _write_obs(args) -> None:
+    """Shared exit-time observability dumps (both workloads)."""
+    if args.trace_out:
+        obs_trace.get_tracer().write(args.trace_out)
+        print(f"[launch.serve] wrote Chrome trace -> {args.trace_out}")
+    if args.metrics_out:
+        obs_metrics.get_registry().write(args.metrics_out)
+        print(f"[launch.serve] wrote Prometheus metrics -> {args.metrics_out}")
+
+
+def _serve_stream(args) -> None:
+    """--workload stream: frame clips through the DSP/vision pipeline."""
+    from repro.serve.stream import StreamAdapter, StreamServeEngine, make_clip
+
+    adapter = StreamAdapter()
+    cfg = adapter.cfg
+    plan = None
+    if args.plan is not None:
+        from repro.tune import ApproxPlan
+
+        plan = ApproxPlan.load(args.plan)      # ServeCore validates vs cfg
+    qos = QoSController(
+        ladder=[{"degrees": [e] * (cfg.n_layers + 1)} for e in (8, 7, 6, 5)],
+        low_water=0.25, high_water=0.75, cooldown_steps=8,
+    ) if args.qos else None
+    registry = obs_metrics.get_registry() if args.metrics_out else None
+    eng = StreamServeEngine(adapter, slots=args.slots, seed=args.seed,
+                            qos=qos, plan=plan, registry=registry,
+                            quality_every=args.quality_every)
+    t0 = time.time()
+    for i in range(args.requests):
+        eng.submit(make_clip(args.frames, cfg.frame, q=cfg.q, seed=i))
+    done = eng.run_until_drained()
+    dt = time.time() - t0
+    frames = sum(len(r.out) for r in done)
+    print(f"[launch.serve] stream: {len(done)} clips, {frames} frames, "
+          f"{dt:.2f}s ({frames / max(dt, 1e-9):.1f} frames/s) "
+          f"[kernels={kdispatch.resolved_backend()}]")
+    if args.metrics:
+        for k, v in summarize(done, eng.stats, wall_s=dt).items():
+            print(f"[launch.serve]   {k:24s} {v}")
+        if qos is not None:
+            print(f"[launch.serve]   degree ladder visits: "
+                  f"{[e for _, e in list(eng.stats.degree_history)[-8:]]} "
+                  f"(last 8)")
+    _write_obs(args)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", default="lm", choices=("lm", "stream"),
+                    help="what to serve: lm (token decode, default) or "
+                         "stream (frame-by-frame approximate DSP/vision "
+                         "pipeline — repro.serve.stream)")
     ap.add_argument("--arch", default="tinyllama-1.1b-smoke")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--frames", type=int, default=8,
+                    help="frames per clip (--workload stream)")
     ap.add_argument("--mesh", default="1x1")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; > 0 enables categorical sampling")
@@ -87,6 +148,9 @@ def main() -> None:
     kdispatch.set_backend(args.kernels)
     if args.trace_out:
         obs_trace.enable()
+    if args.workload == "stream":
+        _serve_stream(args)
+        return
 
     d, m = (int(x) for x in args.mesh.split("x")[:2])
     meshctx.set_mesh(meshctx.make_mesh((d, m), ("data", "model")))
@@ -138,12 +202,7 @@ def main() -> None:
         if qos is not None:
             print(f"[launch.serve]   degree ladder visits: "
                   f"{[e for _, e in list(eng.stats.degree_history)[-8:]]} (last 8)")
-    if args.trace_out:
-        obs_trace.get_tracer().write(args.trace_out)
-        print(f"[launch.serve] wrote Chrome trace -> {args.trace_out}")
-    if args.metrics_out:
-        obs_metrics.get_registry().write(args.metrics_out)
-        print(f"[launch.serve] wrote Prometheus metrics -> {args.metrics_out}")
+    _write_obs(args)
 
 
 if __name__ == "__main__":

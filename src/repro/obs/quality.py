@@ -48,44 +48,58 @@ def rung_label(degree) -> str:
 
 
 class QualityTap:
-    """Per-rung logit-error histogram sampled from live decode traffic.
+    """Per-rung quality histogram sampled from live serving traffic.
 
-    Built by the serve engine when ``quality_every > 0``; `sample` is
-    called with the tick's decode inputs *before* the fused step runs
-    (the probe never advances the cache — both forwards discard their
-    cache update).
-    """
+    Built by the serve workload when ``quality_every > 0``; `sample` is
+    called with the tick's step inputs *before* the fused step runs
+    (the probe never advances the state — both forwards discard their
+    state update).
 
-    def __init__(self, model, *, tp: int = 1, every: int = 32,
+    The error metric is pluggable (ISSUE 7): by default the tap compares
+    live-vs-exact *logits* of an LM ``model`` (normalized RMS deviation,
+    the historical behavior, recorded as ``repro_quality_logit_rms``); a
+    workload may instead pass its own jittable ``probe(params, state,
+    feed, active, degree) -> scalar`` together with a ``metric_name``
+    (histogram family ``repro_quality_{metric_name}``, matching trace-arg
+    key) and ``buckets`` fitting the metric's range — e.g. the stream
+    workload probes per-frame PSNR in dB."""
+
+    def __init__(self, model=None, *, tp: int = 1, every: int = 32,
                  registry: Optional[obs_metrics.Registry] = None,
-                 tracer: Optional[obs_trace.Tracer] = None):
+                 tracer: Optional[obs_trace.Tracer] = None,
+                 probe=None, metric_name: str = "logit_rms",
+                 buckets=QUALITY_BUCKETS):
         if every <= 0:
             raise ValueError(f"quality tap period must be > 0 (got {every})")
+        if model is None and probe is None:
+            raise ValueError("QualityTap needs a model or a custom probe")
         self.every = int(every)
         self.samples = 0
+        self.metric_name = metric_name
         self.registry = registry if registry is not None else obs_metrics.Registry()
         self.tracer = tracer if tracer is not None else obs_trace.get_tracer()
         self.hist = self.registry.histogram(
-            "repro_quality_logit_rms",
-            "normalized RMS logit deviation vs the exact rung, by rung",
-            labels=("rung",), buckets=QUALITY_BUCKETS)
+            f"repro_quality_{metric_name}",
+            f"live-vs-exact {metric_name} by rung",
+            labels=("rung",), buckets=tuple(buckets))
         self._probes = self.registry.counter(
             "repro_quality_probes_total", "quality-tap probe forwards run")
 
-        def probe(p, cache, tokens, active, deg):
-            # live-degree and exact-rung logits on identical inputs; the
-            # cache updates are discarded — the tap is a pure observer
-            approx, _ = model.decode_step(p, cache, tokens, tp=tp,
-                                          degree=deg, active=active)
-            exact_deg = jnp.full_like(deg, 8)
-            exact, _ = model.decode_step(p, cache, tokens, tp=tp,
-                                         degree=exact_deg, active=active)
-            w = active.astype(jnp.float32)[:, None, None]
-            n = jnp.maximum(jnp.sum(w) * approx.shape[-2] * approx.shape[-1],
-                            1.0)
-            dev = jnp.sqrt(jnp.sum(((approx - exact) ** 2) * w) / n)
-            ref = jnp.sqrt(jnp.sum((exact ** 2) * w) / n)
-            return dev / jnp.maximum(ref, 1e-9)
+        if probe is None:
+            def probe(p, cache, tokens, active, deg):
+                # live-degree and exact-rung logits on identical inputs; the
+                # cache updates are discarded — the tap is a pure observer
+                approx, _ = model.decode_step(p, cache, tokens, tp=tp,
+                                              degree=deg, active=active)
+                exact_deg = jnp.full_like(deg, 8)
+                exact, _ = model.decode_step(p, cache, tokens, tp=tp,
+                                             degree=exact_deg, active=active)
+                w = active.astype(jnp.float32)[:, None, None]
+                n = jnp.maximum(
+                    jnp.sum(w) * approx.shape[-2] * approx.shape[-1], 1.0)
+                dev = jnp.sqrt(jnp.sum(((approx - exact) ** 2) * w) / n)
+                ref = jnp.sqrt(jnp.sum((exact ** 2) * w) / n)
+                return dev / jnp.maximum(ref, 1e-9)
 
         self._probe = jax.jit(probe)
 
@@ -93,8 +107,8 @@ class QualityTap:
         return tick % self.every == 0
 
     def sample(self, tick: int, params, cache, tokens, active, degree) -> float:
-        """Measure the live-vs-exact logit error for this tick's inputs and
-        record it under the active rung; returns the error."""
+        """Measure the live-vs-exact quality metric for this tick's inputs
+        and record it under the active rung; returns the value."""
         err = float(self._probe(params, cache, jnp.asarray(tokens),
                                 jnp.asarray(active), degree))
         rung = rung_label(degree)
@@ -102,5 +116,5 @@ class QualityTap:
         self._probes.inc()
         self.samples += 1
         self.tracer.event("quality_probe", track="engine", tick=tick,
-                          rung=rung, logit_rms=err)
+                          rung=rung, **{self.metric_name: err})
         return err

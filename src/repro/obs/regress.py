@@ -1,9 +1,10 @@
 """Bench-record regression gate (``tools/check_bench.py`` backend).
 
-The four committed perf records — ``benchmarks/BENCH_kernels.json``,
-``BENCH_serving.json``, ``BENCH_gemm.json``, ``BENCH_tune.json`` — are the
-repo's performance memory: every claim in CHANGES.md (skip-grid step
-counts, fused-GEMM speedups, planned-rung dominance) is anchored in them.
+The committed perf records — ``benchmarks/BENCH_kernels.json``,
+``BENCH_serving.json``, ``BENCH_gemm.json``, ``BENCH_tune.json``,
+``BENCH_stream.json`` — are the repo's performance memory: every claim in
+CHANGES.md (skip-grid step counts, fused-GEMM speedups, planned-rung
+dominance, stream-rung PSNR) is anchored in them.
 Until now nothing machine-checked them, so a record could silently rot
 (a bench renamed, a speedup regressed, a hand-edited number) and CI would
 stay green.  This module makes each record's claims executable:
@@ -38,12 +39,13 @@ __all__ = ["BENCH_RECORDS", "SCHEMA_VERSION", "load_record", "check_meta",
            "check_invariants", "check_record", "check_committed",
            "compare_fresh", "run_fresh_rows", "bench_dir"]
 
-#: record files under benchmarks/ — the four perf-tracked benches
+#: record files under benchmarks/ — the perf-tracked benches
 BENCH_RECORDS = {
     "bench_kernels": "BENCH_kernels.json",
     "bench_serving": "BENCH_serving.json",
     "bench_gemm": "BENCH_gemm.json",
     "bench_tune": "BENCH_tune.json",
+    "bench_stream": "BENCH_stream.json",
 }
 
 #: current record schema (benchmarks/run.py stamps this)
@@ -266,11 +268,70 @@ def _check_tune(rec: dict, tiny: bool) -> list:
     return errs
 
 
+def _check_stream(rec: dict, tiny: bool) -> list:
+    """Stream-serving invariants (ISSUE 7) — all scale-invariant:
+    positive steady-state throughput, a Pareto-ordered PSNR-calibrated
+    ladder whose per-rung PSNR is monotone non-increasing down the rungs,
+    mixed-plan dominance over at least one uniform rung, and the QoS rung
+    walk staying at ONE compiled step executable."""
+    errs = []
+    rows = rows_by_name(rec)
+    slot_rows = [n for n in rows
+                 if re.match(r"stream\.slots\d+_frames_per_s$", n)]
+    if not slot_rows:
+        errs.append("no stream.slotsN_frames_per_s rows found")
+    for name in slot_rows:
+        fps = _derived_float(rows, name)
+        if fps is None or fps <= 0:
+            errs.append(f"{name} throughput {fps} <= 0")
+    # ladder: most accurate first => cost non-increasing, error (neg-PSNR)
+    # non-decreasing — and the per-rung PSNR rows must tell the same story
+    ladder = []
+    for name, (_, derived) in rows.items():
+        m = re.match(r"stream\.rung_(\d+)$", name)
+        if m and (ec := _ERRCOST.search(derived)):
+            ladder.append((int(m.group(1)), float(ec.group(1)),
+                           float(ec.group(2))))
+    if not ladder:
+        errs.append("no stream.rung_N rows found")
+    ladder.sort()
+    for (r0, e0, c0), (r1, e1, c1) in zip(ladder, ladder[1:]):
+        if c1 > c0 + 1e-9 or e1 < e0 - 1e-9:
+            errs.append(f"stream ladder rung_{r1} (err={e1}, cost={c1}) "
+                        f"breaks Pareto order vs rung_{r0} "
+                        f"(err={e0}, cost={c0})")
+    psnr = sorted((int(m.group(1)), _derived_float(rows, name))
+                  for name in rows
+                  if (m := re.match(r"stream\.rung_(\d+)_psnr_db$", name)))
+    if len(psnr) != len(ladder):
+        errs.append(f"{len(psnr)} rung PSNR rows for {len(ladder)} rungs")
+    for (r0, p0), (r1, p1) in zip(psnr, psnr[1:]):
+        if p0 is None or p1 is None:
+            errs.append(f"stream.rung_{r1}_psnr_db not a number")
+        elif p1 > p0 + 1e-6:
+            errs.append(f"rung PSNR not monotone down the ladder: "
+                        f"rung_{r1}={p1} dB > rung_{r0}={p0} dB")
+    dom = rows.get("stream.dominated_uniform_rungs")
+    if dom is None:
+        errs.append("missing row stream.dominated_uniform_rungs")
+    elif dom[1] == "none":
+        errs.append("stream plan dominates no uniform rung — the PSNR "
+                    "per-site calibration claim regressed")
+    compiles = _derived_float(rows, "stream.qos_walk_compiles")
+    if compiles is None:
+        errs.append("missing row stream.qos_walk_compiles")
+    elif compiles != 1:
+        errs.append(f"QoS rung walk compiled {compiles} step executables "
+                    f"(expected exactly 1 — degree operand shape-stability)")
+    return errs
+
+
 _CHECKS: dict = {
     "bench_kernels": _check_kernels,
     "bench_serving": _check_serving,
     "bench_gemm": _check_gemm,
     "bench_tune": _check_tune,
+    "bench_stream": _check_stream,
 }
 
 

@@ -1,30 +1,34 @@
-"""Continuous-batching serve engine: fused prefill + slot lifecycle.
+"""Workload-generic continuous-batching serve core: slot lifecycle + QoS.
 
-Requests enter a FIFO queue; free slots are (re)filled on admission by ONE
-fused ``model.prefill`` call that rewinds the slot's cache region (length,
-KV, recurrent/conv state) and writes the whole prompt prefix into it; every
-engine tick runs one fused, jit-compiled serve step for all slots.  Free
-slots are masked out of the step — their cache never advances — so a freed
-slot can be handed to the next request with no stale-KV pollution: admission
-into a reused slot is bit-identical to a solo run on a fresh engine.
+Requests enter a FIFO queue; free slots are (re)filled on admission by the
+workload's fused ingest call, which rewinds the slot's state region and
+writes the payload prefix into it; every engine tick runs ONE fused,
+jit-compiled step for all slots.  Free slots are masked out of the step —
+their state never advances — so a freed slot can be handed to the next
+request with no stale-state pollution: admission into a reused slot is
+bit-identical to a solo run on a fresh engine.
 
-The serve step is a single compiled executable across the whole engine
-lifetime: sampling mode (greedy / top-k) is baked at construction, while the
-PRNG key, temperature, and the DyFXU approximation ``degree`` (Ch. 5 §5.2.3)
-are traced operands — a global scalar or, under an
-:class:`~repro.tune.plan.ApproxPlan`, a per-layer degree *vector*
+The engine is generic over a :class:`~repro.serve.servable.ServableModel`
+(DESIGN.md §12): everything workload-specific — what a unit of work is, how
+a payload is ingested, what the fused step computes, when a request
+finishes, even the vocabulary the trace events speak — lives behind that
+protocol.  ``serve/lm.py`` adapts the language models (the historical
+``ServeEngine`` surface, re-exported below unchanged); ``serve/stream.py``
+serves the Ch. 7 approximate DSP/vision pipeline frame-by-frame through the
+same slot lifecycle.
+
+The fused step is a single compiled executable across the whole engine
+lifetime: workload sampling/config is baked at construction, while the PRNG
+key and the DyFXU approximation ``degree`` (Ch. 5 §5.2.3) are traced
+operands — a global scalar or, under an
+:class:`~repro.tune.plan.ApproxPlan`, a per-site degree *vector*
 (models/degrees.py).  An optional :class:`~repro.core.dynamic.QoSController`
-moves the degree with serving load — the dissertation's runtime-configuration
-contract at system level: heavy load -> cheaper arithmetic, idle -> exact.
-With a plan the controller steps along the plan's calibrated degree ladder
-(whole mixed per-layer configurations, Pareto points from ``repro.tune``)
-instead of rescaling one global knob; either way the compiled executable
-never changes.
-
-  eos_id semantics: ``-1`` (the default) disables EOS stopping — no vocab id
-  compares equal.  When set, sampling ``eos_id`` finishes the request; the
-  EOS token itself is neither emitted into ``out_tokens`` nor charged
-  against ``max_new_tokens``.
+moves the degree with serving load — the dissertation's
+runtime-configuration contract at system level: heavy load -> cheaper
+arithmetic, idle -> exact.  With a plan the controller steps along the
+plan's calibrated ladder (whole mixed per-site configurations, Pareto
+points from ``repro.tune``) instead of rescaling one global knob; either
+way the compiled executable never changes.
 """
 
 from __future__ import annotations
@@ -41,31 +45,36 @@ import numpy as np
 
 from repro.core.dynamic import QoSController, degree_operand
 from repro.kernels import dispatch as kdispatch
-from repro.models.cache_ops import cache_mask_update
-from repro.models.registry import Model
 from repro.obs import trace as obs_trace
 from repro.serve.metrics import EngineStats
-from repro.serve.sampling import sample_tokens
+from repro.serve.servable import ServableModel
 
 _DEFAULT_EBITS = 8
 
 
 @dataclass
 class Request:
+    """One unit of serving work, workload-agnostic.  ``payload`` is what the
+    workload ingests (LM prompt ids, stream frames), ``out`` what its steps
+    emit; the LM adapter subclasses this with the historical field names as
+    read-only views (``serve/lm.py``)."""
+
     rid: int
-    prompt: np.ndarray            # (P,) int32
-    max_new_tokens: int = 32
-    out_tokens: list = field(default_factory=list)
+    payload: object
+    budget: int = 32              # emission budget (units)
+    payload_units: int = 0        # payload size in workload units
+    out: list = field(default_factory=list)
     done: bool = False
-    prefill_tokens: int = 0       # prompt tokens ingested by the fused call
+    admitted_units: int = 0       # units ingested by the fused admit call
+    cursor: int = 0               # workload read head into the payload
     t_enqueue: float = 0.0
     t_admitted: float = 0.0
-    t_first_token: float = 0.0
+    t_first_emit: float = 0.0
     t_done: float = 0.0
-    # degree tuple that served the first generated token (None until then,
-    # or engine running without a traced degree): makes mid-run QoS rung
-    # moves visible per request, not just the engine-final degree
-    degree_at_first_token: Optional[tuple] = None
+    # degree tuple that served the first emission (None until then, or
+    # engine running without a traced degree): makes mid-run QoS rung moves
+    # visible per request, not just the engine-final degree
+    degree_at_first_emit: Optional[tuple] = None
 
     # -- latency breakdown (valid once done) --
     @property
@@ -74,85 +83,69 @@ class Request:
 
     @property
     def ttft(self) -> float:
-        return self.t_first_token - self.t_enqueue
+        return self.t_first_emit - self.t_enqueue
 
     @property
     def tpot(self) -> float:
-        return (self.t_done - self.t_first_token) / max(len(self.out_tokens) - 1, 1)
+        return (self.t_done - self.t_first_emit) / max(len(self.out) - 1, 1)
 
     @property
     def e2e(self) -> float:
         return self.t_done - self.t_enqueue
 
 
-class ServeEngine:
-    """Continuous-batching engine over a fixed decode batch of ``slots``.
+class ServeCore:
+    """Continuous-batching engine over a fixed batch of ``slots``, generic
+    over a :class:`~repro.serve.servable.ServableModel` workload.
 
-    Construction compiles the fused serve step once; afterwards ``submit``
-    enqueues requests and ``tick`` / ``run_until_drained`` advance the batch.
-    ``qos`` drives the runtime approximation degree from load; ``plan``
-    replaces the controller's global-ebits ladder with the plan's calibrated
-    per-layer degree ladder (and supplies the initial degree vector), so QoS
-    moves between whole tuned configurations.  ``degree`` pins a static
-    initial degree (scalar or per-site vector) without a controller.
-    ``prepack`` packs AXQ/emul weights into int8 residency at admission
-    (DESIGN.md §9).
+    Construction compiles the workload's fused step once; afterwards
+    ``submit`` enqueues requests and ``tick`` / ``run_until_drained``
+    advance the batch.  ``qos`` drives the runtime approximation degree
+    from load; ``plan`` replaces the controller's global-ebits ladder with
+    the plan's calibrated per-site ladder (and supplies the initial degree
+    vector), so QoS moves between whole tuned configurations.  ``degree``
+    pins a static initial degree (scalar or per-site vector) without a
+    controller.  ``prepack`` applies the workload's quantize-once weight
+    residency at construction (DESIGN.md §9).
 
     Observability (DESIGN.md §11): every lifecycle edge — enqueue,
-    admission/prefill, per-tick decode, first token, completion, QoS rung
+    admission/ingest, per-tick step, first emission, completion, QoS rung
     transitions (with the per-site degree vector attached) — is traced
     through ``tracer`` (the process-global :mod:`repro.obs.trace` tracer
-    by default; free when disabled), and every counter lives in
-    ``stats.registry`` (a fresh :class:`repro.obs.metrics.Registry`, or
-    pass ``registry=`` to co-export with the dispatch counters).
-    ``quality_every=N`` samples the live-vs-exact logit error every N
-    ticks into a per-rung histogram (``obs/quality.py``).
+    by default; free when disabled) under the *workload's* vocabulary, and
+    every counter lives in ``stats.registry`` (a fresh
+    :class:`repro.obs.metrics.Registry`, or pass ``registry=`` to co-export
+    with the dispatch counters).  ``quality_every=N`` samples the
+    live-vs-exact output error every N ticks into a per-rung histogram
+    (``obs/quality.py``) through the workload's quality tap.
     """
 
-    def __init__(self, model: Model, params, *, slots: int = 8,
-                 max_len: int = 512, eos_id: int = -1, tp: int = 1,
-                 greedy: bool = True, temperature: float = 1.0,
-                 top_k: int = 0, seed: int = 0,
+    def __init__(self, workload: ServableModel, params, *, slots: int = 8,
+                 max_len: int = 512, seed: int = 0,
                  qos: Optional[QoSController] = None,
                  degree=None, prepack: bool = True, plan=None,
                  registry=None, tracer=None, quality_every: int = 0):
-        self.model = model
-        # quantize-once weight residency (DESIGN.md §9): AXQ/emul weights are
-        # packed at admission into the engine, so every prefill/decode step
-        # touches int8 weights only — the per-call quantize+transpose and the
-        # live f32 weight copy are gone.  No-op under an EXACT-only policy.
-        self.params = model.prepack(params) if prepack else params
+        self.workload = workload
+        self.params = workload.prepack(params) if prepack else params
         self.slots = slots
         self.max_len = max_len
-        self.eos_id = eos_id
-        self.tp = tp
-        self.greedy = greedy
-        self.temperature = temperature
-        self.top_k = top_k
         self.qos = qos
-        self.cache = model.init_cache(tp=tp, batch=slots, max_len=max_len)
+        self.state = workload.init_state(batch=slots, max_len=max_len)
         self.slot_req: list[Optional[Request]] = [None] * slots
         self.slot_budget = np.zeros(slots, np.int32)
         self.queue: deque[Request] = deque()
         self.done: list[Request] = []
-        self.stats = EngineStats(registry)
+        self.stats = EngineStats(registry, unit=workload.unit,
+                                 admit_name=workload.admit_span,
+                                 step_name=workload.step_span)
         self._tracer = tracer if tracer is not None else obs_trace.get_tracer()
-        self._tokens = np.zeros((slots, 1), np.int32)
+        self._feed = workload.init_feed(slots)
         self._rid = itertools.count()
         self._ticks = 0
         self._key = jax.random.PRNGKey(seed)
-        # prompt-length bound: stateful families ingest unbounded prompts;
-        # window caches ring-wrap only while window <= max_len (decode
-        # saturates otherwise — attention.py); dense attention is bounded
-        # by the cache capacity outright
-        cfg = model.cfg
-        window = cfg.local_window if cfg.family == "hybrid" else cfg.swa_window
-        if cfg.family == "ssm" or (window is not None and window <= max_len):
-            self._max_prompt = None
-        else:
-            self._max_prompt = max_len
         # approximation plan: validate against the arch, and point the QoS
-        # controller's ladder at the plan's calibrated per-layer rungs
+        # controller's ladder at the plan's calibrated per-site rungs
+        cfg = workload.cfg
         self.plan = plan
         if plan is not None:
             plan.validate_for(cfg)
@@ -161,7 +154,7 @@ class ServeEngine:
                 qos.degree = min(qos.degree, len(qos.ladder) - 1)
         # degree is traced only when someone will drive it; None keeps the
         # static policy spec (and a leaner step signature).  With a plan (or
-        # any ladder of per-layer rungs) the traced operand is the degree
+        # any ladder of per-site rungs) the traced operand is the degree
         # vector (models/degrees.py) — its shape is fixed by the arch, so
         # ladder moves never retrace.  The initial degree comes from the
         # controller's current rung so the first QoS update cannot change
@@ -189,93 +182,69 @@ class ServeEngine:
             self._degree_rec = self.stats.record_degree(
                 -1, self._degree, self._site_names)
         # per-rung online quality telemetry (obs/quality.py): compare the
-        # live degree's logits against the exact rung every N ticks
+        # live degree's outputs against the exact rung every N ticks
         self._tap = None
         if quality_every > 0:
             if self._degree is None:
                 raise ValueError(
                     "quality_every needs a traced degree (pass degree=, "
                     "qos=, or plan=)")
-            from repro.obs.quality import QualityTap
-
-            self._tap = QualityTap(model, tp=tp, every=quality_every,
-                                   registry=self.stats.registry,
-                                   tracer=self._tracer)
+            self._tap = workload.quality_tap(every=quality_every,
+                                             registry=self.stats.registry,
+                                             tracer=self._tracer)
         # resolved kernel backend for the per-tick route counters: captured
-        # from dispatch.last_route after the first traced step/prefill
+        # from dispatch.last_route after the first traced step/ingest
         self._route: dict = {}
-        vocab = model.cfg.vocab
-
-        def serve_step(p, cache, tokens, active, key, temp, deg):
-            logits, new_cache = model.decode_step(p, cache, tokens, tp=tp,
-                                                  degree=deg, active=active)
-            # free slots are masked out: length frozen, region unwritten
-            new_cache = cache_mask_update(cache, new_cache, active)
-            nxt = sample_tokens(logits[:, 0, :vocab], key, greedy=greedy,
-                                temperature=temp, top_k=top_k)
-            return nxt, new_cache
-
-        self._step = jax.jit(serve_step)
-        self._prefill = jax.jit(
-            lambda p, c, t, s, deg: model.prefill(p, c, t, s, tp=tp, degree=deg))
-        self._reset = jax.jit(model.reset_slot)
+        self._step = jax.jit(workload.step)
 
     # ------------------------------------------------------------------
 
-    def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> Request:
+    def submit(self, payload, budget: Optional[int] = None) -> Request:
         """Enqueue one request (FIFO).  Returns the live Request object —
-        tokens appear in ``request.out_tokens`` as ticks generate them, and
-        latency fields populate when it finishes.  Raises at submit time for
-        empty prompts or prompts exceeding the cache capacity (rejecting
-        mid-tick would lose the request)."""
-        prompt = np.asarray(prompt, np.int32)
-        if prompt.size == 0:
-            raise ValueError("empty prompt")
-        if self._max_prompt is not None and prompt.size > self._max_prompt:
-            # reject at submit time: raising mid-tick would lose the request
-            raise ValueError(
-                f"prompt length {prompt.size} exceeds cache capacity "
-                f"{self._max_prompt} (max_len)")
-        req = Request(rid=next(self._rid),
-                      prompt=prompt,
-                      max_new_tokens=max_new_tokens,
-                      t_enqueue=time.time())
+        emissions appear in ``request.out`` as ticks produce them, and
+        latency fields populate when it finishes.  The workload validates
+        the payload here (raising at submit time — rejecting mid-tick
+        would lose the request)."""
+        wl = self.workload
+        payload = wl.validate(payload)
+        if budget is None:
+            budget = wl.default_budget(payload)
+        req = (wl.request_cls or Request)(
+            rid=next(self._rid), payload=payload, budget=int(budget),
+            payload_units=wl.payload_units(payload), t_enqueue=time.time())
         self.queue.append(req)
-        self._tracer.event("enqueue", track="engine", rid=req.rid,
-                           prompt_tokens=int(prompt.size),
-                           max_new_tokens=max_new_tokens,
-                           queue_depth=len(self.queue))
+        self._tracer.event(
+            "enqueue", track="engine", rid=req.rid,
+            queue_depth=len(self.queue),
+            **{wl.payload_arg: req.payload_units, wl.budget_arg: int(budget)})
         return req
 
     def _admit(self, slot: int, req: Request):
-        """Reset the slot's cache region and ingest the prompt prefix with
-        one fused prefill call; the final prompt token rides the next fused
-        decode step (it produces the first generated token)."""
+        """Reset the slot's state region and ingest the payload via the
+        workload's fused admit; the first step input lands in the feed."""
         req.t_admitted = time.time()
-        prompt = req.prompt
-        sl = jnp.asarray(slot, jnp.int32)
-        with self._tracer.span("prefill", track="engine", rid=req.rid,
-                               slot=slot, prompt_tokens=int(prompt.size)):
-            if prompt.size > 1:
-                _, self.cache = self._prefill(self.params, self.cache,
-                                              jnp.asarray(prompt[:-1]), sl,
-                                              self._degree)
-                req.prefill_tokens = int(prompt.size) - 1
-                self.stats.c_prefill_tokens.inc(int(prompt.size) - 1)
-                self.stats.c_prefill_calls.inc()
-                self._count_route("prefill")
-            else:
-                self.cache = self._reset(self.cache, sl)
-        self._tokens[slot, 0] = int(prompt[-1])
+        wl = self.workload
+        with self._tracer.span(wl.admit_span, track="engine", rid=req.rid,
+                               slot=slot,
+                               **{wl.payload_arg: req.payload_units}):
+            self.state, ingested = wl.admit(self.params, self.state,
+                                            self._feed, slot, req,
+                                            self._degree)
+        req.admitted_units = int(ingested)
+        if req.admitted_units > 0:
+            self.stats.c_admit_units.inc(req.admitted_units)
+            self.stats.c_admit_calls.inc()
+            if wl.admit_site:
+                self._count_route(wl.admit_site)
         self.slot_req[slot] = req
-        self.slot_budget[slot] = req.max_new_tokens
+        self.slot_budget[slot] = req.budget
         self.stats.c_admitted.inc()
 
     def _update_degree(self, n_active: int):
         """Feed the QoS controller a load-headroom signal: overload drives
         the approximation degree down the ladder (cheaper arithmetic), idle
         capacity drives it back to exact — at fixed compiled executable.
-        Plan ladders step whole per-layer degree vectors; the legacy global
+        Plan ladders step whole per-site degree vectors; the legacy global
         ladder steps one ebits scalar."""
         occupancy = (n_active + len(self.queue)) / self.slots
         headroom = max(0.0, 1.0 - occupancy)
@@ -295,7 +264,7 @@ class ServeEngine:
     def _count_route(self, site: str) -> None:
         """Per-call kernel-route counter: the backend is read from
         ``dispatch.last_route`` (written at trace time of this engine's
-        jitted step/prefill) and cached — so the counters reflect what
+        jitted step/admit) and cached — so the counters reflect what
         actually compiled, and `sum(route counters) == call count`."""
         backend = self._route.get(site)
         if backend is None:
@@ -308,9 +277,10 @@ class ServeEngine:
 
     def tick(self) -> int:
         """One engine iteration: admit queued requests into free slots
-        (fused prefill per admission), update the QoS degree, run ONE fused
-        decode step over all slots, and harvest sampled tokens / finished
-        requests.  Returns the number of active slots (0 = idle)."""
+        (fused ingest per admission), update the QoS degree, run ONE fused
+        step over all slots, and harvest emissions / finished requests.
+        Returns the number of active slots (0 = idle)."""
+        wl = self.workload
         # FIFO admission into free slots
         for s in range(self.slots):
             if self.slot_req[s] is None and self.queue:
@@ -324,52 +294,51 @@ class ServeEngine:
         mask[active] = True
         if self._tap is not None and self._tap.due(self._ticks):
             # probe BEFORE the step: same inputs the fused step is about to
-            # consume, cache untouched (the tap discards its cache updates)
-            self._tap.sample(self._ticks, self.params, self.cache,
-                             self._tokens, mask, self._degree)
+            # consume, state untouched (the tap discards its state updates)
+            self._tap.sample(self._ticks, self.params, self.state,
+                             self._feed, mask, self._degree)
         self._key, sub = jax.random.split(self._key)
-        with self._tracer.span("decode_tick", track="engine",
+        with self._tracer.span(f"{wl.step_span}_tick", track="engine",
                                tick=self._ticks, active=len(active),
                                queued=len(self.queue)):
-            nxt, self.cache = self._step(self.params, self.cache,
-                                         jnp.asarray(self._tokens),
+            nxt, self.state = self._step(self.params, self.state,
+                                         jnp.asarray(self._feed),
                                          jnp.asarray(mask), sub,
-                                         self.temperature, self._degree)
+                                         self._degree)
             nxt = np.asarray(nxt)
         self._ticks += 1
-        self.stats.c_decode_steps.inc()
-        self.stats.c_decode_tokens.inc(len(active))
-        self._count_route("decode")
+        self.stats.c_steps.inc()
+        self.stats.c_step_units.inc(len(active))
+        for site in wl.step_sites:
+            self._count_route(site)
         self._tracer.counter("slots", track="engine", active=len(active),
                              queued=len(self.queue))
         now = time.time()
         for s in active:
             req = self.slot_req[s]
-            tok = int(nxt[s])
-            hit_eos = self.eos_id >= 0 and tok == self.eos_id
-            if not hit_eos:
-                # EOS is never emitted nor charged against the budget; a
-                # request that EOSes before emitting anything keeps
-                # t_first_token == 0 (excluded from TTFT stats)
-                if req.t_first_token == 0.0:
-                    req.t_first_token = now
-                    req.degree_at_first_token = self._degree_rec
-                    self._tracer.event("first_token", track="engine",
+            emitted, finished, info = wl.harvest(req, self._feed, s, nxt[s])
+            if emitted:
+                # a suppressed emission (e.g. an LM stop id) is neither
+                # banked nor charged against the budget; a request that
+                # finishes before emitting anything keeps t_first_emit == 0
+                # (excluded from TTFT stats)
+                if req.t_first_emit == 0.0:
+                    req.t_first_emit = now
+                    req.degree_at_first_emit = self._degree_rec
+                    self._tracer.event(wl.first_event, track="engine",
                                        rid=req.rid, slot=s,
                                        ttft_ms=round(req.ttft * 1e3, 3))
-                req.out_tokens.append(tok)
-                self._tokens[s, 0] = tok
                 self.slot_budget[s] -= 1
-            if hit_eos or self.slot_budget[s] <= 0:
+            if finished or self.slot_budget[s] <= 0:
                 req.done = True
                 req.t_done = now
                 self.done.append(req)
                 self.slot_req[s] = None
                 self.stats.record_completion(req)
                 self._tracer.event("request_done", track="engine",
-                                   rid=req.rid, slot=s, eos=hit_eos,
-                                   tokens=len(req.out_tokens),
-                                   e2e_ms=round(req.e2e * 1e3, 3))
+                                   rid=req.rid, slot=s,
+                                   e2e_ms=round(req.e2e * 1e3, 3),
+                                   **wl.done_args(req, info))
         return len(active)
 
     def run_until_drained(self, max_ticks: int = 10_000) -> list[Request]:
@@ -381,3 +350,9 @@ class ServeEngine:
             self.tick()
             ticks += 1
         return self.done
+
+
+# The historical LM engine surface lives in serve/lm.py on top of ServeCore;
+# re-exported here so every existing import path keeps working.  (Safe: by
+# this line ServeCore/Request exist, which is all serve/lm.py needs.)
+from repro.serve.lm import ServeEngine  # noqa: E402,F401

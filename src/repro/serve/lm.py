@@ -1,0 +1,232 @@
+"""LM workload adapter: token decode on the generic serve core.
+
+Everything token-specific that used to live inside the engine — sampling
+(greedy / top-k, traced temperature), EOS stopping, the prompt-prefix fused
+prefill, KV-cache init/reset, prompt-length bounds, the logit-RMS quality
+tap — is an :class:`LMAdapter` implementing the
+:class:`~repro.serve.servable.ServableModel` protocol.  The historical
+:class:`ServeEngine` construction surface (and every attribute the tests,
+benches and launchers read: ``cache``, ``eos_id``, ``submit(prompt,
+max_new_tokens)``) is a thin facade over
+:class:`~repro.serve.engine.ServeCore` — behavior through the adapter is
+bit-identical to the pre-protocol engine (same jitted step jaxpr, same
+admission arithmetic, same EOS/budget bookkeeping).
+
+  eos_id semantics: ``-1`` (the default) disables EOS stopping — no vocab
+  id compares equal.  When set, sampling ``eos_id`` finishes the request;
+  the EOS token itself is neither emitted into ``out_tokens`` nor charged
+  against ``max_new_tokens``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.cache_ops import cache_mask_update
+from repro.models.registry import Model
+from repro.serve import engine as _engine
+from repro.serve.sampling import sample_tokens
+from repro.serve.servable import ServableModel
+
+
+class Request(_engine.Request):
+    """Generic request with the historical LM field names as read-only
+    views (``prompt``/``out_tokens``/``t_first_token``/...) — existing
+    callers and the serve tests read these unchanged."""
+
+    @property
+    def prompt(self) -> np.ndarray:
+        return self.payload
+
+    @property
+    def max_new_tokens(self) -> int:
+        return self.budget
+
+    @property
+    def out_tokens(self) -> list:
+        return self.out
+
+    @property
+    def prefill_tokens(self) -> int:
+        return self.admitted_units
+
+    @property
+    def t_first_token(self) -> float:
+        return self.t_first_emit
+
+    @property
+    def degree_at_first_token(self) -> Optional[tuple]:
+        return self.degree_at_first_emit
+
+
+class LMAdapter(ServableModel):
+    """ServableModel over a :class:`~repro.models.registry.Model`: token
+    units, fused-prefill admission, sample-and-feed-back decode steps."""
+
+    unit = "tokens"
+    admit_span = "prefill"
+    step_span = "decode"
+    payload_arg = "prompt_tokens"
+    budget_arg = "max_new_tokens"
+    first_event = "first_token"
+    admit_site = "prefill"
+    step_sites = ("decode",)
+    request_cls = Request
+
+    def __init__(self, model: Model, *, tp: int = 1, eos_id: int = -1,
+                 greedy: bool = True, temperature: float = 1.0,
+                 top_k: int = 0, max_len: int = 512):
+        self.model = model
+        self.cfg = model.cfg
+        self.tp = tp
+        self.eos_id = eos_id
+        cfg = model.cfg
+        # prompt-length bound: stateful families ingest unbounded prompts;
+        # window caches ring-wrap only while window <= max_len (decode
+        # saturates otherwise — attention.py); dense attention is bounded
+        # by the cache capacity outright
+        window = cfg.local_window if cfg.family == "hybrid" else cfg.swa_window
+        if cfg.family == "ssm" or (window is not None and window <= max_len):
+            self._max_prompt = None
+        else:
+            self._max_prompt = max_len
+        vocab = cfg.vocab
+
+        def serve_step(p, cache, tokens, active, key, deg):
+            logits, new_cache = model.decode_step(p, cache, tokens, tp=tp,
+                                                  degree=deg, active=active)
+            # free slots are masked out: length frozen, region unwritten
+            new_cache = cache_mask_update(cache, new_cache, active)
+            nxt = sample_tokens(logits[:, 0, :vocab], key, greedy=greedy,
+                                temperature=temperature, top_k=top_k)
+            return nxt, new_cache
+
+        self._serve_step = serve_step
+        self._prefill = jax.jit(
+            lambda p, c, t, s, deg: model.prefill(p, c, t, s, tp=tp,
+                                                  degree=deg))
+        self._reset = jax.jit(model.reset_slot)
+
+    # ---- weights / slot state ----------------------------------------
+
+    def prepack(self, params):
+        return self.model.prepack(params)
+
+    def init_state(self, *, batch: int, max_len: int):
+        return self.model.init_cache(tp=self.tp, batch=batch,
+                                     max_len=max_len)
+
+    def init_feed(self, slots: int):
+        # per-slot next-token feed for the fused decode step
+        return np.zeros((slots, 1), np.int32)
+
+    def reset_slot(self, state, slot):
+        return self.model.reset_slot(state, slot)
+
+    # ---- request validation ------------------------------------------
+
+    def validate(self, prompt):
+        prompt = np.asarray(prompt, np.int32)
+        if prompt.size == 0:
+            raise ValueError("empty prompt")
+        if self._max_prompt is not None and prompt.size > self._max_prompt:
+            raise ValueError(
+                f"prompt length {prompt.size} exceeds cache capacity "
+                f"{self._max_prompt} (max_len)")
+        return prompt
+
+    def payload_units(self, prompt) -> int:
+        return int(prompt.size)
+
+    def default_budget(self, prompt) -> int:
+        return 32
+
+    # ---- compute edges ------------------------------------------------
+
+    def admit(self, params, cache, feed, slot, req, degree):
+        """Ingest the prompt prefix with one fused prefill call; the final
+        prompt token rides the next fused decode step (it produces the
+        first generated token)."""
+        prompt = req.payload
+        sl = jnp.asarray(slot, jnp.int32)
+        if prompt.size > 1:
+            _, cache = self._prefill(params, cache, jnp.asarray(prompt[:-1]),
+                                     sl, degree)
+            ingested = int(prompt.size) - 1
+        else:
+            cache = self._reset(cache, sl)
+            ingested = 0
+        feed[slot, 0] = int(prompt[-1])
+        return cache, ingested
+
+    def step(self, params, cache, feed, active, key, degree):
+        return self._serve_step(params, cache, feed, active, key, degree)
+
+    def harvest(self, req, feed, slot, emission):
+        tok = int(emission)
+        if self.eos_id >= 0 and tok == self.eos_id:
+            return False, True, {"eos": True}
+        req.out.append(tok)
+        feed[slot, 0] = tok
+        return True, False, {"eos": False}
+
+    def done_args(self, req, info) -> dict:
+        return {"eos": bool(info.get("eos", False)),
+                "tokens": len(req.out)}
+
+    # ---- quality ------------------------------------------------------
+
+    def quality_tap(self, *, every, registry, tracer):
+        from repro.obs.quality import QualityTap
+
+        return QualityTap(self.model, tp=self.tp, every=every,
+                          registry=registry, tracer=tracer)
+
+
+class ServeEngine(_engine.ServeCore):
+    """The historical LM serving engine: ``ServeCore`` specialized with an
+    :class:`LMAdapter` — constructor signature, attribute surface
+    (``cache``, ``_tokens``, sampling knobs) and behavior identical to the
+    pre-protocol engine."""
+
+    def __init__(self, model: Model, params, *, slots: int = 8,
+                 max_len: int = 512, eos_id: int = -1, tp: int = 1,
+                 greedy: bool = True, temperature: float = 1.0,
+                 top_k: int = 0, seed: int = 0, qos=None, degree=None,
+                 prepack: bool = True, plan=None, registry=None,
+                 tracer=None, quality_every: int = 0):
+        workload = LMAdapter(model, tp=tp, eos_id=eos_id, greedy=greedy,
+                             temperature=temperature, top_k=top_k,
+                             max_len=max_len)
+        super().__init__(workload, params, slots=slots, max_len=max_len,
+                         seed=seed, qos=qos, degree=degree, prepack=prepack,
+                         plan=plan, registry=registry, tracer=tracer,
+                         quality_every=quality_every)
+        self.model = model
+        self.eos_id = eos_id
+        self.tp = tp
+        self.greedy = greedy
+        self.temperature = temperature
+        self.top_k = top_k
+
+    # historical attribute views over the generic core state
+    @property
+    def cache(self):
+        return self.state
+
+    @cache.setter
+    def cache(self, value):
+        self.state = value
+
+    @property
+    def _tokens(self):
+        return self._feed
+
+    def submit(self, prompt, max_new_tokens: int = 32) -> Request:
+        """Enqueue one request (FIFO).  Returns the live Request — tokens
+        appear in ``request.out_tokens`` as ticks generate them."""
+        return super().submit(prompt, max_new_tokens)

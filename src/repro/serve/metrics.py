@@ -43,20 +43,34 @@ class EngineStats:
     attributes are read-only properties over the registry.
     """
 
-    def __init__(self, registry: obs_metrics.Registry | None = None):
+    def __init__(self, registry: obs_metrics.Registry | None = None, *,
+                 unit: str = "tokens", admit_name: str = "prefill",
+                 step_name: str = "decode"):
         self.registry = (registry if registry is not None
                          else obs_metrics.Registry())
+        # workload vocabulary (servable.py): the LM defaults reproduce the
+        # historical family names (repro_prefill_tokens_total, ...) exactly;
+        # a stream engine exports repro_admit_frames_total etc.
+        self.unit = unit
         r = self.registry
-        self.c_prefill_tokens = r.counter(
-            "repro_prefill_tokens_total",
-            "prompt tokens ingested via fused prefill")
-        self.c_prefill_calls = r.counter(
-            "repro_prefill_calls_total", "fused prefill invocations")
-        self.c_decode_tokens = r.counter(
-            "repro_decode_tokens_total",
-            "active slot-steps executed by the fused decode step")
-        self.c_decode_steps = r.counter(
-            "repro_decode_steps_total", "engine ticks that ran the fused step")
+        self.c_admit_units = r.counter(
+            f"repro_{admit_name}_{unit}_total",
+            f"payload {unit} ingested via the fused {admit_name} call")
+        self.c_admit_calls = r.counter(
+            f"repro_{admit_name}_calls_total",
+            f"fused {admit_name} invocations")
+        self.c_step_units = r.counter(
+            f"repro_{step_name}_{unit}_total",
+            "active slot-steps executed by the fused step")
+        self.c_steps = r.counter(
+            f"repro_{step_name}_steps_total",
+            "engine ticks that ran the fused step")
+        # legacy LM-named aliases (same counter objects; tests/benches read
+        # these regardless of workload)
+        self.c_prefill_tokens = self.c_admit_units
+        self.c_prefill_calls = self.c_admit_calls
+        self.c_decode_tokens = self.c_step_units
+        self.c_decode_steps = self.c_steps
         self.c_admitted = r.counter(
             "repro_requests_admitted_total", "requests admitted into a slot")
         self.c_completed = r.counter(
@@ -125,14 +139,37 @@ class EngineStats:
         return rec
 
     def record_completion(self, req) -> None:
-        """Observe one finished request into the latency histograms."""
+        """Observe one finished request into the latency histograms.
+        Reads the LM-named request fields with a fallback to the generic
+        ServeCore names, so both workloads (and legacy request shims)
+        observe identically."""
         self.c_completed.inc()
         self.h_queue.observe(req.queue_time)
         self.h_e2e.observe(req.e2e)
-        if req.t_first_token > 0:
+        if _rget(req, "t_first_token", "t_first_emit") > 0:
             self.h_ttft.observe(req.ttft)
-        if len(req.out_tokens) > 1:
+        if len(_rget(req, "out_tokens", "out")) > 1:
             self.h_tpot.observe(req.tpot)
+
+
+def _rget(req, *names, default=None):
+    """Read the first present attribute: LM-era name first (the serve tests
+    pin request shims carrying only those), generic ServeCore name second."""
+    for name in names:
+        val = getattr(req, name, None)
+        if val is not None:
+            return val
+    return default
+
+
+def _units(req) -> int:
+    """Payload size in workload units: the generic Request carries it
+    (``payload_units``); legacy request shims fall back to the prompt."""
+    u = _rget(req, "payload_units")
+    if u is not None:
+        return int(u)
+    p = _rget(req, "prompt", "payload")
+    return int(p.size) if p is not None else 0
 
 
 def _pct(xs, q: float) -> float:
@@ -151,16 +188,21 @@ def _pct(xs, q: float) -> float:
 
 def summarize(done, stats: EngineStats | None = None,
               wall_s: float | None = None) -> dict:
-    """Aggregate finished requests into a flat metrics dict (ms units)."""
-    ttft = [r.ttft for r in done if r.t_first_token > 0]
-    tpot = [r.tpot for r in done if len(r.out_tokens) > 1]
+    """Aggregate finished requests into a flat metrics dict (ms units).
+    Key names keep the LM-era vocabulary ("generated_tokens", ...) for
+    stability; request fields are read LM-name-first with generic-name
+    fallback (``_rget``), so stream-workload requests summarize too."""
+    outs = [_rget(r, "out_tokens", "out") for r in done]
+    ttft = [r.ttft for r in done
+            if _rget(r, "t_first_token", "t_first_emit") > 0]
+    tpot = [r.tpot for r, o in zip(done, outs) if len(o) > 1]
     queue = [r.queue_time for r in done]
     e2e = [r.e2e for r in done]
-    gen = sum(len(r.out_tokens) for r in done)
+    gen = sum(len(o) for o in outs)
     out = {
         "requests": len(done),
         "generated_tokens": gen,
-        "prompt_tokens": sum(int(r.prompt.size) for r in done),
+        "prompt_tokens": sum(_units(r) for r in done),
         "ttft_p50_ms": round(_pct(ttft, 0.50) * 1e3, 2),
         "ttft_p95_ms": round(_pct(ttft, 0.95) * 1e3, 2),
         "ttft_p99_ms": round(_pct(ttft, 0.99) * 1e3, 2),
@@ -175,7 +217,7 @@ def summarize(done, stats: EngineStats | None = None,
     # is visible here even when every request finishes on the final rung
     first_deg: dict = {}
     for r in done:
-        d = getattr(r, "degree_at_first_token", None)
+        d = _rget(r, "degree_at_first_token", "degree_at_first_emit")
         if d is not None:
             key = ".".join(str(x) for x in d)
             first_deg[key] = first_deg.get(key, 0) + 1

@@ -61,7 +61,12 @@ def energy_per_mac(ebits: int, n: int = 8) -> float:
 def site_macs(cfg) -> list:
     """Approximate per-site MAC counts (one forward token) for the matmuls
     the approximation dispatch touches — the weights of the cost sum.
-    Order matches ``plan.site_names``: layers in stacking order, head last."""
+    Order matches ``plan.site_names``: layers in stacking order, head last.
+
+    Configs may carry their own counts (non-LM workloads — e.g. the stream
+    pipeline's ``StreamConfig.site_macs``): that override wins outright."""
+    if hasattr(cfg, "site_macs"):
+        return [float(m) for m in cfg.site_macs()]
     d = cfg.d_model
     pd = cfg.padded(1)
 
@@ -121,15 +126,31 @@ class _Prober:
     reference plus an AXQ forward taking the degree vector as a traced
     operand (one compile for the whole profile/search).  Errors are memoized
     per degree vector, so the sensitivity profile and the search never pay
-    twice for the same assignment."""
+    twice for the same assignment.
 
-    def __init__(self, model, params, batch):
+    ``metric`` makes the calibration error pluggable (ISSUE 7: plans must
+    calibrate on *application-level* error — PSNR/SSIM for signal/vision
+    streams, logit error for LMs): a callable ``metric(ref, out) -> float``
+    over float64 numpy arrays, LOWER = better (Pareto front_mask minimizes
+    both axes — wrap quality-style metrics as their negation, e.g.
+    ``lambda ref, out: -psnr_db(ref, out)``).  None keeps the historical
+    normalized-RMS deviation bit-for-bit.
+
+    Models may supply their exact-arithmetic twin via an ``exact_model()``
+    hook (servable workloads); LM Models fall back to the exact-policy
+    rebuild."""
+
+    def __init__(self, model, params, batch, metric=None):
         self.cfg = model.cfg
         self.batch = {k: jnp.asarray(v) for k, v in batch.items()}
         self.params = params
-        from repro.models.registry import Model
+        self.metric = metric
+        if hasattr(model, "exact_model"):
+            exact = model.exact_model()
+        else:
+            from repro.models.registry import Model
 
-        exact = Model(model.cfg, ApproxPolicy())
+            exact = Model(model.cfg, ApproxPolicy())
         self._fwd_exact = jax.jit(
             lambda p, b: exact.forward(p, b, remat="none")[0])
         self._fwd = jax.jit(
@@ -140,27 +161,33 @@ class _Prober:
         self._memo: dict = {}
 
     def error(self, degrees: Sequence[int]) -> float:
-        """Normalized RMS logit deviation vs the exact-arithmetic reference
-        (the NMED analogue at network scale)."""
+        """Calibration error vs the exact-arithmetic reference: the plugged
+        ``metric``, or normalized RMS output deviation (the NMED analogue at
+        network scale) by default."""
         key = tuple(int(e) for e in degrees)
         if key in self._memo:
             return self._memo[key]
         deg = jnp.asarray(np.asarray(degrees, np.int32))
         out = np.asarray(self._fwd(self.params, self.batch, deg), np.float64)
-        err = float(np.sqrt(np.mean((out - self.ref) ** 2)) / self._ref_rms)
+        if self.metric is not None:
+            err = float(self.metric(self.ref, out))
+        else:
+            err = float(np.sqrt(np.mean((out - self.ref) ** 2))
+                        / self._ref_rms)
         self._memo[key] = err
         return err
 
 
-def measure_error(model, params, batch, degrees) -> float:
+def measure_error(model, params, batch, degrees, metric=None) -> float:
     """One-off measurement (tests / benches); for sweeps build a
     :class:`_Prober` once via :func:`build_plan`."""
-    return _Prober(model, params, batch).error(degrees)
+    return _Prober(model, params, batch, metric=metric).error(degrees)
 
 
 def profile_sensitivity(model, params, batch,
                         grid: Sequence[int] = DEFAULT_GRID,
-                        prober: Optional[_Prober] = None) -> dict:
+                        prober: Optional[_Prober] = None,
+                        metric=None) -> dict:
     """Per-site error-sensitivity profile on a calibration batch.
 
     For each site ``i`` and degree ``e`` in ``grid`` (below 8), measure the
@@ -169,7 +196,7 @@ def profile_sensitivity(model, params, batch,
     carries (re-tuning can detect model drift).  The search itself ranks
     candidates by *measured* errors, not this profile; sharing a prober
     just makes these single-site probes free for it (error memo)."""
-    p = prober or _Prober(model, params, batch)
+    p = prober or _Prober(model, params, batch, metric=metric)
     names = site_names(model.cfg)
     S = len(names)
     out: dict = {}
@@ -194,7 +221,8 @@ def build_plan(model, params, batch, *, grid: Sequence[int] = DEFAULT_GRID,
                max_rungs: int = 8, block: Optional[int] = None,
                exhaustive_budget: int = 160,
                seed_meta: Optional[dict] = None,
-               prober: Optional[_Prober] = None) -> ApproxPlan:
+               prober: Optional[_Prober] = None,
+               metric=None) -> ApproxPlan:
     """Search mixed per-site degree assignments and emit the Pareto ladder.
 
     ``model`` must be built with the plan-execution policy (uniform dynamic
@@ -227,7 +255,7 @@ def build_plan(model, params, batch, *, grid: Sequence[int] = DEFAULT_GRID,
     if grid[0] != 8:
         raise ValueError(f"grid must start at 8 (got {grid})")
     t0 = time.time()
-    prober = prober or _Prober(model, params, batch)
+    prober = prober or _Prober(model, params, batch, metric=metric)
     sens = profile_sensitivity(model, params, batch, grid, prober=prober)
     macs = site_macs(cfg)
 
@@ -286,9 +314,12 @@ def build_plan(model, params, batch, *, grid: Sequence[int] = DEFAULT_GRID,
                   error=float(err), cost=float(cost))
         for r, (vec, err, cost) in enumerate(front)
     ]
+    used = prober.metric
     meta = {
         "calibration": {k: list(np.shape(v)) for k, v in batch.items()},
         "grid": list(grid),
+        "metric": (getattr(used, "metric_name", None)
+                   or getattr(used, "__name__", "custom")) if used else "nrms",
         "strategy": "exhaustive" if exhaustive else "greedy",
         "visited": len(visited),
         "tune_seconds": round(time.time() - t0, 3),

@@ -163,7 +163,11 @@ class ApproxPlan:
 
 def site_names(cfg) -> list:
     """Canonical plan site names: ``layer_i`` in stacking order, then
-    ``head`` (unembedding + frontend projections)."""
+    ``head`` (unembedding + frontend projections).  Non-LM configs may
+    carry their own names (``StreamConfig.site_names`` -> fir/conv2d/gain);
+    the count contract (n_layers + 1) is unchanged."""
+    if hasattr(cfg, "site_names"):
+        return list(cfg.site_names())
     return [f"layer_{i}" for i in range(cfg.n_layers)] + ["head"]
 
 

@@ -17,3 +17,67 @@ def test_pred2_semantics():
     rep = ea.evaluate_sampled(lambda a, b: (a * b * 1.01).astype(np.int64),
                               8, num=4096)
     assert rep.pred2 > 0.95  # 1% error is within 2% threshold
+
+
+# ---- PSNR / SSIM / SNR (stream-workload quality metrics, ISSUE 7) ---------
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container image has no hypothesis wheel
+    from _hypothesis_fallback import given, settings, st
+
+
+def _ref_signal(n=256):
+    t = np.arange(n, dtype=np.float64)
+    return 100.0 * np.sin(0.07 * t) + 20.0 * np.cos(0.31 * t)
+
+
+@given(st.integers(1, 50), st.integers(51, 120))
+@settings(max_examples=16, deadline=None)
+def test_psnr_monotone_in_mse(a, b):
+    """Larger perturbation -> larger MSE -> strictly smaller PSNR."""
+    ref = _ref_signal()
+    noise = np.sign(np.sin(np.arange(ref.size)))      # deterministic +-1
+    xa, xb = ref + a * noise, ref + b * noise
+    assert ea.mse(ref, xa) < ea.mse(ref, xb)
+    assert ea.psnr_db(ref, xa) > ea.psnr_db(ref, xb)
+
+
+def test_psnr_finite_and_capped_on_identical():
+    ref = _ref_signal()
+    v = ea.psnr_db(ref, ref)
+    assert np.isfinite(v) and v == 180.0              # floored MSE ceiling
+
+
+def test_ssim_identical_is_one():
+    ref = _ref_signal()
+    assert ea.ssim(ref, ref) == 1.0
+
+
+def test_metrics_finite_on_constant_signals():
+    const = np.full(128, 7.0)
+    assert np.isfinite(ea.psnr_db(const, const))
+    assert np.isfinite(ea.ssim(const, const))
+    assert ea.ssim(const, const) == 1.0
+    # constant vs different constant: zero variance everywhere, the
+    # stabilizing constants keep SSIM finite (and below 1)
+    other = np.full(128, 9.0)
+    assert np.isfinite(ea.ssim(const, other))
+    assert ea.ssim(const, other) < 1.0
+    assert np.isfinite(ea.psnr_db(const, other))
+
+
+def test_ssim_degrades_with_noise():
+    ref = _ref_signal()
+    noisy = ref + 30.0 * np.sign(np.cos(np.arange(ref.size)))
+    assert ea.ssim(ref, noisy) < ea.ssim(ref, ref)
+
+
+def test_snr_db_matches_shared_formula():
+    """snr_db is the single home of the helper bench_dsp/dsp_pipeline
+    previously duplicated."""
+    ref = _ref_signal()
+    x = ref + 5.0
+    err = ref - x
+    want = 10 * np.log10((ref ** 2).mean() / (err ** 2).mean())
+    assert abs(ea.snr_db(ref, x) - want) < 1e-12

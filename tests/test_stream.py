@@ -1,0 +1,264 @@
+"""Streaming DSP/vision workload on the generic serve core (ISSUE 7):
+dispatch fir/conv2d route bit-identity, streaming continuity, the stream
+engine's slot lifecycle (reuse-after-free bit-identity via the generic
+cache_ops helpers over StreamState), the PSNR-calibrated plan walking its
+QoS ladder at one compile, and the pluggable-metric quality tap."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import dispatch, dsp
+from repro.models.cache_ops import cache_mask_update, cache_reset_slot
+from repro.serve.stream import (StreamAdapter, StreamConfig,
+                                StreamServeEngine, StreamState, make_clip,
+                                psnr_metric)
+
+
+@pytest.fixture(autouse=True)
+def _reset_backend():
+    yield
+    dispatch.set_backend(None)
+
+
+def _adapter():
+    return StreamAdapter(StreamConfig())
+
+
+# ---------------------------------------------------------------------------
+# dispatch routes
+# ---------------------------------------------------------------------------
+
+
+def test_fir_route_bit_identical_and_recorded():
+    rng = np.random.default_rng(3)
+    sig = rng.integers(-2**14, 2**14, 512).astype(np.int32)
+    taps = rng.integers(-2**13, 2**13, 8).astype(np.int32)
+    outs = {}
+    for be in ("pallas", "xla"):
+        dispatch.set_backend(be)
+        outs[be] = dispatch.fir(sig, taps, p=1, r=4)
+        assert dispatch.last_route["fir"] == be
+    np.testing.assert_array_equal(outs["pallas"], outs["xla"])
+
+
+def test_conv2d_route_bit_identical_and_recorded():
+    rng = np.random.default_rng(4)
+    img = rng.integers(-2**11, 2**11, (2, 16, 16)).astype(np.int32)
+    kern = dsp.quantize_weights(
+        np.array([[1.0, 2.0, 1.0], [2.0, 4.0, 2.0], [1.0, 2.0, 1.0]]), 8)
+    outs = {}
+    for be in ("pallas", "xla"):
+        dispatch.set_backend(be)
+        outs[be] = np.asarray(
+            dispatch.conv2d(jnp.asarray(img), jnp.asarray(kern), p=1, r=2,
+                            shift=8, pad="edge"))
+        assert dispatch.last_route["conv2d"] == be
+    np.testing.assert_array_equal(outs["pallas"], outs["xla"])
+
+
+def test_fir_degree_and_raw_knobs_exclusive():
+    sig = np.ones(64, np.int32)
+    taps = np.ones(4, np.int32)
+    with pytest.raises(ValueError):
+        dispatch.fir(sig, taps, degree=6, p=1)
+
+
+def test_streaming_fir_matches_whole_signal():
+    """Frame-by-frame filtering with a carried tail is bit-identical to
+    filtering the concatenated signal in one call."""
+    cfg = StreamConfig()
+    taps = dsp.quantize_weights(np.hanning(cfg.taps + 2)[1:-1], cfg.q)
+    clip = make_clip(4, cfg.frame, q=cfg.q, seed=5)      # (4, frame)
+    whole = clip.reshape(1, -1)
+    tail0 = jnp.zeros((1, cfg.taps - 1), jnp.int32)
+    y_whole, _ = dispatch.fir(jnp.asarray(whole), jnp.asarray(taps),
+                              tail=tail0, p=1, r=4, shift=cfg.q)
+    tail = tail0
+    ys = []
+    for f in clip:
+        y, tail = dispatch.fir(jnp.asarray(f[None]), jnp.asarray(taps),
+                               tail=tail, p=1, r=4, shift=cfg.q)
+        ys.append(np.asarray(y))
+    np.testing.assert_array_equal(np.concatenate(ys, axis=1),
+                                  np.asarray(y_whole))
+
+
+def test_fir_approx_grad_is_exact_correlation():
+    """The float entry's backward is the exact-correlation STE: its grads
+    equal differentiating the exact einsum, and the forward runs the int
+    PR datapath (nonzero deviation at an approximate degree)."""
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.uniform(-0.9, 0.9, (2, 64)), jnp.float32)
+    taps = jnp.asarray(np.hanning(6) / np.hanning(6).sum(), jnp.float32)
+
+    def exact(x, t):
+        ext = jnp.concatenate(
+            [jnp.zeros((x.shape[0], t.shape[0] - 1), x.dtype), x], axis=1)
+        win = jnp.stack([ext[:, i:i + x.shape[1]] for i in range(t.shape[0])])
+        return jnp.einsum("i,ibl->bl", t, win)
+
+    def loss(fn):
+        return lambda x, t: jnp.sum(jnp.sin(fn(x, t)))
+
+    gx, gt = jax.grad(loss(
+        lambda x, t: dispatch.fir_approx(x, t, degree=4)), argnums=(0, 1))(
+            x, taps)
+    ex, et = jax.grad(loss(exact), argnums=(0, 1))(x, taps)
+    # STE: cotangents flow through the exact path; forward quantization
+    # perturbs only the point the loss gradient is evaluated at
+    assert np.allclose(np.asarray(gx), np.asarray(ex), atol=0.05)
+    assert np.allclose(np.asarray(gt), np.asarray(et), atol=0.5)
+    y = dispatch.fir_approx(x, taps, degree=4)
+    assert float(jnp.max(jnp.abs(y - exact(x, taps)))) > 0
+
+
+# ---------------------------------------------------------------------------
+# cache_ops generics over StreamState (satellite: slot reset / masking)
+# ---------------------------------------------------------------------------
+
+
+def _filled_state(B=3, T=8):
+    return StreamState(
+        length=jnp.arange(1, B + 1, dtype=jnp.int32),
+        tail=jnp.arange(B * (T - 1), dtype=jnp.int32).reshape(1, B, T - 1))
+
+
+def test_cache_reset_slot_zeros_only_that_slot():
+    st = _filled_state()
+    out = cache_reset_slot(st, 1)
+    assert int(out.length[1]) == 0
+    np.testing.assert_array_equal(np.asarray(out.tail[0, 1]), 0)
+    for s in (0, 2):                      # neighbors bit-untouched
+        assert int(out.length[s]) == int(st.length[s])
+        np.testing.assert_array_equal(np.asarray(out.tail[0, s]),
+                                      np.asarray(st.tail[0, s]))
+
+
+def test_cache_mask_update_freezes_inactive_slots():
+    st = _filled_state()
+    new = StreamState(length=st.length + 5, tail=st.tail + 100)
+    active = jnp.asarray([True, False, True])
+    out = cache_mask_update(st, new, active)
+    # the length counter is the masked field: inactive slots keep theirs
+    assert int(out.length[1]) == int(st.length[1])
+    assert int(out.length[0]) == int(new.length[0])
+    assert int(out.length[2]) == int(new.length[2])
+
+
+def test_reuse_after_free_bit_identity():
+    """A slot that served an earlier clip produces bit-identical output for
+    a new clip vs a fresh engine — admission's cache_reset_slot rewind over
+    the StreamState NamedTuple leaves no residue (FIR tail zeroed)."""
+    ad = _adapter()
+    params = ad.init_params()
+    clip = make_clip(3, ad.cfg.frame, q=ad.cfg.q, seed=11)
+
+    fresh = StreamServeEngine(ad, params, slots=1)
+    r0 = fresh.submit(clip)
+    fresh.run_until_drained()
+
+    used = StreamServeEngine(ad, params, slots=1)
+    used.submit(make_clip(2, ad.cfg.frame, q=ad.cfg.q, seed=12, kind="noise"))
+    used.run_until_drained()              # dirty the only slot, then reuse it
+    r1 = used.submit(clip)
+    used.run_until_drained()
+
+    assert len(r0.out) == len(r1.out) == 3
+    for a, b in zip(r0.out, r1.out):
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# engine end to end
+# ---------------------------------------------------------------------------
+
+
+def test_stream_engine_end_to_end_matches_manual_steps():
+    ad = _adapter()
+    params = ad.init_params()
+    eng = StreamServeEngine(ad, params, slots=2)
+    clip = make_clip(4, ad.cfg.frame, q=ad.cfg.q, seed=7)
+    req = eng.submit(clip)
+    done = eng.run_until_drained()
+    assert [r.rid for r in done] == [req.rid]
+    assert len(req.out) == 4 and req.done
+
+    # replay the pipeline by hand: same step math, one slot, no engine
+    state = ad.init_state(batch=1)
+    active = jnp.asarray([True])
+    tail = state
+    for i, (frame, got) in enumerate(zip(clip, req.out)):
+        out, tail = ad.step(params, tail, jnp.asarray(frame[None]), active,
+                            None, None)
+        np.testing.assert_array_equal(np.asarray(out)[0], got)
+
+
+def test_stream_validate_rejects_bad_payloads():
+    ad = _adapter()
+    with pytest.raises(ValueError):
+        ad.validate(np.zeros((2, ad.cfg.frame + 1), np.int32))
+    with pytest.raises(ValueError):
+        ad.validate(np.zeros((0, ad.cfg.frame), np.int32))
+    with pytest.raises(ValueError):
+        ad.validate(np.full((1, ad.cfg.frame), 2**15, np.int32))
+
+
+def test_engine_interleaves_more_clips_than_slots():
+    ad = _adapter()
+    eng = StreamServeEngine(ad, slots=2)
+    clips = [make_clip(3, ad.cfg.frame, q=ad.cfg.q, seed=i) for i in range(5)]
+    reqs = [eng.submit(c) for c in clips]
+    done = eng.run_until_drained()
+    assert len(done) == 5
+    solo = StreamServeEngine(ad, slots=1)
+    for r, c in zip(reqs, clips):
+        s = solo.submit(c)
+        solo.run_until_drained()
+        for a, b in zip(r.out, s.out):    # batching never changes the bits
+            np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# PSNR plan + QoS ladder at one compile
+# ---------------------------------------------------------------------------
+
+
+def test_psnr_plan_walks_ladder_at_one_compile():
+    from repro.tune import build_plan
+    from repro.tune.autotune import _Prober
+
+    ad = _adapter()
+    params = ad.init_params()
+    calib = {"frames": np.stack(
+        [make_clip(3, ad.cfg.frame, q=ad.cfg.q, seed=i) for i in range(2)])}
+    prober = _Prober(ad, params, calib, metric=psnr_metric)
+    plan = build_plan(ad, params, calib, grid=(8, 6, 4), prober=prober,
+                      metric=psnr_metric)
+    assert plan.sites == ["fir", "conv2d", "gain"]
+    assert plan.meta["metric"] == "neg_psnr_db"
+    assert len(plan.ladder) >= 2
+    # errors are neg-PSNR: monotone non-decreasing down the ladder
+    errs = [pt.error for pt in plan.ladder]
+    assert errs == sorted(errs)
+
+    eng = StreamServeEngine(ad, params, slots=2, plan=plan)
+    for rung in range(len(plan.ladder)):
+        eng._degree = jnp.asarray(plan.degrees(rung), jnp.int32)
+        eng.submit(make_clip(2, ad.cfg.frame, q=ad.cfg.q, seed=rung))
+        eng.run_until_drained()
+    assert len(eng.done) == len(plan.ladder)
+    assert eng._step._cache_size() == 1   # rung moves never retrace
+
+
+def test_quality_tap_records_psnr_histogram():
+    ad = _adapter()
+    eng = StreamServeEngine(ad, slots=2, degree=[8, 6, 8], quality_every=1)
+    eng.submit(make_clip(3, ad.cfg.frame, q=ad.cfg.q, seed=1))
+    eng.run_until_drained()
+    assert eng._tap is not None and eng._tap.samples > 0
+    fam = eng.stats.registry.get("repro_quality_psnr_db")
+    assert fam is not None
+    (labels, hist), = fam.children.items()
+    assert hist.count == eng._tap.samples
+    assert hist.sum > 0                   # PSNR in dB, not a tiny rel-err
