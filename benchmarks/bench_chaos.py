@@ -1,0 +1,249 @@
+"""Chaos scenarios for the resilient serving stack (repro.resil, ISSUE 8).
+
+The claims under test, all on the stream workload with a deterministic
+:class:`~repro.resil.policy.VirtualClock` (virtual tick cost = BASE_TICK_MS
+x the modeled per-rung cost from ``tune.autotune.vector_cost``, so rung
+moves change serving speed the way they would on the paper's hardware —
+CPU emulation runs identical work per degree, wall clock can't show it):
+
+* **overload burst** — the same 4x-capacity burst under two policies at an
+  equal deadline: shed-only (exact arithmetic, queue cap sheds overflow)
+  vs brownout (QoS forced down the approximation ladder before shedding).
+  Rows carry goodput (in-deadline completions per virtual second) and the
+  terminal-status mix; the gate's headline invariant is
+  ``brownout_goodput >= shed_goodput`` — graceful degradation dominates
+  availability-by-shedding at equal overload.
+* **fault storm** — seeded SEU/NaN/spike/drop storm through guards +
+  quarantine + scrubbing.  Every surviving payload is compared against a
+  clean run: ``chaos.storm_corrupt_payloads`` MUST be 0 (no injected fault
+  ever reaches an emitted payload), and the accounting row proves zero
+  lost / duplicated / short requests.
+* **mixed-deadline traffic** — tight- and loose-deadline classes under the
+  same faulty overload; the loose class must miss no more than the tight.
+* **determinism** — the storm re-run at the same seed must reproduce the
+  injected-fault sequence, recovery trace, and every payload bit-for-bit.
+
+REPRO_BENCH_TINY=1 shrinks bursts/clips for the CI chaos-smoke job.
+Committed record: benchmarks/BENCH_chaos.json (full-shape run).
+"""
+import os
+
+import numpy as np
+
+from repro.core.dynamic import QoSController
+from repro.resil import (FaultPlan, FaultSpec, GuardConfig, ServePolicy,
+                         VirtualClock)
+from repro.serve.stream import StreamAdapter, StreamServeEngine, make_clip
+from repro.tune import vector_cost
+
+_TINY = os.environ.get("REPRO_BENCH_TINY", "0") == "1"
+
+#: virtual cost of one engine tick at the exact rung (ms); deeper rungs
+#: scale by vector_cost (< 1), so brownout genuinely drains faster
+BASE_TICK_MS = 2.0
+_LADDER_EBITS = (8, 7, 6, 5, 4)
+
+
+def _ladder(cfg):
+    return [{"degrees": [e] * (cfg.n_layers + 1)} for e in _LADDER_EBITS]
+
+
+def _tick_cost_s(cfg, eng) -> float:
+    """Virtual seconds one tick costs at the engine's current rung."""
+    if eng.stats.degree_history:
+        degrees = list(eng.stats.degree_history[-1][1])
+    else:
+        degrees = [8] * (cfg.n_layers + 1)
+    return BASE_TICK_MS * vector_cost(cfg, degrees) / 1e3
+
+
+def _drain(eng, clock, cfg, reqs, max_ticks=5000) -> float:
+    """Tick until every request is terminal; returns the virtual wall."""
+    t0 = clock()
+    for _ in range(max_ticks):
+        if all(r.done for r in reqs):
+            break
+        eng.tick()
+        clock.advance(_tick_cost_s(cfg, eng))
+    assert all(r.done for r in reqs), "chaos scenario failed to drain"
+    return clock() - t0
+
+
+def _statuses(reqs) -> dict:
+    out: dict = {}
+    for r in reqs:
+        out[r.status] = out.get(r.status, 0) + 1
+    return out
+
+
+def _mix(st: dict) -> str:
+    return ",".join(f"{k}={v}" for k, v in sorted(st.items()))
+
+
+def _accounting(eng, reqs, expect_frames=None) -> str:
+    """lost / duplicated / short-payload accounting (all must be 0)."""
+    rids = [r.rid for r in eng.done]
+    lost = len(reqs) - len(eng.done)
+    dup = len(rids) - len(set(rids))
+    short = sum(1 for r in reqs
+                if r.status == "ok" and expect_frames is not None
+                and len(r.out) != expect_frames)
+    return f"lost={lost},dup={dup},short={short}"
+
+
+# ---------------------------------------------------------------------------
+# scenarios
+# ---------------------------------------------------------------------------
+
+
+def _overload(brownout: bool, *, n_req, frames, slots, deadline_ms,
+              max_queue):
+    adapter = StreamAdapter()
+    cfg = adapter.cfg
+    clock = VirtualClock()
+    qos = QoSController(ladder=_ladder(cfg), low_water=0.25, high_water=0.75,
+                        cooldown_steps=4) if brownout else None
+    policy = ServePolicy(deadline_ms=deadline_ms, max_queue=max_queue,
+                         brownout=brownout)
+    eng = StreamServeEngine(adapter, slots=slots, qos=qos,
+                            guards=GuardConfig(), policy=policy, clock=clock)
+    clip = make_clip(frames, cfg.frame, q=cfg.q, seed=0)
+    reqs = [eng.submit(clip) for _ in range(n_req)]   # one 4x-capacity burst
+    wall = _drain(eng, clock, cfg, reqs)
+    st = _statuses(reqs)
+    goodput = st.get("ok", 0) / max(wall, 1e-9)
+    return eng, st, goodput
+
+
+def _storm(seed: int, *, n_req, frames, slots):
+    adapter = StreamAdapter()
+    cfg = adapter.cfg
+    clock = VirtualClock()
+    spec = FaultSpec(seu_state=0.08, seu_param=0.05, nan=0.08, spike=0.03,
+                     drop=0.03)
+    eng = StreamServeEngine(adapter, slots=slots,
+                            faults=FaultPlan(spec, seed=seed),
+                            guards=GuardConfig(),
+                            policy=ServePolicy(max_retries=6, backoff_ms=0.5),
+                            clock=clock)
+    clips = [make_clip(frames, cfg.frame, q=cfg.q, seed=i)
+             for i in range(n_req)]
+    reqs = [eng.submit(c) for c in clips]
+    _drain(eng, clock, cfg, reqs)
+    return eng, reqs, clips
+
+
+def _clean_reference(clips, *, slots):
+    """The same clips through a guarded engine with NO faults — the oracle
+    payloads a stormed run must reproduce bit-for-bit."""
+    adapter = StreamAdapter()
+    eng = StreamServeEngine(adapter, slots=slots, guards=GuardConfig(),
+                            clock=VirtualClock())
+    reqs = [eng.submit(c) for c in clips]
+    for _ in range(5000):
+        if all(r.done for r in reqs):
+            break
+        eng.tick()
+    return [tuple(np.asarray(f).tobytes() for f in r.out) for r in reqs]
+
+
+def _payload_key(req):
+    return tuple(np.asarray(f).tobytes() for f in req.out)
+
+
+def rows():
+    out = []
+    n_req, frames, slots = (8, 3, 2) if _TINY else (16, 6, 4)
+
+    # ---- overload burst: brownout vs shed-only at equal load ----------
+    deadline_ms, max_queue = 40.0, slots
+    e_shed, st_shed, gp_shed = _overload(
+        False, n_req=n_req, frames=frames, slots=slots,
+        deadline_ms=deadline_ms, max_queue=max_queue)
+    e_brown, st_brown, gp_brown = _overload(
+        True, n_req=n_req, frames=frames, slots=slots,
+        deadline_ms=deadline_ms, max_queue=max_queue)
+    out.append(("chaos.overload_shed_goodput", 0.0, round(gp_shed, 2)))
+    out.append(("chaos.overload_shed_mix", 0.0, _mix(st_shed)))
+    out.append(("chaos.overload_brownout_goodput", 0.0, round(gp_brown, 2)))
+    out.append(("chaos.overload_brownout_mix", 0.0, _mix(st_brown)))
+    out.append(("chaos.overload_brownout_rungs", 0.0,
+                int(e_brown.stats.c_brownout.value)))
+    gain = gp_brown / max(gp_shed, 1e-9)
+    out.append(("chaos.overload_brownout_gain", 0.0, f"{gain:.2f}x"))
+    assert gp_brown >= gp_shed, (
+        f"brownout goodput {gp_brown:.2f}/s < shed-only {gp_shed:.2f}/s — "
+        "graceful degradation stopped paying for itself")
+    acc = (f"{_accounting(e_shed, list(e_shed.done))};"
+           f"{_accounting(e_brown, list(e_brown.done))}")
+    out.append(("chaos.overload_accounting", 0.0, acc))
+
+    # ---- fault storm through guards/quarantine/scrub ------------------
+    storm_seed = 20
+    e_storm, storm_reqs, clips = _storm(storm_seed, n_req=n_req,
+                                        frames=frames, slots=slots)
+    injected: dict = {}
+    for ev in e_storm.faults.injected:
+        injected[ev.kind] = injected.get(ev.kind, 0) + 1
+    out.append(("chaos.storm_injected", 0.0, _mix(injected)))
+    trips = int(e_storm.stats.c_guard_trips.labels(reason="slot").value)
+    recovery = (f"trips={trips},"
+                f"retries={int(e_storm.stats.c_retries.value)},"
+                f"failed={int(e_storm.stats.c_failed.value)},"
+                f"scrubs={int(e_storm.stats.c_scrubs.value)}")
+    out.append(("chaos.storm_recovery", 0.0, recovery))
+    assert sum(injected.values()) >= 1 and trips >= 1, (
+        f"fault storm was vacuous (injected={injected}, trips={trips}) — "
+        "raise the rates or rethink the seed")
+    ref = _clean_reference(clips, slots=slots)
+    corrupt = sum(1 for r, k in zip(storm_reqs, ref)
+                  if r.status == "ok" and _payload_key(r) != k)
+    out.append(("chaos.storm_corrupt_payloads", 0.0, corrupt))
+    out.append(("chaos.storm_mix", 0.0, _mix(_statuses(storm_reqs))))
+    out.append(("chaos.storm_accounting", 0.0,
+                _accounting(e_storm, storm_reqs, expect_frames=frames)))
+    assert corrupt == 0, (
+        f"{corrupt} stormed payloads diverged from the clean reference — "
+        "an injected fault reached an emitted payload")
+
+    # ---- mixed-deadline traffic under the same faults ------------------
+    # no queue cap: misses here come from deadline enforcement alone, so
+    # the tight class absorbs every miss and the loose class rides it out
+    adapter = StreamAdapter()
+    cfg = adapter.cfg
+    clock = VirtualClock()
+    eng = StreamServeEngine(
+        adapter, slots=slots,
+        faults=FaultPlan(FaultSpec(nan=0.05, drop=0.03), seed=storm_seed),
+        guards=GuardConfig(),
+        policy=ServePolicy(backoff_ms=0.5),
+        clock=clock)
+    clip = make_clip(frames, cfg.frame, q=cfg.q, seed=0)
+    tight, loose = [], []
+    for i in range(n_req):
+        tight.append(eng.submit(clip, deadline_ms=30.0))
+        loose.append(eng.submit(clip, deadline_ms=2000.0))
+    _drain(eng, clock, cfg, tight + loose)
+    miss = {name: sum(1 for r in rs if r.status != "ok") / len(rs)
+            for name, rs in (("tight", tight), ("loose", loose))}
+    out.append(("chaos.mixed_deadline_miss", 0.0,
+                f"tight={miss['tight']:.3f},loose={miss['loose']:.3f}"))
+    out.append(("chaos.mixed_accounting", 0.0,
+                _accounting(eng, tight + loose)))
+    assert miss["loose"] <= miss["tight"], (
+        f"loose-deadline class missed more than tight ({miss}) — deadline "
+        "enforcement ordering regressed")
+
+    # ---- determinism: same seed => same faults, same recovery, same bits
+    eng2, reqs2, _ = _storm(storm_seed, n_req=n_req, frames=frames,
+                            slots=slots)
+    identical = (
+        e_storm.faults is not eng2.faults
+        and list(eng2.faults.injected) == list(e_storm.faults.injected)
+        and eng2.resil_log == e_storm.resil_log
+        and [(r.status, _payload_key(r)) for r in reqs2]
+        == [(r.status, _payload_key(r)) for r in storm_reqs])
+    out.append(("chaos.determinism", 0.0,
+                "identical" if identical else "DIVERGED"))
+    assert identical, "same fault seed diverged (schedule/trace/payloads)"
+    return out

@@ -19,7 +19,8 @@ _JSON_MODULES = {"bench_kernels": "BENCH_kernels.json",
                  "bench_serving": "BENCH_serving.json",
                  "bench_gemm": "BENCH_gemm.json",
                  "bench_tune": "BENCH_tune.json",
-                 "bench_stream": "BENCH_stream.json"}
+                 "bench_stream": "BENCH_stream.json",
+                 "bench_chaos": "BENCH_chaos.json"}
 
 # bump when the record layout changes; repro.obs.regress pins this
 SCHEMA_VERSION = 2
@@ -63,18 +64,24 @@ def make_record(name: str, rows: list) -> dict:
 
 
 def _write_record(name: str, rows: list) -> None:
+    from repro.resil import retry
+
     path = pathlib.Path(__file__).parent / _JSON_MODULES[name]
-    path.write_text(json.dumps(make_record(name, rows), indent=1) + "\n")
+    record = json.dumps(make_record(name, rows), indent=1) + "\n"
+    # record writes ride the shared resilience retry helper: losing a
+    # 10-minute bench run to one transient FS error is the silly outcome
+    retry(lambda: path.write_text(record))
 
 
 def main() -> None:
-    from benchmarks import (bench_cnn, bench_dlsb, bench_dsp, bench_dynamic,
-                            bench_gemm, bench_kernels, bench_pareto, bench_pr,
-                            bench_rad, bench_serving, bench_stream, bench_tune)
+    from benchmarks import (bench_chaos, bench_cnn, bench_dlsb, bench_dsp,
+                            bench_dynamic, bench_gemm, bench_kernels,
+                            bench_pareto, bench_pr, bench_rad, bench_serving,
+                            bench_stream, bench_tune)
 
     mods = [bench_dlsb, bench_rad, bench_pr, bench_dynamic, bench_pareto,
             bench_dsp, bench_cnn, bench_kernels, bench_gemm, bench_tune,
-            bench_serving, bench_stream]
+            bench_serving, bench_stream, bench_chaos]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")
     failed = []

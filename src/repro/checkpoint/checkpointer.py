@@ -46,6 +46,20 @@ def _flatten_with_paths(tree) -> dict[str, np.ndarray]:
     return {_path_str(p): np.asarray(jax.device_get(v)) for p, v in flat}
 
 
+def _check_array(name: str, arr: np.ndarray, meta: dict) -> None:
+    """Verify one loaded array against its manifest entry: shape AND the
+    content digest stamped at save time — same-size bit corruption (a bad
+    sector, a torn concurrent write) fails here, not at some NaN three
+    thousand train steps later."""
+    if list(arr.shape) != meta["shape"]:
+        raise ValueError(f"checkpoint array {name!r}: shape {list(arr.shape)}"
+                         f" != manifest {meta['shape']}")
+    digest = hashlib.sha1(np.ascontiguousarray(arr).tobytes()).hexdigest()[:16]
+    if digest != meta["digest"]:
+        raise ValueError(f"checkpoint array {name!r}: content digest "
+                         f"{digest} != manifest {meta['digest']} (corrupt)")
+
+
 class Checkpointer:
     def __init__(self, directory: str | Path, keep: int = 3):
         self.dir = Path(directory)
@@ -141,16 +155,17 @@ class Checkpointer:
         try:
             manifest = json.loads((d / "manifest.json").read_text())
             for name, meta in manifest["arrays"].items():
-                arr = np.load(d / meta["file"], mmap_mode="r")
-                if list(arr.shape) != meta["shape"]:
-                    return False
+                arr = np.load(d / meta["file"])
+                _check_array(name, arr, meta)
             return True
         except Exception:
             return False
 
     def restore(self, step: int, like: Any) -> tuple[Any, dict]:
         """Restore into the structure of `like` (ShapeDtypeStructs or arrays).
-        Returns (tree, extra)."""
+        Returns (tree, extra).  Every loaded array is verified against its
+        manifest digest — a truncated or bit-corrupted checkpoint raises
+        instead of loading silently (``restore_latest`` skips it)."""
         d = self.dir / f"step_{step:010d}"
         manifest = json.loads((d / "manifest.json").read_text())
         flat = jax.tree_util.tree_flatten_with_path(like)
@@ -161,6 +176,7 @@ class Checkpointer:
             if meta is None:
                 raise KeyError(f"checkpoint missing array {name!r}")
             arr = np.load(d / meta["file"])
+            _check_array(name, arr, meta)
             if hasattr(ref, "shape") and tuple(arr.shape) != tuple(ref.shape):
                 raise ValueError(
                     f"shape mismatch for {name}: ckpt {arr.shape} vs {ref.shape}")

@@ -48,7 +48,13 @@ class SyntheticPipeline:
         self._succ = rng.integers(0, v, size=(min(v, 4096), 32), dtype=np.int32)
         self._file = None
         if cfg.kind == "file" and cfg.file_path:
-            self._file = np.load(cfg.file_path, mmap_mode="r")
+            # host-side I/O rides the shared resilience retry helper: a
+            # transient NFS/FUSE hiccup at trainer start is retried with
+            # capped backoff instead of killing the run
+            from repro.resil import retry
+
+            self._file = retry(
+                lambda: np.load(cfg.file_path, mmap_mode="r"))
 
     def _markov_tokens(self, rng: np.random.Generator, b: int, s: int) -> np.ndarray:
         v = self.cfg.vocab

@@ -149,6 +149,26 @@ def site_degree(degree, site: int):
     return d[site] if d.ndim else d
 
 
+def inject_fault(x, fault):
+    """Resilience fault hook (repro.resil, DESIGN.md §13): corrupt a batch
+    activation ``x`` (slots leading axis) with a traced per-slot ``fault``
+    operand — a (slots,) float32 vector where 0.0 means clean and NaN/Inf
+    marks the slot for corruption.  Float activations take ``x + fault``
+    (exact identity for clean slots, NaN/Inf poisoning for marked ones);
+    integer activations flip the high magnitude bit on marked slots
+    (SEU-style — NaN compares unordered so ``fault != 0`` is True for it).
+    ``fault=None`` is the no-resilience path: returns ``x`` untouched with
+    zero trace footprint."""
+    if fault is None:
+        return x
+    f = jnp.asarray(fault, jnp.float32).reshape(
+        (x.shape[0],) + (1,) * (x.ndim - 1))
+    if jnp.issubdtype(x.dtype, jnp.floating):
+        return x + f.astype(x.dtype)
+    mask = jnp.asarray(1 << (8 * x.dtype.itemsize - 2), x.dtype)
+    return jnp.where(f != 0.0, x ^ mask, x)
+
+
 # ---------------------------------------------------------------------------
 # call-site routers
 # ---------------------------------------------------------------------------

@@ -38,6 +38,54 @@ from repro.serve.engine import ServeEngine
 from repro.serve.metrics import summarize
 
 
+def _resil_kwargs(args) -> dict:
+    """Build the engine's resilience kwargs from the CLI flags (shared by
+    both workloads — the resil subsystem is workload-generic).  Empty dict
+    when no resilience flag is set: the engine then compiles and runs the
+    exact legacy path."""
+    kw: dict = {}
+    if args.faults:
+        from repro.resil import FaultPlan, FaultSpec, GuardConfig
+
+        kw["faults"] = FaultPlan(FaultSpec.parse(args.faults),
+                                 seed=args.fault_seed)
+        kw["guards"] = GuardConfig()
+    if (args.deadline_ms is not None or args.retries is not None
+            or args.shed is not None or args.brownout):
+        from repro.resil import ServePolicy
+
+        kw["policy"] = ServePolicy(
+            deadline_ms=args.deadline_ms,
+            max_retries=args.retries if args.retries is not None else 2,
+            max_queue=args.shed,
+            brownout=args.brownout)
+        if args.brownout and not args.qos:
+            raise SystemExit("--brownout degrades the QoS ladder under "
+                             "overload: it needs --qos (or --plan with "
+                             "--qos) to have a ladder to walk")
+    return kw
+
+
+def _print_resil(eng, done) -> None:
+    """Resilience summary lines (only when something happened)."""
+    s = eng.stats
+    def fam_total(fam) -> int:
+        return sum(int(c.value) for c in fam.children.values())
+
+    counts = {
+        "faults_injected": fam_total(s.c_faults),
+        "guard_trips": fam_total(s.c_guard_trips),
+        "retries": int(s.c_retries.value),
+        "shed": fam_total(s.c_shed),
+        "deadline_miss": fam_total(s.c_deadline_miss),
+        "brownout_rungs": int(s.c_brownout.value),
+        "param_scrubs": int(s.c_scrubs.value),
+    }
+    if any(counts.values()):
+        line = " ".join(f"{k}={v}" for k, v in counts.items() if v)
+        print(f"[launch.serve]   resil: {line}")
+
+
 def _write_obs(args) -> None:
     """Shared exit-time observability dumps (both workloads)."""
     if args.trace_out:
@@ -66,7 +114,8 @@ def _serve_stream(args) -> None:
     registry = obs_metrics.get_registry() if args.metrics_out else None
     eng = StreamServeEngine(adapter, slots=args.slots, seed=args.seed,
                             qos=qos, plan=plan, registry=registry,
-                            quality_every=args.quality_every)
+                            quality_every=args.quality_every,
+                            **_resil_kwargs(args))
     t0 = time.time()
     for i in range(args.requests):
         eng.submit(make_clip(args.frames, cfg.frame, q=cfg.q, seed=i))
@@ -83,6 +132,7 @@ def _serve_stream(args) -> None:
             print(f"[launch.serve]   degree ladder visits: "
                   f"{[e for _, e in list(eng.stats.degree_history)[-8:]]} "
                   f"(last 8)")
+        _print_resil(eng, done)
     _write_obs(args)
 
 
@@ -143,6 +193,31 @@ def main() -> None:
                     help="sample the live-vs-exact logit error every N "
                          "ticks into a per-rung histogram (0 = off; needs "
                          "--qos/--plan or an approx degree)")
+    # -- resilience (repro.resil; docs/robustness.md) --------------------
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request e2e deadline; a request past it "
+                         "terminates with status=deadline (queued or "
+                         "in-slot), never silently")
+    ap.add_argument("--retries", type=int, default=None, metavar="N",
+                    help="guard-trip requeues before a request fails "
+                         "(default 2; capped-exponential backoff)")
+    ap.add_argument("--shed", type=int, default=None, metavar="Q",
+                    help="queue-length backpressure cap: overflow sheds "
+                         "newest-first (or browns out first, see "
+                         "--brownout)")
+    ap.add_argument("--brownout", action="store_true",
+                    help="under overload force the QoS controller down the "
+                         "approximation ladder BEFORE shedding (graceful "
+                         "degradation; needs --qos)")
+    ap.add_argument("--faults", default=None, metavar="SPEC",
+                    help="inject a seeded fault storm: comma list of "
+                         "kind=rate — seu_state, seu_param, nan, spike, "
+                         "drop (e.g. 'seu_state=0.02,nan=0.05'); enables "
+                         "runtime guards + quarantine")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="fault schedule seed: the same seed reproduces "
+                         "the identical injected-fault sequence and "
+                         "recovery trace")
     args = ap.parse_args()
 
     kdispatch.set_backend(args.kernels)
@@ -184,7 +259,8 @@ def main() -> None:
                       temperature=max(args.temperature, 1e-6),
                       top_k=args.top_k, seed=args.seed, qos=qos,
                       prepack=False, plan=plan, registry=registry,
-                      quality_every=args.quality_every)
+                      quality_every=args.quality_every,
+                      **_resil_kwargs(args))
     rng = np.random.default_rng(args.seed)
     t0 = time.time()
     for _ in range(args.requests):
@@ -202,6 +278,7 @@ def main() -> None:
         if qos is not None:
             print(f"[launch.serve]   degree ladder visits: "
                   f"{[e for _, e in list(eng.stats.degree_history)[-8:]]} (last 8)")
+        _print_resil(eng, done)
     _write_obs(args)
 
 

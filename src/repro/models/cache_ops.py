@@ -17,11 +17,21 @@ special-cases a model family:
 
 Both are pure functions of arrays and trace cleanly under ``jax.jit`` with
 ``slot`` / ``active`` as traced arguments (no recompile per slot).
+
+The same layout convention makes SEU-style fault injection generic too
+(``repro.resil.faults``): :func:`bit_flip` flips one bit of one element of
+any array (floats via ``lax.bitcast_convert_type`` — jit-safe, no host
+round-trip), and :func:`cache_bit_flip` targets the flip at one slot's
+region of one cache field, so the fault injector never special-cases a
+model family either.
 """
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
+
+_FLOAT_BITS = {2: jnp.uint16, 4: jnp.uint32}
 
 
 def cache_reset_slot(cache, slot):
@@ -53,6 +63,43 @@ def cache_mask_update(old_cache, new_cache, active):
     """
     length = jnp.where(active, new_cache.length, old_cache.length)
     return new_cache._replace(length=length)
+
+
+def bit_flip(arr, index, bit):
+    """Flip bit ``bit`` of the ``index``-th element of ``arr`` (flattened
+    order); returns a new array, same shape/dtype.  Floats (f32/bf16/f16)
+    are flipped through an unsigned bitcast view so the operation is exact
+    bit manipulation, not arithmetic; ``index``/``bit`` may be traced.
+    Host (numpy) arrays — e.g. prepacked weight leaves — are coerced to
+    device arrays, so the result type is uniformly jax."""
+    arr = jnp.asarray(arr)
+    flat = arr.reshape(-1)
+    if jnp.issubdtype(arr.dtype, jnp.floating):
+        bits_ty = _FLOAT_BITS[arr.dtype.itemsize]
+        u = jax.lax.bitcast_convert_type(flat, bits_ty)
+        mask = jnp.left_shift(jnp.asarray(1, bits_ty),
+                              jnp.asarray(bit, bits_ty))
+        u = u.at[index].set(u[index] ^ mask)
+        flat = jax.lax.bitcast_convert_type(u, arr.dtype)
+    else:
+        mask = jnp.left_shift(jnp.asarray(1, arr.dtype),
+                              jnp.asarray(bit, arr.dtype))
+        flat = flat.at[index].set(flat[index] ^ mask)
+    return flat.reshape(arr.shape)
+
+
+def cache_bit_flip(cache, name: str, slot, index, bit):
+    """SEU injection primitive (repro.resil.faults): flip one bit at flat
+    offset ``index`` inside slot ``slot``'s region of cache field ``name``.
+    ``length`` is excluded — corrupting the slot cursor is a scheduler
+    fault, not a memory upset.  Returns a new cache NamedTuple; only the
+    named slot region changes."""
+    if name == "length":
+        raise ValueError("cache_bit_flip targets state regions, not length")
+    o = getattr(cache, name)
+    region = o[:, slot]
+    flipped = bit_flip(region, index, bit)
+    return cache._replace(**{name: o.at[:, slot].set(flipped)})
 
 
 def ring_write_indices(prompt_len: int, capacity: int):

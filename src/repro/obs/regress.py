@@ -2,9 +2,10 @@
 
 The committed perf records — ``benchmarks/BENCH_kernels.json``,
 ``BENCH_serving.json``, ``BENCH_gemm.json``, ``BENCH_tune.json``,
-``BENCH_stream.json`` — are the repo's performance memory: every claim in
-CHANGES.md (skip-grid step counts, fused-GEMM speedups, planned-rung
-dominance, stream-rung PSNR) is anchored in them.
+``BENCH_stream.json``, ``BENCH_chaos.json`` — are the repo's performance
+memory: every claim in CHANGES.md (skip-grid step counts, fused-GEMM
+speedups, planned-rung dominance, stream-rung PSNR, brownout goodput
+dominance) is anchored in them.
 Until now nothing machine-checked them, so a record could silently rot
 (a bench renamed, a speedup regressed, a hand-edited number) and CI would
 stay green.  This module makes each record's claims executable:
@@ -46,6 +47,7 @@ BENCH_RECORDS = {
     "bench_gemm": "BENCH_gemm.json",
     "bench_tune": "BENCH_tune.json",
     "bench_stream": "BENCH_stream.json",
+    "bench_chaos": "BENCH_chaos.json",
 }
 
 #: current record schema (benchmarks/run.py stamps this)
@@ -326,12 +328,108 @@ def _check_stream(rec: dict, tiny: bool) -> list:
     return errs
 
 
+def _kv_ints(text: str) -> dict:
+    """Parse a ``k=v`` mix string (``ok=3,shed=9``; ``;`` separates runs)
+    into {key: int}; repeated keys accumulate across runs."""
+    out: dict = {}
+    for part in re.split(r"[;,]", text):
+        if "=" in part:
+            k, v = part.split("=", 1)
+            try:
+                out[k.strip()] = out.get(k.strip(), 0) + int(v)
+            except ValueError:
+                pass
+    return out
+
+
+def _check_chaos(rec: dict, tiny: bool) -> list:
+    """Resilience invariants (ISSUE 8) — all scale-invariant:
+
+    * **brownout dominance** — goodput (in-deadline completions per virtual
+      second) under ladder degradation must be >= the shed-only policy at
+      the same overload burst; this is the graceful-degradation headline.
+    * **containment** — ``chaos.storm_corrupt_payloads`` must be 0: no
+      injected SEU/NaN ever reaches an emitted payload.
+    * **accounting** — every ``lost= / dup= / short=`` counter in every
+      accounting row must be 0 (requests terminate exactly once).
+    * **non-vacuity** — the storm injected >= 1 fault and tripped >= 1
+      guard, so the containment claim is load-bearing.
+    * **deadline classes** — the loose class misses no more than the tight.
+    * **determinism** — same fault seed reproduced schedule, recovery
+      trace, and payload bits (``chaos.determinism == "identical"``).
+    """
+    errs = []
+    rows = rows_by_name(rec)
+    gp_shed = _derived_float(rows, "chaos.overload_shed_goodput")
+    gp_brown = _derived_float(rows, "chaos.overload_brownout_goodput")
+    if gp_shed is None or gp_brown is None:
+        errs.append("missing chaos.overload_*_goodput rows")
+    else:
+        if gp_shed <= 0 or gp_brown <= 0:
+            errs.append(f"overload goodput not positive "
+                        f"(shed={gp_shed}, brownout={gp_brown})")
+        if gp_brown < gp_shed - 1e-9:
+            errs.append(f"brownout goodput {gp_brown}/s < shed-only "
+                        f"{gp_shed}/s — graceful degradation no longer "
+                        f"dominates availability-by-shedding")
+    rungs = _derived_float(rows, "chaos.overload_brownout_rungs")
+    if rungs is None or rungs < 1:
+        errs.append(f"chaos.overload_brownout_rungs missing or < 1 "
+                    f"({rungs}) — the brownout run never browned out")
+    corrupt = _derived_float(rows, "chaos.storm_corrupt_payloads")
+    if corrupt is None:
+        errs.append("missing row chaos.storm_corrupt_payloads")
+    elif corrupt != 0:
+        errs.append(f"{int(corrupt)} corrupt payloads escaped the guards")
+    for name in ("chaos.storm_injected", "chaos.storm_recovery"):
+        if name not in rows:
+            errs.append(f"missing row {name}")
+    if "chaos.storm_injected" in rows:
+        inj = _kv_ints(rows["chaos.storm_injected"][1])
+        if sum(inj.values()) < 1:
+            errs.append("fault storm injected nothing — containment claim "
+                        "is vacuous")
+    if "chaos.storm_recovery" in rows:
+        recov = _kv_ints(rows["chaos.storm_recovery"][1])
+        if recov.get("trips", 0) < 1:
+            errs.append("fault storm tripped no guard — recovery claim is "
+                        "vacuous")
+    for name in ("chaos.overload_accounting", "chaos.storm_accounting",
+                 "chaos.mixed_accounting"):
+        if name not in rows:
+            errs.append(f"missing row {name}")
+            continue
+        acct = _kv_ints(rows[name][1])
+        bad = {k: v for k, v in acct.items() if v != 0}
+        if bad:
+            errs.append(f"{name} nonzero: {bad} (lost/duplicated/"
+                        f"short-changed requests)")
+    miss = rows.get("chaos.mixed_deadline_miss")
+    if miss is None:
+        errs.append("missing row chaos.mixed_deadline_miss")
+    else:
+        m = re.match(r"tight=([0-9.]+),loose=([0-9.]+)", miss[1])
+        if not m:
+            errs.append(f"chaos.mixed_deadline_miss malformed: {miss[1]!r}")
+        elif float(m.group(2)) > float(m.group(1)) + 1e-9:
+            errs.append(f"loose-deadline class missed more than tight "
+                        f"({miss[1]})")
+    det = rows.get("chaos.determinism")
+    if det is None:
+        errs.append("missing row chaos.determinism")
+    elif det[1] != "identical":
+        errs.append(f"chaos.determinism = {det[1]!r} — same fault seed "
+                    f"no longer reproduces the run")
+    return errs
+
+
 _CHECKS: dict = {
     "bench_kernels": _check_kernels,
     "bench_serving": _check_serving,
     "bench_gemm": _check_gemm,
     "bench_tune": _check_tune,
     "bench_stream": _check_stream,
+    "bench_chaos": _check_chaos,
 }
 
 

@@ -1,0 +1,30 @@
+"""repro.resil — fault injection, runtime guards, graceful degradation.
+
+The dissertation hardens DSP kernels for space-grade (radiation-exposed)
+FPGAs and proposes runtime-adjustable approximation as a low-overhead
+quality-management loop.  This package is that story at system level
+(DESIGN.md §13): a serving stack that *expects* faults —
+
+  * :mod:`repro.resil.faults`  — deterministic, seeded SEU-style fault
+    injection (bit flips into params / per-slot cache state, NaN/Inf into
+    activations, latency spikes, dropped ticks);
+  * :mod:`repro.resil.guards`  — jit-safe per-slot output guards, golden
+    param scrubbing, and a quality-tap anomaly sentinel;
+  * :mod:`repro.resil.policy`  — per-request deadlines, capped-backoff
+    retry, queue backpressure, and brownout-by-approximation: under
+    overload the QoS controller is forced down the calibrated
+    ``ApproxPlan`` ladder *before* any request is shed.
+
+All three wire through ``serve/engine.py::ServeCore`` for every workload
+(LM and stream alike) and are fully instrumented in ``repro.obs``.
+"""
+
+from repro.resil.faults import FaultEvent, FaultPlan, FaultSpec
+from repro.resil.guards import GuardConfig, QualitySentinel, slot_ok
+from repro.resil.policy import ServePolicy, VirtualClock, retry
+
+__all__ = [
+    "FaultEvent", "FaultPlan", "FaultSpec",
+    "GuardConfig", "QualitySentinel", "slot_ok",
+    "ServePolicy", "VirtualClock", "retry",
+]

@@ -1,0 +1,107 @@
+"""Jit-safe runtime guards for the serve engine's fused step.
+
+Two detection layers (docs/robustness.md):
+
+  * **Per-slot output guards** — every guarded step returns a per-slot
+    ``ok`` bool alongside its emission: :func:`slot_ok` checks the slot's
+    output activation is finite everywhere and (when the workload declares
+    a ``guard_limit``) within its magnitude bound — LM logits within
+    ``|x| <= limit``, stream frames within the Q-format range the clean
+    int pipeline can never leave.  The check runs *inside* the compiled
+    step (one fused reduction, no host sync beyond the ok vector), so a
+    corrupted emission is never banked: the engine quarantines the slot —
+    resets it through the bit-identical ``cache_ops`` reset — and requeues
+    or fails the request per policy.
+
+  * **Quality-anomaly sentinel** — :class:`QualitySentinel` watches the
+    live-vs-exact samples the engine's quality tap (``obs/quality.py``)
+    already produces and trips when ``window`` consecutive samples cross
+    the threshold (logit-RMS above, or PSNR-dB below, per ``mode``): the
+    value-corruption analogue of the slot guards, catching drift the
+    finite/range checks can't see.
+
+On any trip the engine *scrubs*: it rebinds its golden parameter tree
+(JAX immutability makes the golden copy a free reference), repairing
+persistent ``seu_param`` corruption — the software analogue of the
+configuration-memory scrubbing the dissertation's rad-hard FPGA targets
+rely on.  ``scrub_every`` adds blind periodic scrubbing on top.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def slot_ok(x, *, limit: Optional[float] = None):
+    """Per-slot sanity reduction over a (slots, ...) activation batch:
+    True where the slot's values are all finite and, when ``limit`` is
+    given, all within ``|x| <= limit``.  Jit-safe; NaN compares unordered
+    so a NaN fails the limit check too."""
+    red = tuple(range(1, x.ndim))
+    if jnp.issubdtype(x.dtype, jnp.floating):
+        ok = jnp.all(jnp.isfinite(x), axis=red)
+    else:
+        ok = jnp.ones((x.shape[0],), bool)
+    if limit is not None:
+        bound = jnp.asarray(limit, jnp.float32)
+        ok = ok & jnp.all(jnp.abs(x.astype(jnp.float32)) <= bound, axis=red)
+    return ok
+
+
+@dataclass
+class GuardConfig:
+    """Engine guard knobs.  Passing a GuardConfig (or any fault plan) to
+    ``ServeCore`` switches it onto the workload's ``guarded_step`` — same
+    arithmetic, plus the traced fault operand and the per-slot ok bits."""
+
+    #: override the workload's ``guard_limit`` magnitude bound (None keeps
+    #: the workload default: 1e4 for LM logits, 2 << q for stream frames)
+    limit: Optional[float] = None
+    #: restore the golden param tree whenever any guard trips
+    scrub_on_trip: bool = True
+    #: blind periodic scrub every N ticks (0 = off)
+    scrub_every: int = 0
+    #: quality-tap anomaly threshold (None = sentinel off; needs
+    #: ``quality_every > 0`` on the engine)
+    sentinel_threshold: Optional[float] = None
+    #: "max": trip when sample > threshold (error metrics, LM logit RMS);
+    #: "min": trip when sample < threshold (fidelity metrics, stream PSNR)
+    sentinel_mode: str = "max"
+    #: consecutive bad samples required to trip
+    sentinel_window: int = 1
+
+    def sentinel(self) -> Optional["QualitySentinel"]:
+        if self.sentinel_threshold is None:
+            return None
+        return QualitySentinel(self.sentinel_threshold,
+                               mode=self.sentinel_mode,
+                               window=self.sentinel_window)
+
+
+class QualitySentinel:
+    """Threshold watcher over the quality tap's live-vs-exact samples."""
+
+    def __init__(self, threshold: float, *, mode: str = "max",
+                 window: int = 1):
+        if mode not in ("max", "min"):
+            raise ValueError(f"sentinel mode {mode!r} (want max|min)")
+        self.threshold = float(threshold)
+        self.mode = mode
+        self.window = max(1, int(window))
+        self._bad = 0
+        self.trips = 0
+
+    def observe(self, value: float) -> bool:
+        """Feed one sample; True when the trip condition fires (resets the
+        consecutive-bad counter so one anomaly reports once)."""
+        bad = (value > self.threshold if self.mode == "max"
+               else value < self.threshold)
+        self._bad = self._bad + 1 if bad else 0
+        if self._bad >= self.window:
+            self._bad = 0
+            self.trips += 1
+            return True
+        return False

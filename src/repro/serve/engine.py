@@ -29,6 +29,20 @@ arithmetic, idle -> exact.  With a plan the controller steps along the
 plan's calibrated ladder (whole mixed per-site configurations, Pareto
 points from ``repro.tune``) instead of rescaling one global knob; either
 way the compiled executable never changes.
+
+Resilience (``repro.resil``, DESIGN.md §13): ``faults=`` injects a seeded
+:class:`~repro.resil.faults.FaultPlan` (SEU bit flips, NaN/Inf activations,
+latency spikes, dropped ticks); ``guards=`` switches the engine onto the
+workload's ``guarded_step`` — per-slot ok bits, quarantine through the
+bit-identical slot reset, golden-param scrubbing, quality-tap sentinel;
+``policy=`` adds deadlines, capped-backoff retry, backpressure, and
+brownout-by-approximation (the QoS ladder degrades before anything sheds).
+``clock=`` injects the engine's time source (``resil.policy.VirtualClock``
+makes deadline/goodput behavior deterministic).  With all four at their
+defaults the engine compiles and runs the exact legacy path.  Every request
+terminates exactly once in ``done`` with a status in {ok, failed, shed,
+deadline} — nothing is lost or double-charged — and ``resil_log`` records
+the (tick, event, args) recovery trace the determinism tests assert on.
 """
 
 from __future__ import annotations
@@ -75,6 +89,16 @@ class Request:
     # engine running without a traced degree): makes mid-run QoS rung moves
     # visible per request, not just the engine-final degree
     degree_at_first_emit: Optional[tuple] = None
+    # -- resilience lifecycle (repro.resil; defaults = legacy behavior) --
+    #: terminal disposition: ok | failed (retries spent) | shed | deadline
+    status: str = "ok"
+    #: guard-trip requeues so far
+    retries: int = 0
+    #: e2e / TTFT deadlines (seconds from t_enqueue; None = none)
+    deadline_s: Optional[float] = None
+    ttft_deadline_s: Optional[float] = None
+    #: earliest admission time (retry backoff gate)
+    eligible_at: float = 0.0
 
     # -- latency breakdown (valid once done) --
     @property
@@ -124,12 +148,14 @@ class ServeCore:
                  max_len: int = 512, seed: int = 0,
                  qos: Optional[QoSController] = None,
                  degree=None, prepack: bool = True, plan=None,
-                 registry=None, tracer=None, quality_every: int = 0):
+                 registry=None, tracer=None, quality_every: int = 0,
+                 faults=None, guards=None, policy=None, clock=None):
         self.workload = workload
         self.params = workload.prepack(params) if prepack else params
         self.slots = slots
         self.max_len = max_len
         self.qos = qos
+        self._clock = clock if clock is not None else time.time
         self.state = workload.init_state(batch=slots, max_len=max_len)
         self.slot_req: list[Optional[Request]] = [None] * slots
         self.slot_budget = np.zeros(slots, np.int32)
@@ -195,23 +221,73 @@ class ServeCore:
         # resolved kernel backend for the per-tick route counters: captured
         # from dispatch.last_route after the first traced step/ingest
         self._route: dict = {}
-        self._step = jax.jit(workload.step)
+        # -- resilience wiring (repro.resil, DESIGN.md §13) ---------------
+        # faults imply guards (injected corruption must be catchable) and
+        # guards imply a policy (something must own retry semantics); with
+        # all three absent the compiled step is the exact legacy jaxpr.
+        if faults is not None and guards is None:
+            from repro.resil import GuardConfig
+            guards = GuardConfig()
+        if guards is not None and policy is None:
+            from repro.resil import ServePolicy
+            policy = ServePolicy()
+        self.faults = faults
+        self.guards = guards
+        self.policy = policy
+        #: (tick, event, sorted-args) recovery trace — the determinism
+        #: contract: same fault seed + same traffic -> identical log
+        self.resil_log: list = []
+        self._golden = None
+        self._sentinel = None
+        self._fault_vec = np.zeros(slots, np.float32)
+        if guards is not None:
+            if guards.limit is not None:
+                workload.guard_limit = guards.limit
+            # golden copy for scrubbing: JAX immutability makes this a free
+            # reference — prepacked weights are repaired by the same rebind
+            self._golden = self.params
+            self._slot_reset = jax.jit(workload.reset_slot)
+            if guards.sentinel_threshold is not None:
+                if self._tap is None:
+                    raise ValueError(
+                        "sentinel_threshold needs quality_every > 0 (the "
+                        "sentinel watches the quality tap's samples)")
+                self._sentinel = guards.sentinel()
+            self._step = jax.jit(workload.guarded_step)
+        else:
+            self._step = jax.jit(workload.step)
+        if faults is not None:
+            faults.bind(self.state, self.params, slots)
 
     # ------------------------------------------------------------------
 
-    def submit(self, payload, budget: Optional[int] = None) -> Request:
+    def submit(self, payload, budget: Optional[int] = None, *,
+               deadline_ms: Optional[float] = None,
+               ttft_deadline_ms: Optional[float] = None) -> Request:
         """Enqueue one request (FIFO).  Returns the live Request object —
         emissions appear in ``request.out`` as ticks produce them, and
         latency fields populate when it finishes.  The workload validates
         the payload here (raising at submit time — rejecting mid-tick
-        would lose the request)."""
+        would lose the request).  ``deadline_ms``/``ttft_deadline_ms``
+        override the policy defaults per request (ignored without a
+        policy — nothing would enforce them)."""
         wl = self.workload
         payload = wl.validate(payload)
         if budget is None:
             budget = wl.default_budget(payload)
+        p = self.policy
+        if p is not None:
+            if deadline_ms is None:
+                deadline_ms = p.deadline_ms
+            if ttft_deadline_ms is None:
+                ttft_deadline_ms = p.ttft_deadline_ms
         req = (wl.request_cls or Request)(
             rid=next(self._rid), payload=payload, budget=int(budget),
-            payload_units=wl.payload_units(payload), t_enqueue=time.time())
+            payload_units=wl.payload_units(payload),
+            t_enqueue=self._clock(),
+            deadline_s=None if deadline_ms is None else deadline_ms / 1e3,
+            ttft_deadline_s=(None if ttft_deadline_ms is None
+                             else ttft_deadline_ms / 1e3))
         self.queue.append(req)
         self._tracer.event(
             "enqueue", track="engine", rid=req.rid,
@@ -222,7 +298,7 @@ class ServeCore:
     def _admit(self, slot: int, req: Request):
         """Reset the slot's state region and ingest the payload via the
         workload's fused admit; the first step input lands in the feed."""
-        req.t_admitted = time.time()
+        req.t_admitted = self._clock()
         wl = self.workload
         with self._tracer.span(wl.admit_span, track="engine", rid=req.rid,
                                slot=slot,
@@ -275,36 +351,234 @@ class ServeCore:
                                backend=backend)
         self.stats.c_route_steps.labels(site=site, backend=backend).inc()
 
+    # ---- resilience machinery (repro.resil, DESIGN.md §13) -------------
+
+    def _resil_event(self, name: str, **args) -> None:
+        """Record one recovery-trace entry + the matching obs trace event.
+        The log entry is a plain (tick, name, sorted-args) tuple so two
+        runs compare with ``==`` — the determinism contract's artifact."""
+        self.resil_log.append((self._ticks, name, tuple(sorted(args.items()))))
+        self._tracer.event(name, track="resil", tick=self._ticks, **args)
+
+    def _finish(self, req: Request, status: str, now: float,
+                slot: Optional[int] = None) -> None:
+        """Terminate one request non-ok (failed/shed/deadline): exactly one
+        ``done`` entry per submitted request, whatever its fate."""
+        req.status = status
+        req.done = True
+        req.t_done = now
+        self.done.append(req)
+        if slot is not None:
+            self.slot_req[slot] = None
+
+    def _scrub(self, reason: str) -> None:
+        """Restore the golden parameter tree (memory scrubbing): repairs
+        any persistent seu_param corruption.  Free when already golden."""
+        if self._golden is not None and self.params is not self._golden:
+            self.params = self._golden
+            self.stats.c_scrubs.inc()
+            self._resil_event("param_scrub", reason=reason)
+
+    def _quarantine(self, slot: int, now: float) -> None:
+        """Per-slot guard trip: reset the slot through the bit-identical
+        cache_ops reset, scrub, and requeue (rewound to a fresh admission,
+        behind capped backoff) or fail the request per policy."""
+        req = self.slot_req[slot]
+        self.stats.c_guard_trips.labels(reason="slot").inc()
+        self._resil_event("guard_tripped", reason="slot", rid=req.rid,
+                          slot=slot)
+        self.state = self._slot_reset(self.state, jnp.asarray(slot, jnp.int32))
+        self.slot_req[slot] = None
+        if self.guards.scrub_on_trip:
+            self._scrub("guard_trip")
+        req.retries += 1
+        if req.retries > self.policy.max_retries:
+            self._finish(req, "failed", now)
+            self.stats.c_failed.inc()
+            self._resil_event("request_failed", rid=req.rid,
+                              retries=req.retries)
+            return
+        # full rewind: the retry must be indistinguishable from a fresh
+        # admission (asserted bit-identical by the quarantine tests)
+        req.out.clear()
+        req.cursor = 0
+        req.admitted_units = 0
+        req.t_first_emit = 0.0
+        req.degree_at_first_emit = None
+        backoff = self.policy.backoff_s(req.retries)
+        req.eligible_at = now + backoff
+        self.queue.appendleft(req)
+        self.stats.c_retries.inc()
+        self._resil_event("retry", rid=req.rid, retries=req.retries,
+                          backoff_ms=round(backoff * 1e3, 3))
+
+    def _next_admittable(self, now: float) -> Optional[Request]:
+        """Oldest queued request whose retry backoff has elapsed."""
+        for req in self.queue:
+            if req.eligible_at <= now:
+                self.queue.remove(req)
+                return req
+        return None
+
+    def _enforce_queue_policy(self, now: float) -> None:
+        """Deadline-cull the queue, apply queue-age shedding, and resolve
+        queue-length overload: brownout first (force the QoS controller one
+        rung down the calibrated ladder), shed — newest first — only once
+        the ladder is exhausted."""
+        p = self.policy
+        keep: deque[Request] = deque()
+        for req in self.queue:
+            age = now - req.t_enqueue
+            if req.deadline_s is not None and age > req.deadline_s:
+                self._finish(req, "deadline", now)
+                self.stats.c_deadline_miss.labels(edge="queue").inc()
+                self._resil_event("deadline_miss", edge="queue", rid=req.rid)
+            elif (p.max_queue_age_ms is not None
+                    and age * 1e3 > p.max_queue_age_ms):
+                self._finish(req, "shed", now)
+                self.stats.c_shed.labels(reason="stale").inc()
+                self._resil_event("shed", reason="stale", rid=req.rid)
+            else:
+                keep.append(req)
+        self.queue = keep
+        if p.max_queue is None or len(self.queue) <= p.max_queue:
+            return
+        qos = self.qos
+        if (p.brownout and qos is not None and qos.ladder
+                and qos.degree < len(qos.ladder) - 1):
+            # graceful degradation: one rung per tick, with the controller's
+            # own cooldown armed so it can't immediately climb back
+            qos.degree += 1
+            qos._cooldown = qos.cooldown_steps
+            self.stats.c_brownout.inc()
+            self._resil_event("brownout_rung", rung=qos.degree,
+                              queued=len(self.queue))
+            return
+        while len(self.queue) > p.max_queue:
+            victim = self.queue.pop()
+            self._finish(victim, "shed", now)
+            self.stats.c_shed.labels(reason="overload").inc()
+            self._resil_event("shed", reason="overload", rid=victim.rid)
+
+    def _enforce_active_deadlines(self, now: float) -> None:
+        """Terminate in-slot requests past their e2e or TTFT deadline (the
+        freed slot region is rewound by the next admission's reset)."""
+        for s in range(self.slots):
+            req = self.slot_req[s]
+            if req is None:
+                continue
+            age = now - req.t_enqueue
+            if req.deadline_s is not None and age > req.deadline_s:
+                edge = "active"
+            elif (req.ttft_deadline_s is not None and req.t_first_emit == 0.0
+                    and age > req.ttft_deadline_s):
+                edge = "ttft"
+            else:
+                continue
+            self._finish(req, "deadline", now, slot=s)
+            self.stats.c_deadline_miss.labels(edge=edge).inc()
+            self._resil_event("deadline_miss", edge=edge, rid=req.rid, slot=s)
+
+    def _stall(self, seconds: float) -> None:
+        """Latency spike: advance an injectable clock, sleep a real one."""
+        advance = getattr(self._clock, "advance", None)
+        if advance is not None:
+            advance(seconds)
+        else:
+            time.sleep(seconds)
+
+    def _apply_faults(self) -> bool:
+        """Apply this tick's scheduled faults; True = the step is dropped.
+        State/param flips mutate the live trees (the golden copy is safe by
+        immutability); activation faults arm the traced fault operand."""
+        drop = False
+        for ev in self.faults.events_at(self._ticks):
+            self.faults.record(ev)
+            self.stats.c_faults.labels(kind=ev.kind).inc()
+            self._resil_event("fault_injected", **ev.args())
+            if ev.kind == "seu_state":
+                self.state = self.faults.apply_state(self.state, ev)
+            elif ev.kind == "seu_param":
+                self.params = self.faults.apply_params(self.params, ev)
+            elif ev.kind == "nan":
+                self._fault_vec[ev.slot] = ev.value
+            elif ev.kind == "spike":
+                self._stall(ev.value)
+            elif ev.kind == "drop":
+                drop = True
+        return drop
+
+    # ---------------------------------------------------------------
+
     def tick(self) -> int:
         """One engine iteration: admit queued requests into free slots
         (fused ingest per admission), update the QoS degree, run ONE fused
         step over all slots, and harvest emissions / finished requests.
         Returns the number of active slots (0 = idle)."""
         wl = self.workload
+        now = self._clock()
+        if self.policy is not None:
+            self._enforce_queue_policy(now)
+            self._enforce_active_deadlines(now)
         # FIFO admission into free slots
         for s in range(self.slots):
             if self.slot_req[s] is None and self.queue:
-                self._admit(s, self.queue.popleft())
+                if self.policy is None:
+                    self._admit(s, self.queue.popleft())
+                else:
+                    req = self._next_admittable(now)
+                    if req is None:
+                        break
+                    self._admit(s, req)
+        if self.guards is not None and self.guards.scrub_every > 0 \
+                and self._ticks and self._ticks % self.guards.scrub_every == 0:
+            self._scrub("periodic")
         active = [s for s in range(self.slots) if self.slot_req[s] is not None]
         if not active:
             return 0
         if self.qos is not None:
             self._update_degree(len(active))
+        # scheduled faults land before the step: state/param flips are what
+        # the step consumes, the armed fault operand poisons its activations
+        drop = self.faults is not None and self._apply_faults()
         mask = np.zeros(self.slots, bool)
         mask[active] = True
         if self._tap is not None and self._tap.due(self._ticks):
             # probe BEFORE the step: same inputs the fused step is about to
             # consume, state untouched (the tap discards its state updates)
-            self._tap.sample(self._ticks, self.params, self.state,
-                             self._feed, mask, self._degree)
+            val = self._tap.sample(self._ticks, self.params, self.state,
+                                   self._feed, mask, self._degree)
+            if self._sentinel is not None and self._sentinel.observe(val):
+                self.stats.c_guard_trips.labels(reason="quality").inc()
+                self._resil_event("guard_tripped", reason="quality",
+                                  sample=round(float(val), 6))
+                if self.guards.scrub_on_trip:
+                    self._scrub("sentinel")
+        if drop:
+            # dropped tick: the fused step never runs — no state advance,
+            # no emission, no budget charge; an armed activation fault
+            # evaporates with the skipped cycle
+            self._fault_vec[:] = 0.0
+            self._ticks += 1
+            self.stats.c_dropped_ticks.inc()
+            return len(active)
         self._key, sub = jax.random.split(self._key)
         with self._tracer.span(f"{wl.step_span}_tick", track="engine",
                                tick=self._ticks, active=len(active),
                                queued=len(self.queue)):
-            nxt, self.state = self._step(self.params, self.state,
-                                         jnp.asarray(self._feed),
-                                         jnp.asarray(mask), sub,
-                                         self._degree)
+            if self.guards is not None:
+                nxt, self.state, ok = self._step(
+                    self.params, self.state, jnp.asarray(self._feed),
+                    jnp.asarray(mask), sub, self._degree,
+                    jnp.asarray(self._fault_vec))
+                ok = np.asarray(ok)
+                self._fault_vec[:] = 0.0
+            else:
+                nxt, self.state = self._step(self.params, self.state,
+                                             jnp.asarray(self._feed),
+                                             jnp.asarray(mask), sub,
+                                             self._degree)
+                ok = None
             nxt = np.asarray(nxt)
         self._ticks += 1
         self.stats.c_steps.inc()
@@ -313,9 +587,13 @@ class ServeCore:
             self._count_route(site)
         self._tracer.counter("slots", track="engine", active=len(active),
                              queued=len(self.queue))
-        now = time.time()
+        now = self._clock()
         for s in active:
             req = self.slot_req[s]
+            if ok is not None and not ok[s]:
+                # corrupted emission: never banked — quarantine the slot
+                self._quarantine(s, now)
+                continue
             emitted, finished, info = wl.harvest(req, self._feed, s, nxt[s])
             if emitted:
                 # a suppressed emission (e.g. an LM stop id) is neither

@@ -76,6 +76,9 @@ class LMAdapter(ServableModel):
     admit_site = "prefill"
     step_sites = ("decode",)
     request_cls = Request
+    #: clean smoke-family logits sit well under this; a high-exponent SEU
+    #: or NaN/Inf injection blows past it (resil.guards)
+    guard_limit = 1e4
 
     def __init__(self, model: Model, *, tp: int = 1, eos_id: int = -1,
                  greedy: bool = True, temperature: float = 1.0,
@@ -105,7 +108,28 @@ class LMAdapter(ServableModel):
                                 temperature=temperature, top_k=top_k)
             return nxt, new_cache
 
+        def guarded_serve_step(p, cache, tokens, active, key, deg, fault):
+            # guard the *logits*, pre-sampling: the injection point is the
+            # model's output activation (dispatch.inject_fault), the check
+            # runs where corruption is still observable (sampling collapses
+            # a poisoned distribution to a plausible-looking token id)
+            from repro.kernels import dispatch as kdispatch
+            from repro.resil import guards
+
+            logits, new_cache = model.decode_step(p, cache, tokens, tp=tp,
+                                                  degree=deg, active=active)
+            new_cache = cache_mask_update(cache, new_cache, active)
+            lv = kdispatch.inject_fault(logits[:, 0, :vocab], fault)
+            ok = guards.slot_ok(lv, limit=self.guard_limit)
+            # sampling must stay defined on quarantined slots (their token
+            # is discarded, but NaN would poison the whole fused gather)
+            safe = jnp.where(jnp.isfinite(lv), lv, 0.0)
+            nxt = sample_tokens(safe, key, greedy=greedy,
+                                temperature=temperature, top_k=top_k)
+            return nxt, new_cache, ok
+
         self._serve_step = serve_step
+        self._guarded_serve_step = guarded_serve_step
         self._prefill = jax.jit(
             lambda p, c, t, s, deg: model.prefill(p, c, t, s, tp=tp,
                                                   degree=deg))
@@ -166,6 +190,10 @@ class LMAdapter(ServableModel):
     def step(self, params, cache, feed, active, key, degree):
         return self._serve_step(params, cache, feed, active, key, degree)
 
+    def guarded_step(self, params, cache, feed, active, key, degree, fault):
+        return self._guarded_serve_step(params, cache, feed, active, key,
+                                        degree, fault)
+
     def harvest(self, req, feed, slot, emission):
         tok = int(emission)
         if self.eos_id >= 0 and tok == self.eos_id:
@@ -198,14 +226,14 @@ class ServeEngine(_engine.ServeCore):
                  greedy: bool = True, temperature: float = 1.0,
                  top_k: int = 0, seed: int = 0, qos=None, degree=None,
                  prepack: bool = True, plan=None, registry=None,
-                 tracer=None, quality_every: int = 0):
+                 tracer=None, quality_every: int = 0, **resil_kw):
         workload = LMAdapter(model, tp=tp, eos_id=eos_id, greedy=greedy,
                              temperature=temperature, top_k=top_k,
                              max_len=max_len)
         super().__init__(workload, params, slots=slots, max_len=max_len,
                          seed=seed, qos=qos, degree=degree, prepack=prepack,
                          plan=plan, registry=registry, tracer=tracer,
-                         quality_every=quality_every)
+                         quality_every=quality_every, **resil_kw)
         self.model = model
         self.eos_id = eos_id
         self.tp = tp
@@ -226,7 +254,7 @@ class ServeEngine(_engine.ServeCore):
     def _tokens(self):
         return self._feed
 
-    def submit(self, prompt, max_new_tokens: int = 32) -> Request:
+    def submit(self, prompt, max_new_tokens: int = 32, **kw) -> Request:
         """Enqueue one request (FIFO).  Returns the live Request — tokens
         appear in ``request.out_tokens`` as ticks generate them."""
-        return super().submit(prompt, max_new_tokens)
+        return super().submit(prompt, max_new_tokens, **kw)

@@ -65,6 +65,11 @@ class ServableModel:
     #: must expose ``name`` and ``n_layers`` at minimum
     cfg = None
 
+    #: per-slot magnitude bound for the guarded step's sanity check (None =
+    #: finite-only); workloads set the bound the clean pipeline can never
+    #: leave (LM: a logit limit; stream: the Q-format range)
+    guard_limit: Optional[float] = None
+
     # ---- weights ------------------------------------------------------
     def prepack(self, params):
         """Quantize-once residency hook (DESIGN.md §9); identity by default."""
@@ -114,6 +119,26 @@ class ServableModel:
         Free slots must be masked via ``cache_mask_update`` so their state
         never advances."""
         raise NotImplementedError
+
+    def guarded_step(self, params, state, feed, active, key, degree, fault):
+        """Fault-aware twin of :meth:`step` (repro.resil, DESIGN.md §13):
+        same contract plus a traced per-slot ``fault`` operand — a (slots,)
+        float32 vector, 0.0 = clean, NaN/Inf = corrupt that slot's
+        activations via ``dispatch.inject_fault`` — and a third output:
+        per-slot ``ok`` bools from the jit-safe guard check
+        (``resil.guards.slot_ok`` against :attr:`guard_limit`).  The engine
+        never banks an emission whose ok bit is False; it quarantines the
+        slot instead.  This default wraps :meth:`step` (inject + check on
+        the emission); workloads override to place the injection/guard
+        inside the pipeline (the LM adapter guards logits pre-sampling)."""
+        from repro.kernels import dispatch as kdispatch
+        from repro.resil import guards
+
+        emission, new_state = self.step(params, state, feed, active, key,
+                                        degree)
+        emission = kdispatch.inject_fault(emission, fault)
+        return emission, new_state, guards.slot_ok(emission,
+                                                   limit=self.guard_limit)
 
     def harvest(self, req, feed, slot: int, emission):
         """Bank one slot's step emission into ``req.out`` and advance its

@@ -137,6 +137,11 @@ class StreamAdapter(ServableModel):
         # default AXQ spec is just a carrier
         self.policy = ApproxPolicy()
         self._reset = jax.jit(cache_reset_slot)
+        # clean pipeline range bound: l1-safe taps/kern quantization and the
+        # <1 gain keep |frame| <= 2**q end-to-end, so any high-bit SEU in
+        # the tail or an injected activation fault leaves the band — the
+        # protocol-default guarded_step with this limit is the stream guard
+        self.guard_limit = float(2 << self.cfg.q)
 
     # ---- weights / slot state ----------------------------------------
 
@@ -279,10 +284,11 @@ class StreamServeEngine(_engine.ServeCore):
         kw.setdefault("max_len", 0)
         super().__init__(adapter, params, slots=slots, **kw)
 
-    def submit(self, frames, max_frames: Optional[int] = None):
+    def submit(self, frames, max_frames: Optional[int] = None, **kw):
         """Enqueue one clip; processed frames accumulate in
-        ``request.out`` as (frame,) int32 arrays."""
-        return super().submit(frames, max_frames)
+        ``request.out`` as (frame,) int32 arrays.  Policy keywords
+        (``deadline_ms`` / ``ttft_deadline_ms``) pass through."""
+        return super().submit(frames, max_frames, **kw)
 
 
 def make_clip(n_frames: int, frame: int, q: int = 12, seed: int = 0,

@@ -1,6 +1,38 @@
 import os
+import signal
 import sys
+import threading
+
+import pytest
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 # for the _hypothesis_fallback shim (tests/ has no __init__.py)
 sys.path.insert(0, os.path.dirname(__file__))
+
+# Per-test wall-clock limit for the fast suite (seconds; 0 disables).  A
+# hung test — a drain loop that never drains, a deadlocked thread — fails
+# with a TimeoutError and a clean traceback instead of eating the CI job's
+# whole 30-minute budget.  `slow`-marked tests are exempt; hangs inside
+# long-running C calls are covered by pytest's faulthandler_timeout dump
+# (pyproject.toml) since SIGALRM only interrupts Python-level execution.
+_TEST_TIMEOUT_S = int(os.environ.get("REPRO_TEST_TIMEOUT_S", "300"))
+
+
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_call(item):
+    limit = 0 if item.get_closest_marker("slow") else _TEST_TIMEOUT_S
+    if (limit > 0 and hasattr(signal, "SIGALRM")
+            and threading.current_thread() is threading.main_thread()):
+        def _on_alarm(signum, frame):
+            raise TimeoutError(
+                f"test exceeded {limit}s (REPRO_TEST_TIMEOUT_S)")
+
+        old = signal.signal(signal.SIGALRM, _on_alarm)
+        signal.alarm(limit)
+        try:
+            yield
+        finally:
+            signal.alarm(0)
+            signal.signal(signal.SIGALRM, old)
+    else:
+        yield

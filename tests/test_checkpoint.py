@@ -56,3 +56,27 @@ def test_async_save():
         assert ck.all_steps() == [5]
     finally:
         shutil.rmtree(d)
+
+
+def test_same_size_bit_corruption_detected():
+    """ISSUE 8: the manifest digest catches same-size byte corruption (a
+    bad sector, not just a torn write): latest_valid_step falls back and
+    a direct restore of the corrupt step raises."""
+    import pytest
+
+    d = tempfile.mkdtemp()
+    try:
+        ck = Checkpointer(d, keep=3)
+        ck.save(1, _tree(1), blocking=True)
+        ck.save(2, _tree(2), blocking=True)
+        newest = Path(d) / "step_0000000002"
+        manifest = json.loads((newest / "manifest.json").read_text())
+        victim = newest / next(iter(manifest["arrays"].values()))["file"]
+        blob = bytearray(victim.read_bytes())
+        blob[-1] ^= 0x40                  # flip one payload bit, same size
+        victim.write_bytes(bytes(blob))
+        assert ck.latest_valid_step() == 1
+        with pytest.raises((ValueError, KeyError)):
+            ck.restore(2, _tree(0))
+    finally:
+        shutil.rmtree(d)

@@ -1,0 +1,457 @@
+"""repro.resil (ISSUE 8): fault injection, runtime guards, serving policy.
+
+Covers the primitives (bit flips, fault operand, slot guards, retry helper,
+sentinel, virtual clock), the deterministic fault schedule, and the engine
+integration on the stream workload: quarantine + requeue, deadlines on all
+three edges, backpressure (brownout-before-shed), retry exhaustion, the
+terminal-status accounting partition, recovery-trace determinism, and the
+zero-recompile contract of the guarded step.  (LM-family quarantine
+bit-identity lives in test_serve.py; the stream twin in test_stream.py;
+checkpoint digest verification in test_checkpoint.py.)
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dynamic import QoSController
+from repro.kernels.dispatch import inject_fault
+from repro.models.cache_ops import bit_flip, cache_bit_flip
+from repro.resil import (FaultEvent, FaultPlan, FaultSpec, GuardConfig,
+                         QualitySentinel, ServePolicy, VirtualClock, retry,
+                         slot_ok)
+from repro.serve.stream import StreamAdapter, StreamServeEngine, make_clip
+
+
+def _clip(frames=4, seed=0):
+    cfg = StreamAdapter().cfg
+    return make_clip(frames, cfg.frame, q=cfg.q, seed=seed)
+
+
+def _nan_at(tick, slot=0):
+    return FaultPlan(events=[FaultEvent(tick=tick, kind="nan", slot=slot,
+                                        value=float("nan"))])
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+
+def test_faultspec_parse_aliases_and_errors():
+    sp = FaultSpec.parse("seu=0.1,param=0.05,inf=0.2,latency=0.01,drop=0.02")
+    assert sp.seu_state == 0.1 and sp.seu_param == 0.05
+    assert sp.nan == 0.2 and sp.spike == 0.01 and sp.drop == 0.02
+    sp = FaultSpec.parse("nan=0.5,spike_ms=9,seu_bit=uniform")
+    assert sp.spike_ms == 9.0 and sp.seu_bit == "uniform"
+    with pytest.raises(ValueError):
+        FaultSpec.parse("gamma_ray=0.5")
+    with pytest.raises(ValueError):
+        FaultSpec.parse("nan")          # k=v required
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32,
+                                   jnp.int8])
+def test_bit_flip_is_a_single_element_involution(dtype):
+    rng = np.random.default_rng(0)
+    arr = jnp.asarray(rng.integers(-40, 40, (3, 5)), dtype)
+    idx, bit = 7, 2
+    once = bit_flip(arr, idx, bit)
+    assert np.asarray(once != arr).sum() == 1          # exactly one element
+    assert np.asarray(once).reshape(-1)[idx] != np.asarray(arr).reshape(-1)[idx]
+    twice = bit_flip(once, idx, bit)
+    np.testing.assert_array_equal(np.asarray(twice), np.asarray(arr))
+
+
+def test_bit_flip_accepts_host_numpy_leaves():
+    arr = np.arange(6, dtype=np.float32)
+    out = bit_flip(arr, 3, 30)
+    assert np.asarray(out != arr).sum() == 1
+    np.testing.assert_array_equal(np.asarray(bit_flip(out, 3, 30)), arr)
+
+
+def test_cache_bit_flip_isolates_the_slot_and_protects_length():
+    state = StreamAdapter().init_state(batch=3, max_len=0)
+    field = next(n for n in state._fields if n != "length")
+    flipped = cache_bit_flip(state, field, 1, 0, 30)
+    for name in state._fields:
+        a, b = getattr(state, name), getattr(flipped, name)
+        if name == field:
+            assert np.asarray(a[:, 1] != b[:, 1]).sum() == 1
+            np.testing.assert_array_equal(np.asarray(a[:, 0]),
+                                          np.asarray(b[:, 0]))
+            np.testing.assert_array_equal(np.asarray(a[:, 2]),
+                                          np.asarray(b[:, 2]))
+        else:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    with pytest.raises(ValueError):
+        cache_bit_flip(state, "length", 0, 0, 0)
+
+
+def test_inject_fault_identity_and_marking():
+    x = jnp.asarray(np.arange(12, dtype=np.float32).reshape(3, 4))
+    assert inject_fault(x, None) is x
+    clean = inject_fault(x, jnp.zeros(3, jnp.float32))
+    np.testing.assert_array_equal(np.asarray(clean), np.asarray(x))  # exact
+    f = jnp.asarray([0.0, np.nan, 0.0], jnp.float32)
+    hit = np.asarray(inject_fault(x, f))
+    assert np.isnan(hit[1]).all()
+    np.testing.assert_array_equal(hit[0], np.asarray(x)[0])
+    np.testing.assert_array_equal(hit[2], np.asarray(x)[2])
+    xi = jnp.asarray(np.arange(6, dtype=np.int32).reshape(3, 2))
+    hit_i = np.asarray(inject_fault(xi, f))
+    np.testing.assert_array_equal(hit_i[0], np.asarray(xi)[0])
+    assert (np.abs(hit_i[1].astype(np.int64)) >= 2**30 - 1).all()
+
+
+def test_slot_ok_finite_and_limit():
+    x = jnp.asarray([[1.0, 2.0], [np.nan, 0.0], [np.inf, 0.0], [50.0, 0.0]])
+    np.testing.assert_array_equal(np.asarray(slot_ok(x)),
+                                  [True, False, False, True])
+    np.testing.assert_array_equal(np.asarray(slot_ok(x, limit=10.0)),
+                                  [True, False, False, False])
+    xi = jnp.asarray([[5, 2], [2**30, 0]], jnp.int32)
+    np.testing.assert_array_equal(np.asarray(slot_ok(xi)), [True, True])
+    np.testing.assert_array_equal(np.asarray(slot_ok(xi, limit=100.0)),
+                                  [True, False])
+
+
+def test_retry_helper_backoff_exhaustion_and_passthrough():
+    sleeps = []
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 4:
+            raise OSError("transient")
+        return "ok"
+
+    assert retry(flaky, attempts=5, backoff=0.05, cap=0.08,
+                 sleep=sleeps.append) == "ok"
+    assert calls["n"] == 4
+    assert sleeps == [0.05, 0.08, 0.08]          # capped exponential
+
+    with pytest.raises(OSError):
+        retry(lambda: (_ for _ in ()).throw(OSError("down")),
+              attempts=2, sleep=lambda s: None)
+    with pytest.raises(KeyError):                # non-matching: immediate
+        retry(lambda: {}["x"], attempts=5, sleep=lambda s: None)
+    with pytest.raises(ValueError):
+        retry(lambda: 1, attempts=0)
+
+
+def test_quality_sentinel_window_and_modes():
+    s = QualitySentinel(1.0, mode="max", window=2)
+    assert not s.observe(5.0)           # 1 consecutive bad
+    assert s.observe(5.0)               # 2nd trips, counter resets
+    assert not s.observe(5.0)
+    assert not s.observe(0.5)           # good sample resets the streak
+    assert not s.observe(5.0)
+    assert s.trips == 1
+    p = QualitySentinel(30.0, mode="min")       # PSNR-style: low is bad
+    assert p.observe(10.0) and not p.observe(40.0)
+    with pytest.raises(ValueError):
+        QualitySentinel(1.0, mode="median")
+
+
+def test_virtual_clock():
+    c = VirtualClock(5.0)
+    assert c() == 5.0
+    c.advance(0.25)
+    assert c() == 5.25
+
+
+# ---------------------------------------------------------------------------
+# fault schedule determinism
+# ---------------------------------------------------------------------------
+
+
+def test_fault_schedule_deterministic_and_order_free():
+    spec = FaultSpec(seu_state=0.4, seu_param=0.3, nan=0.4, spike=0.2,
+                     drop=0.2)
+    adapter = StreamAdapter()
+    state = adapter.init_state(batch=2, max_len=0)
+    params = adapter.init_params()
+    a = FaultPlan(spec, seed=3).bind(state, params, 2)
+    b = FaultPlan(spec, seed=3).bind(state, params, 2)
+    fwd = [a.events_at(t) for t in range(40)]
+    rev = [b.events_at(t) for t in reversed(range(40))][::-1]
+    assert fwd == rev                   # stateless per tick
+    assert any(fwd)                     # non-vacuous at these rates
+    c = FaultPlan(spec, seed=4).bind(state, params, 2)
+    assert [c.events_at(t) for t in range(40)] != fwd
+
+
+def test_fault_plan_scripted_and_ctor_validation():
+    ev = FaultEvent(tick=3, kind="drop")
+    plan = FaultPlan(events=[ev])
+    assert plan.events_at(3) == [ev] and plan.events_at(2) == []
+    with pytest.raises(ValueError):
+        FaultPlan()
+
+
+# ---------------------------------------------------------------------------
+# engine integration (stream workload — cheap, int32, exact)
+# ---------------------------------------------------------------------------
+
+
+def test_guarded_clean_run_matches_legacy_bitwise():
+    adapter = StreamAdapter()
+    clip = _clip(frames=4)
+    legacy = StreamServeEngine(adapter, slots=2)
+    r0 = legacy.submit(clip)
+    legacy.run_until_drained()
+    guarded = StreamServeEngine(adapter, slots=2, guards=GuardConfig())
+    r1 = guarded.submit(clip)
+    guarded.run_until_drained()
+    assert len(r0.out) == len(r1.out) == 4
+    for f0, f1 in zip(r0.out, r1.out):
+        np.testing.assert_array_equal(np.asarray(f0), np.asarray(f1))
+    assert guarded.resil_log == []      # clean run: empty recovery trace
+
+
+def test_faults_imply_guards_imply_policy():
+    eng = StreamServeEngine(StreamAdapter(), slots=2,
+                            faults=FaultPlan(FaultSpec(nan=0.1)))
+    assert eng.guards is not None and eng.policy is not None
+    bare = StreamServeEngine(StreamAdapter(), slots=2)
+    assert bare.guards is None and bare.policy is None
+
+
+def test_quarantine_requeues_and_recovers():
+    eng = StreamServeEngine(StreamAdapter(), slots=1, faults=_nan_at(1))
+    req = eng.submit(_clip(frames=4))
+    eng.run_until_drained()
+    assert req.status == "ok" and req.retries == 1
+    assert len(req.out) == 4
+    events = [name for _, name, _ in eng.resil_log]
+    assert events[:3] == ["fault_injected", "guard_tripped", "retry"]
+    # recovery output is bit-identical to a never-faulted run
+    ref = StreamServeEngine(StreamAdapter(), slots=1)
+    rr = ref.submit(_clip(frames=4))
+    ref.run_until_drained()
+    for f0, f1 in zip(req.out, rr.out):
+        np.testing.assert_array_equal(np.asarray(f0), np.asarray(f1))
+
+
+def test_retry_exhaustion_fails_the_request():
+    # a NaN every tick: the request can never complete its 3 frames
+    events = [FaultEvent(tick=t, kind="nan", slot=0, value=float("nan"))
+              for t in range(200)]
+    eng = StreamServeEngine(StreamAdapter(), slots=1,
+                            faults=FaultPlan(events=events),
+                            policy=ServePolicy(max_retries=2,
+                                               backoff_ms=0.01))
+    req = eng.submit(_clip(frames=3))
+    eng.run_until_drained(max_ticks=500)
+    assert req.status == "failed" and req.done
+    assert req.retries == 3             # initial + 2 requeues, then fail
+    assert int(eng.stats.c_failed.value) == 1
+    assert int(eng.stats.c_retries.value) == 2
+    assert eng.done == [req]            # terminated exactly once
+
+
+def test_deadline_edges_queue_and_active():
+    clock = VirtualClock()
+    eng = StreamServeEngine(StreamAdapter(), slots=1, clock=clock,
+                            guards=GuardConfig(), policy=ServePolicy())
+    occupant = eng.submit(_clip(frames=8))
+    queued = eng.submit(_clip(frames=2), deadline_ms=5.0)
+    active = eng.submit(_clip(frames=30), deadline_ms=40.0)
+    for _ in range(60):
+        eng.tick()
+        clock.advance(0.002)            # 2 virtual ms per tick
+        if all(r.done for r in (occupant, queued, active)):
+            break
+    assert occupant.status == "ok"
+    assert queued.status == "deadline"  # expired before a slot freed
+    assert active.status == "deadline"  # admitted, too slow to finish
+    edges = {dict(args).get("edge") for _, name, args in eng.resil_log
+             if name == "deadline_miss"}
+    assert edges == {"queue", "active"}
+    assert len(eng.done) == 3           # nothing lost
+
+
+def test_deadline_ttft_edge_under_dropped_ticks():
+    # dropped ticks starve the first emission (stream otherwise emits on
+    # its admission tick), so the TTFT cut is what terminates the request
+    clock = VirtualClock()
+    drops = [FaultEvent(tick=t, kind="drop") for t in range(8)]
+    eng = StreamServeEngine(StreamAdapter(), slots=1, clock=clock,
+                            faults=FaultPlan(events=drops),
+                            policy=ServePolicy())
+    req = eng.submit(_clip(frames=2), ttft_deadline_ms=5.0)
+    for _ in range(20):
+        eng.tick()
+        clock.advance(0.002)
+        if req.done:
+            break
+    assert req.status == "deadline" and req.out == []
+    assert int(eng.stats.c_deadline_miss.labels(edge="ttft").value) == 1
+
+
+def test_backpressure_brownout_before_shed():
+    cfg = StreamAdapter().cfg
+    ladder = [{"degrees": [e] * 3} for e in (8, 6, 4)]
+    clock = VirtualClock()
+    qos = QoSController(ladder=ladder, low_water=0.25, high_water=0.75,
+                        cooldown_steps=3)
+    eng = StreamServeEngine(StreamAdapter(), slots=1, qos=qos, clock=clock,
+                            policy=ServePolicy(max_queue=1, brownout=True),
+                            guards=GuardConfig())
+    reqs = [eng.submit(_clip(frames=2, seed=i)) for i in range(6)]
+    for _ in range(40):
+        eng.tick()
+        clock.advance(0.001)
+        if all(r.done for r in reqs):
+            break
+    # ladder walked before anything shed: 2 brownout rungs (8 -> 6 -> 4),
+    # then overflow shedding newest-first
+    assert int(eng.stats.c_brownout.value) == 2
+    assert qos.degree == 2
+    statuses = [r.status for r in reqs]
+    assert statuses.count("shed") >= 1
+    shed_order = [dict(a)["rid"] for _, n, a in eng.resil_log if n == "shed"]
+    assert shed_order == sorted(shed_order, reverse=True)  # newest first
+    assert len(eng.done) == len(reqs)
+    # shed-only twin at the same traffic sheds MORE (no ladder to spend)
+    clock2 = VirtualClock()
+    only = StreamServeEngine(StreamAdapter(), slots=1, clock=clock2,
+                             policy=ServePolicy(max_queue=1, brownout=False),
+                             guards=GuardConfig())
+    reqs2 = [only.submit(_clip(frames=2, seed=i)) for i in range(6)]
+    for _ in range(40):
+        only.tick()
+        clock2.advance(0.001)
+        if all(r.done for r in reqs2):
+            break
+    assert ([r.status for r in reqs2].count("shed")
+            > statuses.count("shed"))
+
+
+def test_queue_age_shedding():
+    clock = VirtualClock()
+    eng = StreamServeEngine(StreamAdapter(), slots=1, clock=clock,
+                            guards=GuardConfig(),
+                            policy=ServePolicy(max_queue_age_ms=4.0))
+    eng.submit(_clip(frames=8))
+    stale = eng.submit(_clip(frames=2))
+    for _ in range(20):
+        eng.tick()
+        clock.advance(0.002)
+        if stale.done:
+            break
+    assert stale.status == "shed"
+    assert int(eng.stats.c_shed.labels(reason="stale").value) == 1
+
+
+def test_recovery_trace_determinism_same_seed():
+    spec = FaultSpec(seu_state=0.25, seu_param=0.15, nan=0.25, drop=0.1)
+
+    def run(seed):
+        eng = StreamServeEngine(StreamAdapter(), slots=2,
+                                faults=FaultPlan(spec, seed=seed),
+                                policy=ServePolicy(max_retries=8,
+                                                   backoff_ms=0.01))
+        reqs = [eng.submit(_clip(frames=3, seed=i)) for i in range(4)]
+        eng.run_until_drained(max_ticks=2000)
+        outs = [tuple(np.asarray(f).tobytes() for f in r.out) for r in reqs]
+        return eng.faults.injected, eng.resil_log, outs
+
+    inj_a, log_a, outs_a = run(11)
+    inj_b, log_b, outs_b = run(11)
+    assert inj_a == inj_b and log_a == log_b and outs_a == outs_b
+    assert inj_a                          # the storm actually injected
+    inj_c, log_c, _ = run(12)
+    assert (inj_c, log_c) != (inj_a, log_a)
+
+
+def test_accounting_partition_under_storm():
+    spec = FaultSpec(seu_state=0.2, nan=0.3, drop=0.1)
+    clock = VirtualClock()
+    eng = StreamServeEngine(StreamAdapter(), slots=2, clock=clock,
+                            faults=FaultPlan(spec, seed=5),
+                            policy=ServePolicy(deadline_ms=25.0, max_queue=3,
+                                               max_retries=1,
+                                               backoff_ms=0.5))
+    reqs = [eng.submit(_clip(frames=3, seed=i)) for i in range(10)]
+    for _ in range(400):
+        eng.tick()
+        clock.advance(0.002)
+        if all(r.done for r in reqs):
+            break
+    assert all(r.done for r in reqs)
+    assert len(eng.done) == len(reqs)                     # zero lost
+    assert len({r.rid for r in eng.done}) == len(reqs)    # zero duplicated
+    assert {r.status for r in reqs} <= {"ok", "failed", "shed", "deadline"}
+    for r in reqs:                                        # zero over-charged
+        assert len(r.out) <= r.budget
+        if r.status == "ok":
+            assert len(r.out) == 3
+
+
+def test_sentinel_trips_and_scrubs_param_corruption():
+    adapter = StreamAdapter()
+    eng = StreamServeEngine(
+        adapter, slots=1, degree=[8, 8, 8], quality_every=1,
+        guards=GuardConfig(sentinel_threshold=200.0, sentinel_mode="min"))
+    golden = eng.params
+    # persistent param corruption, as a seu_param storm would leave behind
+    leaves, treedef = jax.tree_util.tree_flatten(eng.params)
+    leaves[0] = bit_flip(leaves[0], 0, 30)
+    eng.params = jax.tree_util.tree_unflatten(treedef, leaves)
+    eng.submit(_clip(frames=3))
+    eng.run_until_drained()
+    trips = [a for _, n, a in eng.resil_log if n == "guard_tripped"]
+    assert any(dict(a)["reason"] == "quality" for a in trips)
+    assert eng.params is golden          # scrub rebound the golden tree
+    assert int(eng.stats.c_scrubs.value) >= 1
+
+
+def test_sentinel_requires_quality_tap():
+    with pytest.raises(ValueError):
+        StreamServeEngine(StreamAdapter(), slots=1,
+                          guards=GuardConfig(sentinel_threshold=1.0))
+
+
+def test_guarded_qos_walk_single_compile():
+    cfg = StreamAdapter().cfg
+    ladder = [{"degrees": [e] * 3} for e in (8, 7, 6, 5)]
+    qos = QoSController(ladder=ladder, low_water=0.25, high_water=0.75,
+                        cooldown_steps=2)
+    eng = StreamServeEngine(StreamAdapter(), slots=2, qos=qos,
+                            guards=GuardConfig(),
+                            faults=FaultPlan(FaultSpec(nan=0.2), seed=1),
+                            policy=ServePolicy(max_retries=5,
+                                               backoff_ms=0.01))
+    for rung in range(len(ladder)):
+        qos.degree = rung
+        eng._degree = jnp.asarray(ladder[rung]["degrees"], jnp.int32)
+        eng.submit(_clip(frames=3, seed=rung))
+        eng.run_until_drained(max_ticks=2000)
+    assert eng._step._cache_size() == 1   # rung walk + faults: no retrace
+
+
+def test_spike_advances_injected_clock():
+    clock = VirtualClock()
+    ev = FaultEvent(tick=0, kind="spike", value=0.125)
+    eng = StreamServeEngine(StreamAdapter(), slots=1, clock=clock,
+                            faults=FaultPlan(events=[ev]))
+    eng.submit(_clip(frames=2))
+    eng.run_until_drained(max_ticks=50)
+    assert math.isclose(clock(), 0.125)
+    assert int(eng.stats.c_faults.labels(kind="spike").value) == 1
+
+
+def test_dropped_tick_charges_nothing():
+    ev = FaultEvent(tick=1, kind="drop")
+    eng = StreamServeEngine(StreamAdapter(), slots=1,
+                            faults=FaultPlan(events=[ev]))
+    req = eng.submit(_clip(frames=3))
+    eng.run_until_drained(max_ticks=50)
+    assert req.status == "ok" and len(req.out) == 3
+    assert int(eng.stats.c_dropped_ticks.value) == 1
+    # the dropped tick ran no step: steps == frames, not frames + 1
+    assert int(eng.stats.c_steps.value) == 3

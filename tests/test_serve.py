@@ -235,3 +235,32 @@ def test_metrics_accounting():
     assert s["engine_decode_tokens"] >= 15
     assert all(r.t_first_token >= r.t_admitted >= r.t_enqueue for r in done)
     assert all(r.t_done >= r.t_first_token for r in done)
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_quarantine_reset_bit_identical_to_fresh_admission(arch):
+    """ISSUE 8: a guard-tripped slot is reset through the same cache_ops
+    reset a fresh admission uses, so the retried request's tokens must be
+    bit-identical to a run that never saw the fault — across every model
+    family's state layout (KV ring / Mamba recurrent / RG hybrid)."""
+    from repro.resil import FaultEvent, FaultPlan
+
+    m, params = _setup(arch)
+    prompt = np.array([5, 6, 7, 8])
+    plan = FaultPlan(events=[FaultEvent(tick=2, kind="nan", slot=0,
+                                        value=float("nan"))])
+    eng = ServeEngine(m, params, slots=2, max_len=64, faults=plan)
+    hit = eng.submit(prompt, max_new_tokens=6)
+    eng.run_until_drained()
+    assert hit.status == "ok" and hit.retries == 1
+    assert len(plan.injected) == 1
+    events = [name for _, name, _ in eng.resil_log]
+    assert events == ["fault_injected", "guard_tripped", "retry"]
+
+    from repro.resil import GuardConfig
+    ref_eng = ServeEngine(m, params, slots=2, max_len=64,
+                          guards=GuardConfig())
+    ref = ref_eng.submit(prompt, max_new_tokens=6)
+    ref_eng.run_until_drained()
+    assert hit.out_tokens == ref.out_tokens, (hit.out_tokens, ref.out_tokens)
+    assert ref_eng.resil_log == []      # the clean twin saw nothing

@@ -262,3 +262,32 @@ def test_quality_tap_records_psnr_histogram():
     (labels, hist), = fam.children.items()
     assert hist.count == eng._tap.samples
     assert hist.sum > 0                   # PSNR in dB, not a tiny rel-err
+
+
+def test_stream_quarantine_reset_bit_identical_to_fresh_admission():
+    """ISSUE 8 twin of the LM-family quarantine test: the stream slot's
+    reset after a guard trip must reproduce the never-faulted frames
+    bit-for-bit (StreamState tail/hist regions rewound exactly)."""
+    from repro.resil import FaultEvent, FaultPlan, GuardConfig
+
+    ad = _adapter()
+    clip = make_clip(5, ad.cfg.frame, q=ad.cfg.q, seed=3)
+    plan = FaultPlan(events=[FaultEvent(tick=2, kind="nan", slot=0,
+                                        value=float("nan"))])
+    eng = StreamServeEngine(ad, slots=2, faults=plan)
+    hit = eng.submit(clip)
+    # a clean neighbor shares the batch: its frames must be untouched by
+    # the other slot's quarantine
+    neighbor = eng.submit(make_clip(5, ad.cfg.frame, q=ad.cfg.q, seed=4))
+    eng.run_until_drained()
+    assert hit.status == "ok" and hit.retries == 1
+
+    ref_eng = StreamServeEngine(ad, slots=2, guards=GuardConfig())
+    ref = ref_eng.submit(clip)
+    ref_n = ref_eng.submit(make_clip(5, ad.cfg.frame, q=ad.cfg.q, seed=4))
+    ref_eng.run_until_drained()
+    assert len(hit.out) == len(ref.out) == 5
+    for got, want in zip(hit.out, ref.out):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    for got, want in zip(neighbor.out, ref_n.out):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

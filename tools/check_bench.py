@@ -2,12 +2,13 @@
 
 Thin CLI over :mod:`repro.obs.regress`.  Two modes:
 
-* default — validate the four committed ``benchmarks/BENCH_*.json``
-  records: schema-v2 meta stamp (git SHA, platform, JAX + kernel
-  backends) plus each bench's declared scale-invariant invariants
-  (error envelopes, skip-grid step ratios, fused-GEMM speedup floors,
-  planned-ladder Pareto order).  Catches hand-edits, rotted rows, and
-  regenerations that silently regressed a claim.
+* default — validate every committed ``benchmarks/BENCH_*.json``
+  record (``repro.obs.regress.BENCH_RECORDS``): schema-v2 meta stamp
+  (git SHA, platform, JAX + kernel backends) plus each bench's declared
+  scale-invariant invariants (error envelopes, skip-grid step ratios,
+  fused-GEMM speedup floors, planned-ladder Pareto order, chaos
+  brownout-dominance/containment/accounting).  Catches hand-edits,
+  rotted rows, and regenerations that silently regressed a claim.
 * ``--fresh`` — additionally re-run the bench modules in-process (tiny
   shapes when ``REPRO_BENCH_TINY=1`` is exported, as CI does) and
   require every fresh row name to exist in the committed record and the
