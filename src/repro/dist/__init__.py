@@ -1,6 +1,6 @@
-"""repro.dist — the distribution layer (DESIGN.md §5).
+"""repro.dist — the distribution layer (DESIGN.md §5, §14).
 
-Five modules, mirroring the paper's approximation philosophy applied to the
+Six modules, mirroring the paper's approximation philosophy applied to the
 interconnect instead of the multiplier datapath:
 
   meshctx       process-global mesh registry + activation-sharding helpers
@@ -9,6 +9,8 @@ interconnect instead of the multiplier datapath:
                 gradient compression and an int8 ring all-reduce
   hlo_analysis  trip-count-aware HLO text walker (dot FLOPs, collective bytes)
   elastic       surviving-device-count -> (pod, data, model) rescale planning
+  fleet         replica fleet supervision for elastic sharded serving —
+                routing, replica-loss recovery, rescale (docs/distributed_serving.md)
 
 Importing this package also installs the jax version-compatibility shims
 (``jax.shard_map`` on releases that only ship the experimental API) so model

@@ -12,7 +12,12 @@ unchanged up to accumulation order:
   * the per-data-replica microbatch is held at its full-pod value
     (``target_global_batch / (devices_per_pod / tp)``), so activation
     memory per device never grows on the shrunken mesh;
-  * lost data parallelism is bought back with ``grad_accum`` microsteps.
+  * lost data parallelism is bought back with ``grad_accum`` microsteps;
+  * ragged survivor counts (7 of 8 devices, a part-dead pod) never crash
+    the recovery path: the data axis degrades to the largest power-of-two
+    subset that factors, and the devices left over are reported as
+    ``idle_devices`` — the fleet supervisor / trainer parks them as warm
+    spares instead of aborting the rescale.
 """
 
 from __future__ import annotations
@@ -31,6 +36,7 @@ class RescalePlan:
     per_step_batch: int    # sequences per optimizer microstep (all pods)
     grad_accum: int
     effective_batch: int   # per_step_batch * grad_accum (>= target)
+    idle_devices: int = 0  # survivors the mesh cannot use (ragged counts)
 
 
 def plan_rescale(devices: int, *, target_global_batch: int, tp: int,
@@ -42,14 +48,21 @@ def plan_rescale(devices: int, *, target_global_batch: int, tp: int,
     per_pod = devices // pods
 
     model = tp
-    while model > 1 and (model > per_pod or per_pod % model):
+    while model > 1 and model > per_pod:
         model //= 2
-    data = per_pod // model
+    if per_pod % model == 0:
+        # exact factorization: use every survivor (full data parallelism)
+        data = per_pod // model
+    else:
+        # ragged count: largest power-of-two data axis that fits, surplus
+        # devices idle — recovery must never crash on an awkward survivor
+        # count (7 of 8), and power-of-two replica groups keep collective
+        # rings / replica routing uniform
+        data = 1
+        while data * 2 * model <= per_pod:
+            data *= 2
     used = pods * data * model
-    if used != devices:
-        raise ValueError(
-            f"{devices} devices do not factor into pods={pods} x data={data} "
-            f"x model={model}; drain {devices - used} or pass a different tp")
+    idle = devices - used
 
     if pods > 1:
         mesh_shape: tuple[int, ...] = (pods, data, model)
@@ -73,4 +86,5 @@ def plan_rescale(devices: int, *, target_global_batch: int, tp: int,
         per_step_batch=per_step,
         grad_accum=grad_accum,
         effective_batch=per_step * grad_accum,
+        idle_devices=idle,
     )

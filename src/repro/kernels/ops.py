@@ -22,6 +22,7 @@ exact for K <= 2^15); wider studies use core.axmult numpy mirrors.
 
 from __future__ import annotations
 
+import contextlib
 import os
 from typing import Optional
 
@@ -164,6 +165,22 @@ _ring_dx_matmul.defvjp(_ring_dx_fwd, _ring_dx_bwd)
 
 _RING_PATHS = ("/wo", "/down", "/out_proj")
 _RING_DX_PATHS = ("/wq", "/wk", "/wv", "/up", "/gate", "unembed")
+
+
+@contextlib.contextmanager
+def ring_tp(enabled: bool = True):
+    """Scoped REPRO_RING_TP: route the TP output reductions through the
+    int8 ring while tracing under this context.  The flag is read at trace
+    time, so wrapping the *first call* of a jitted step (which compiles
+    once) is enough — the sharded serve engine uses this to turn the lever
+    on per-engine instead of per-process."""
+    global _RING_TP
+    prev = _RING_TP
+    _RING_TP = bool(enabled)
+    try:
+        yield
+    finally:
+        _RING_TP = prev
 
 
 def _quantize_per_tensor(x: Array, bits: int) -> tuple[Array, Array]:

@@ -10,11 +10,22 @@
       --plan plans/approx_plan.json --qos --metrics
   # streaming DSP/vision pipeline (Ch. 7 accelerators) on the same engine:
   python -m repro.launch.serve --workload stream --requests 8 --qos --metrics
+  # elastic sharded fleet: 3 tensor-parallel replicas, int8 ring
+  # collectives, survive a seeded replica loss live (docs/distributed_serving.md):
+  python -m repro.launch.serve --replicas 3 --tp 2 --ring \
+      --faults replica_loss=0.02 --metrics
 
 ``--workload lm`` (default) decodes tokens; ``--workload stream`` serves
 frame clips through the approximate FIR + conv2d pipeline
 (repro.serve.stream) — same slot lifecycle, continuous batching, plan
 ladder, QoS controller, and observability surfaces.
+
+``--replicas N`` (N > 1) lifts either workload onto a
+:class:`repro.dist.fleet.FleetSupervisor`: N data-parallel replica
+engines — for lm, each a :class:`repro.serve.sharded.ShardedServeEngine`
+on its own ``(1, tp)`` mesh slice — with least-loaded routing, fleet-level
+``replica_loss`` fault injection, queue migration + in-flight rewind on
+replica death, and ``plan_rescale`` survivor-mesh replanning.
 
 On a TPU pod the full configs drive the same engine with the decode
 sharding proven by the dry-run (KV cache TP over the model axis, optional
@@ -38,6 +49,24 @@ from repro.serve.engine import ServeEngine
 from repro.serve.metrics import summarize
 
 
+def _policy_from_args(args):
+    """ServePolicy from the CLI flags, or None when no policy flag is set."""
+    if (args.deadline_ms is None and args.retries is None
+            and args.shed is None and not args.brownout):
+        return None
+    from repro.resil import ServePolicy
+
+    if args.brownout and not args.qos:
+        raise SystemExit("--brownout degrades the QoS ladder under "
+                         "overload: it needs --qos (or --plan with "
+                         "--qos) to have a ladder to walk")
+    return ServePolicy(
+        deadline_ms=args.deadline_ms,
+        max_retries=args.retries if args.retries is not None else 2,
+        max_queue=args.shed,
+        brownout=args.brownout)
+
+
 def _resil_kwargs(args) -> dict:
     """Build the engine's resilience kwargs from the CLI flags (shared by
     both workloads — the resil subsystem is workload-generic).  Empty dict
@@ -50,20 +79,35 @@ def _resil_kwargs(args) -> dict:
         kw["faults"] = FaultPlan(FaultSpec.parse(args.faults),
                                  seed=args.fault_seed)
         kw["guards"] = GuardConfig()
-    if (args.deadline_ms is not None or args.retries is not None
-            or args.shed is not None or args.brownout):
-        from repro.resil import ServePolicy
-
-        kw["policy"] = ServePolicy(
-            deadline_ms=args.deadline_ms,
-            max_retries=args.retries if args.retries is not None else 2,
-            max_queue=args.shed,
-            brownout=args.brownout)
-        if args.brownout and not args.qos:
-            raise SystemExit("--brownout degrades the QoS ladder under "
-                             "overload: it needs --qos (or --plan with "
-                             "--qos) to have a ladder to walk")
+    policy = _policy_from_args(args)
+    if policy is not None:
+        kw["policy"] = policy
     return kw
+
+
+def _fleet_fault_plans(args, replicas: int):
+    """Split ``--faults`` for a fleet: ``replica_loss`` is drawn by one
+    fleet-level plan (the supervisor binds it to the replica count); the
+    engine-level kinds become one plan per replica, seed-offset so the
+    replicas see distinct storms, with ``replica_loss`` zeroed — engines
+    record-but-ignore the kind, so leaving it in would silently drop the
+    configured rate."""
+    if not args.faults:
+        return None, [None] * replicas
+    import dataclasses
+
+    from repro.resil import FaultPlan, FaultSpec
+
+    spec = FaultSpec.parse(args.faults)
+    fleet_plan = (FaultPlan(FaultSpec(replica_loss=spec.replica_loss),
+                            seed=args.fault_seed)
+                  if spec.replica_loss else None)
+    espec = dataclasses.replace(spec, replica_loss=0.0)
+    if not any((espec.seu_state, espec.seu_param, espec.nan, espec.spike,
+                espec.drop)):
+        return fleet_plan, [None] * replicas
+    return fleet_plan, [FaultPlan(espec, seed=args.fault_seed + rid)
+                        for rid in range(replicas)]
 
 
 def _print_resil(eng, done) -> None:
@@ -136,6 +180,123 @@ def _serve_stream(args) -> None:
     _write_obs(args)
 
 
+def _serve_fleet(args) -> None:
+    """--replicas N: a data-parallel fleet of engines under a
+    FleetSupervisor — per-replica mesh slices, least-loaded routing,
+    replica-loss survival (migrate + rewind + plan_rescale).  Both
+    workloads ride the same supervisor; lm replicas are sharded engines
+    (tensor-parallel over the replica's model axis, optional int8 ring
+    collectives on the decode path)."""
+    from repro.dist.fleet import FleetSupervisor
+    from repro.resil import GuardConfig
+
+    tp = args.tp if args.tp else int(args.mesh.split("x")[1])
+    fleet_plan, engine_plans = _fleet_fault_plans(args, args.replicas)
+    policy = _policy_from_args(args)
+    registry = obs_metrics.get_registry() if args.metrics_out else None
+
+    def engine_kwargs(rid: int) -> dict:
+        kw: dict = {"slots": args.slots, "seed": args.seed,
+                    "registry": registry,
+                    "quality_every": args.quality_every,
+                    "prepack": not args.no_prepack}
+        if engine_plans[rid] is not None:
+            kw["faults"] = engine_plans[rid]
+            kw["guards"] = GuardConfig()
+        if policy is not None:
+            kw["policy"] = policy
+        return kw
+
+    if args.workload == "stream":
+        from repro.serve.stream import (StreamAdapter, StreamServeEngine,
+                                        make_clip)
+
+        adapter = StreamAdapter()
+        scfg = adapter.cfg
+        ladder = [{"degrees": [e] * (scfg.n_layers + 1)}
+                  for e in (8, 7, 6, 5)]
+
+        def build(mesh, rid):
+            # QoS controllers are stateful: one per replica, never shared
+            qos = QoSController(ladder=ladder, low_water=0.25,
+                                high_water=0.75, cooldown_steps=8
+                                ) if args.qos else None
+            return StreamServeEngine(adapter, qos=qos, **engine_kwargs(rid))
+
+        payloads = [make_clip(args.frames, scfg.frame, q=scfg.q, seed=i)
+                    for i in range(args.requests)]
+        budget = None
+        unit = "frames"
+    else:
+        from repro.serve.sharded import ShardedServeEngine
+
+        cfg = get_config(args.arch)
+        plan = None
+        if args.plan is not None:
+            from repro.tune import ApproxPlan
+
+            plan = ApproxPlan.load(args.plan)
+            plan.validate_for(cfg)
+            apolicy = plan.policy(dynamic=True)
+        else:
+            try:
+                apolicy = policy_from_flag(args.approx, dynamic=args.qos)
+            except ValueError as e:
+                raise SystemExit(str(e))
+        model = build_model(cfg, apolicy)
+        params = model.init(jax.random.PRNGKey(0), tp=tp)
+
+        def build(mesh, rid):
+            qos = QoSController(ladder=[{"ebits": e} for e in (8, 7, 6, 5)],
+                                low_water=0.25, high_water=0.75,
+                                cooldown_steps=8) if args.qos else None
+            return ShardedServeEngine(
+                model, params, mesh=mesh, ring=args.ring, max_len=512,
+                eos_id=args.eos_id, greedy=args.temperature <= 0,
+                temperature=max(args.temperature, 1e-6), top_k=args.top_k,
+                qos=qos, plan=plan, **engine_kwargs(rid))
+
+        rng = np.random.default_rng(args.seed)
+        payloads = [rng.integers(0, cfg.vocab, int(rng.integers(2, 10)))
+                    for _ in range(args.requests)]
+        budget = args.new_tokens
+        unit = "tokens"
+
+    sup = FleetSupervisor(build, args.replicas, tp=tp, faults=fleet_plan,
+                          policy=policy, registry=registry,
+                          rescale_ms=args.rescale_ms)
+    t0 = time.time()
+    for p in payloads:
+        sup.submit(p, budget)
+    done = sup.run_until_drained()
+    dt = time.time() - t0
+    units = sum(len(r.out) for r in done)
+    counts = sup.status_counts()
+    status = " ".join(f"{k}={v}" for k, v in sorted(counts.items()))
+    print(f"[launch.serve] fleet: {len(done)} reqs on {args.replicas} "
+          f"replica(s) x tp={tp}, {len(sup.live)} up at exit, {units} "
+          f"{unit}, {dt:.2f}s [{status}] "
+          f"[kernels={kdispatch.resolved_backend()}]")
+    if sup.rescales:
+        plan = sup.rescales[-1]
+        print(f"[launch.serve]   last rescale: data={plan.data} "
+              f"model={plan.model} idle={plan.idle_devices} "
+              f"({len(sup.rescales)} rescale(s))")
+    if args.metrics:
+        events: dict = {}
+        for _, name, _ in sup.resil_log:
+            events[name] = events.get(name, 0) + 1
+        if events:
+            line = " ".join(f"{k}={v}" for k, v in sorted(events.items()))
+            print(f"[launch.serve]   fleet events: {line}")
+        for r in sup.replicas:
+            served = len(r.engine.done)
+            state = "up" if r.alive else f"dead@tick{r.died_at}"
+            print(f"[launch.serve]   replica {r.rid}: {state}, "
+                  f"{served} reqs finished")
+    _write_obs(args)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--workload", default="lm", choices=("lm", "stream"),
@@ -149,6 +310,23 @@ def main() -> None:
     ap.add_argument("--frames", type=int, default=8,
                     help="frames per clip (--workload stream)")
     ap.add_argument("--mesh", default="1x1")
+    # -- elastic fleet (repro.dist.fleet; docs/distributed_serving.md) ----
+    ap.add_argument("--replicas", type=int, default=1, metavar="N",
+                    help="serve through a FleetSupervisor over N "
+                         "data-parallel replica engines (N > 1); each lm "
+                         "replica is a ShardedServeEngine on its own "
+                         "(1, tp) mesh slice")
+    ap.add_argument("--tp", type=int, default=0, metavar="M",
+                    help="tensor-parallel degree per replica (fleet mode; "
+                         "default: the model axis of --mesh)")
+    ap.add_argument("--ring", action="store_true",
+                    help="route the sharded decode's row-parallel "
+                         "reductions through the int8 ppermute ring "
+                         "(compressed wire bytes, calibrated error "
+                         "envelope)")
+    ap.add_argument("--rescale-ms", type=float, default=5.0,
+                    help="modeled survivor-mesh re-shard latency charged "
+                         "per rescale (repro_rescale_seconds histogram)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; > 0 enables categorical sampling")
     ap.add_argument("--top-k", type=int, default=0,
@@ -213,7 +391,10 @@ def main() -> None:
                     help="inject a seeded fault storm: comma list of "
                          "kind=rate — seu_state, seu_param, nan, spike, "
                          "drop (e.g. 'seu_state=0.02,nan=0.05'); enables "
-                         "runtime guards + quarantine")
+                         "runtime guards + quarantine; with --replicas, "
+                         "replica_loss=RATE kills whole replicas (drawn "
+                         "fleet-level; the engine kinds keep their "
+                         "per-replica storms)")
     ap.add_argument("--fault-seed", type=int, default=0,
                     help="fault schedule seed: the same seed reproduces "
                          "the identical injected-fault sequence and "
@@ -223,11 +404,16 @@ def main() -> None:
     kdispatch.set_backend(args.kernels)
     if args.trace_out:
         obs_trace.enable()
+    if args.replicas > 1:
+        _serve_fleet(args)
+        return
     if args.workload == "stream":
         _serve_stream(args)
         return
 
     d, m = (int(x) for x in args.mesh.split("x")[:2])
+    if args.tp:
+        m = args.tp
     meshctx.set_mesh(meshctx.make_mesh((d, m), ("data", "model")))
     cfg = get_config(args.arch)
     plan = None

@@ -2,10 +2,11 @@
 
 The committed perf records — ``benchmarks/BENCH_kernels.json``,
 ``BENCH_serving.json``, ``BENCH_gemm.json``, ``BENCH_tune.json``,
-``BENCH_stream.json``, ``BENCH_chaos.json`` — are the repo's performance
-memory: every claim in CHANGES.md (skip-grid step counts, fused-GEMM
-speedups, planned-rung dominance, stream-rung PSNR, brownout goodput
-dominance) is anchored in them.
+``BENCH_stream.json``, ``BENCH_chaos.json``, ``BENCH_elastic.json`` — are
+the repo's performance memory: every claim in CHANGES.md (skip-grid step
+counts, fused-GEMM speedups, planned-rung dominance, stream-rung PSNR,
+brownout goodput dominance, fleet goodput through replica loss) is
+anchored in them.
 Until now nothing machine-checked them, so a record could silently rot
 (a bench renamed, a speedup regressed, a hand-edited number) and CI would
 stay green.  This module makes each record's claims executable:
@@ -48,6 +49,7 @@ BENCH_RECORDS = {
     "bench_tune": "BENCH_tune.json",
     "bench_stream": "BENCH_stream.json",
     "bench_chaos": "BENCH_chaos.json",
+    "bench_elastic": "BENCH_elastic.json",
 }
 
 #: current record schema (benchmarks/run.py stamps this)
@@ -423,6 +425,96 @@ def _check_chaos(rec: dict, tiny: bool) -> list:
     return errs
 
 
+def _check_elastic(rec: dict, tiny: bool) -> list:
+    """Elastic fleet-serving invariants (ISSUE 9) — all scale-invariant:
+
+    * **goodput through the kill** — ok completions per virtual second
+      must be positive both before the replica loss and after the rescale
+      on the survivor mesh (the fleet kept serving through the event).
+    * **replica arithmetic** — ``elastic.fleet_replicas`` reads ``A->B``
+      with ``B == A - 1``: exactly one replica died, the rest survived.
+    * **exactly-once accounting** — every ``lost= / dup= / short=``
+      counter must be 0 fleet-wide, and
+      ``elastic.fleet_corrupt_payloads`` must be 0: rewound requests
+      re-decode bit-identically to the clean reference.
+    * **ragged planning** — the 7-survivor plan factors
+      (``pods*data*model + idle == devices``) with surplus devices parked
+      idle instead of the recovery path raising.
+    * **determinism** — same loss seed reproduced the kill schedule, the
+      fleet recovery trace, and every payload bit
+      (``elastic.determinism == "identical"``).
+    * **collective budget** — the int8 ring decode step moves at most
+      half the exact-f32 collective wire bytes (both measured > 0 from
+      compiled HLO).
+    """
+    errs = []
+    rows = rows_by_name(rec)
+    gp_before = _derived_float(rows, "elastic.fleet_goodput_before")
+    gp_after = _derived_float(rows, "elastic.fleet_goodput_after")
+    if gp_before is None or gp_after is None:
+        errs.append("missing elastic.fleet_goodput_before/after rows")
+    else:
+        if gp_before <= 0:
+            errs.append(f"pre-kill goodput not positive ({gp_before})")
+        if gp_after <= 0:
+            errs.append(f"post-rescale goodput not positive ({gp_after}) — "
+                        f"the survivor mesh never resumed serving")
+    reps = rows.get("elastic.fleet_replicas")
+    if reps is None:
+        errs.append("missing row elastic.fleet_replicas")
+    else:
+        m = re.match(r"(\d+)->(\d+)$", reps[1])
+        if not m:
+            errs.append(f"elastic.fleet_replicas malformed: {reps[1]!r}")
+        elif int(m.group(2)) != int(m.group(1)) - 1:
+            errs.append(f"replica count {reps[1]} is not a kill-one event")
+    acct = rows.get("elastic.fleet_accounting")
+    if acct is None:
+        errs.append("missing row elastic.fleet_accounting")
+    else:
+        bad = {k: v for k, v in _kv_ints(acct[1]).items() if v != 0}
+        if bad:
+            errs.append(f"fleet accounting nonzero: {bad} (lost/duplicated/"
+                        f"short-changed requests)")
+    corrupt = _derived_float(rows, "elastic.fleet_corrupt_payloads")
+    if corrupt is None:
+        errs.append("missing row elastic.fleet_corrupt_payloads")
+    elif corrupt != 0:
+        errs.append(f"{int(corrupt)} payloads diverged from the clean "
+                    f"reference across the replica loss")
+    ragged = rows.get("elastic.ragged_plan")
+    if ragged is None:
+        errs.append("missing row elastic.ragged_plan")
+    else:
+        kv = _kv_ints(ragged[1])
+        used = kv.get("data", 0) * kv.get("model", 0)
+        if used + kv.get("idle", -1) != kv.get("devices", 0):
+            errs.append(f"ragged plan does not account for every survivor: "
+                        f"{ragged[1]!r}")
+        elif kv.get("idle", 0) < 1:
+            errs.append(f"ragged plan reports no idle devices ({ragged[1]!r})"
+                        f" — the case stopped being ragged")
+    det = rows.get("elastic.determinism")
+    if det is None:
+        errs.append("missing row elastic.determinism")
+    elif det[1] != "identical":
+        errs.append(f"elastic.determinism = {det[1]!r} — same loss seed no "
+                    f"longer reproduces the recovery")
+    cb = rows.get("elastic.decode_collective_bytes")
+    if cb is None:
+        errs.append("missing row elastic.decode_collective_bytes")
+    else:
+        kv = _kv_ints(cb[1])
+        ring, f32 = kv.get("ring", 0), kv.get("f32", 0)
+        if ring <= 0 or f32 <= 0:
+            errs.append(f"collective byte counts not positive ({cb[1]!r})")
+        elif ring > 0.5 * f32:
+            errs.append(f"int8 ring decode bytes {ring} exceed half the "
+                        f"f32 budget {f32} — collective compression "
+                        f"regressed")
+    return errs
+
+
 _CHECKS: dict = {
     "bench_kernels": _check_kernels,
     "bench_serving": _check_serving,
@@ -430,6 +522,7 @@ _CHECKS: dict = {
     "bench_tune": _check_tune,
     "bench_stream": _check_stream,
     "bench_chaos": _check_chaos,
+    "bench_elastic": _check_elastic,
 }
 
 

@@ -17,7 +17,11 @@ that spectrum against the serving stack:
   * ``spike``      — a latency spike in the engine loop (the engine stalls
     its clock);
   * ``drop``       — a dropped tick: the fused step is skipped outright
-    (no state advance, no emissions, no budget charged).
+    (no state advance, no emissions, no budget charged);
+  * ``replica_loss`` — a whole serving replica dies (fleet level: the
+    :class:`~repro.dist.fleet.FleetSupervisor` marks it dead, rewinds its
+    in-flight requests onto the survivors, and replans the mesh through
+    ``dist.elastic``; single-engine plans ignore the kind).
 
 Determinism contract: :meth:`FaultPlan.events_at` derives every draw from
 ``np.random.default_rng((seed, tick))`` — stateless per tick, so the same
@@ -46,6 +50,7 @@ _ALIASES = {
     "nan": "nan", "inf": "nan",
     "spike": "spike", "latency": "spike",
     "drop": "drop", "drop_tick": "drop",
+    "replica": "replica_loss", "replica_loss": "replica_loss",
 }
 
 
@@ -63,6 +68,9 @@ class FaultSpec:
     nan: float = 0.0
     spike: float = 0.0
     drop: float = 0.0
+    #: whole-replica loss (fleet-level; consumed by dist/fleet.py — engines
+    #: ignore the kind).  Needs :meth:`FaultPlan.bind_fleet` for a victim.
+    replica_loss: float = 0.0
     spike_ms: float = 5.0
     inf_ratio: float = 0.5
     seu_bit: object = -2
@@ -71,8 +79,8 @@ class FaultSpec:
     def parse(cls, text: str) -> "FaultSpec":
         """Parse a ``--faults`` flag string: ``"seu=0.05,nan=0.1,drop=0.01"``
         (aliases: seu/state -> seu_state, param -> seu_param, inf -> nan,
-        latency -> spike).  ``spike_ms``/``inf_ratio``/``seu_bit`` may ride
-        along by their field names."""
+        latency -> spike, replica -> replica_loss).  ``spike_ms``/
+        ``inf_ratio``/``seu_bit`` may ride along by their field names."""
         kw = {}
         for part in filter(None, (p.strip() for p in text.split(","))):
             key, _, val = part.partition("=")
@@ -142,6 +150,7 @@ class FaultPlan:
         self._fields: list[tuple[str, int, int]] = []   # (name, numel/slot, bits)
         self._leaves: list[tuple[str, int, int]] = []   # (path, numel, bits)
         self._slots = 0
+        self._replicas = 0
 
     # -- binding ---------------------------------------------------------
     def bind(self, state, params, slots: int) -> "FaultPlan":
@@ -163,6 +172,13 @@ class FaultPlan:
             if numel:
                 self._leaves.append((str(i), numel,
                                      8 * np.asarray(leaf).dtype.itemsize))
+        return self
+
+    def bind_fleet(self, replicas: int) -> "FaultPlan":
+        """Capture the fleet fault surface: ``replica_loss`` draws pick a
+        victim in ``[0, replicas)``.  Orthogonal to :meth:`bind` — a
+        fleet-level plan usually binds only this."""
+        self._replicas = int(replicas)
         return self
 
     # -- schedule --------------------------------------------------------
@@ -202,6 +218,14 @@ class FaultPlan:
             out.append(FaultEvent(tick, "spike", value=sp.spike_ms / 1e3))
         if rng.random() < sp.drop:
             out.append(FaultEvent(tick, "drop"))
+        # replica_loss draws are gated on the rate being nonzero so plans
+        # written before the kind existed keep their exact RNG sequences
+        # (an unconditional draw would shift every later kind's stream)
+        if sp.replica_loss and rng.random() < sp.replica_loss \
+                and self._replicas:
+            out.append(FaultEvent(
+                tick, "replica_loss", target="replica",
+                slot=int(rng.integers(self._replicas))))
         return out
 
     # -- application helpers (host-side; eager jnp ops) -------------------

@@ -1,0 +1,167 @@
+"""Tensor-parallel serving: the serve core on the dist mesh (DESIGN.md §14).
+
+``repro.dist`` and ``repro.serve`` meet here.  :class:`ShardedServeCore`
+runs the workload-generic engine with its parameters and decode state
+partitioned over a :class:`jax.sharding.Mesh` through the existing
+name-pattern rules (``dist/sharding.py``): column/row-parallel projections
+over the ``"model"`` axis, slot batch over the data axes.  Everything else
+— slot lifecycle, QoS ladder, guards/policy, tracing — is inherited
+unchanged from :class:`~repro.serve.engine.ServeCore`; the single fused
+step still compiles exactly once per mesh configuration (GSPMD partitions
+it), so rung walks and fault operands cause zero recompiles on the sharded
+step just as on a single device.
+
+Two collective regimes on the decode critical path:
+
+  * ``ring=False`` (default) — GSPMD inserts exact f32 all-reduces for the
+    row-parallel projections: sharded decode is bit-identical to the same
+    params served on one device (greedy token streams match exactly).
+  * ``ring=True`` — the int8 ppermute ring all-reduce from
+    ``dist.collectives`` replaces those reductions (``kernels/ops.py``
+    ring-TP lever, scoped per engine via :func:`repro.kernels.ops.ring_tp`):
+    ~4x fewer wire bytes at <2% reduction error — the dissertation's
+    approximation philosophy applied to the interconnect.
+
+:func:`lm_decode_collective_bytes` lowers one decode step and measures its
+collective bytes from the compiled HLO (``dist/hlo_analysis.py``) — the
+budget assertion ``bench_elastic`` and the dist-serve tests pin.
+
+Host-CPU dry-runs: export ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+before importing jax (the PR-1 compat shim pins the cpu platform).
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import meshctx, sharding
+from repro.kernels import ops as kops
+from repro.serve.engine import ServeCore
+from repro.serve.lm import LMAdapter, Request
+
+
+def _model_axis(mesh) -> int:
+    return int(dict(zip(mesh.axis_names, mesh.devices.shape))["model"])
+
+
+class ShardedServeCore(ServeCore):
+    """:class:`~repro.serve.engine.ServeCore` with params/state partitioned
+    over ``mesh`` and every trace/compile scoped to it.
+
+    ``mesh`` must carry a ``"model"`` axis (``meshctx.make_mesh``); the
+    slot batch shards over the remaining axes, so ``slots`` must divide by
+    the product of the data axes.  ``ring=True`` routes the tensor-parallel
+    output reductions through the int8 ring all-reduce (no-op on a 1-wide
+    model axis).  Everything else is the generic core: the same workload
+    protocol, the same resilience wiring, the same observability.
+    """
+
+    def __init__(self, workload, params, *, mesh=None, ring: bool = False,
+                 **kw):
+        self.mesh = mesh if mesh is not None else meshctx.get_mesh()
+        self.ring = bool(ring) and _model_axis(self.mesh) > 1
+        with self._mesh_ctx():
+            super().__init__(workload, params, **kw)
+            family = getattr(workload.cfg, "family", "") or ""
+            pspecs = sharding.partition_params(self.params, family)
+            self.params = jax.device_put(self.params,
+                                         sharding.named(pspecs, self.mesh))
+            cspecs = sharding.partition_cache(self.state, family)
+            self.state = jax.device_put(self.state,
+                                        sharding.named(cspecs, self.mesh))
+            if self._golden is not None:
+                # re-point the scrub source at the *sharded* tree: a scrub
+                # must restore placement along with the bits (rebinding the
+                # host copy would silently re-replicate the params)
+                self._golden = self.params
+
+    def _mesh_ctx(self):
+        """Every trace under this engine's mesh + ring lever: construction
+        (prefill/reset jits bind here) and each tick (the fused step traces
+        lazily at first call)."""
+        ctx = contextlib.ExitStack()
+        ctx.enter_context(meshctx.use_mesh(self.mesh))
+        if self.ring:
+            ctx.enter_context(kops.ring_tp())
+        return ctx
+
+    def tick(self) -> int:
+        with self._mesh_ctx():
+            return super().tick()
+
+
+class ShardedServeEngine(ShardedServeCore):
+    """LM facade over the sharded core: ``ServeEngine``'s construction
+    surface plus ``mesh=``/``ring=``.  ``tp`` defaults to the mesh's model
+    axis — params must come from ``model.init(key, tp=<model axis>)`` so
+    the padded head/expert dims divide the axis."""
+
+    def __init__(self, model, params, *, mesh=None, ring: bool = False,
+                 slots: int = 8, max_len: int = 512, eos_id: int = -1,
+                 tp: Optional[int] = None, greedy: bool = True,
+                 temperature: float = 1.0, top_k: int = 0, **kw):
+        mesh = mesh if mesh is not None else meshctx.get_mesh()
+        tp = _model_axis(mesh) if tp is None else tp
+        workload = LMAdapter(model, tp=tp, eos_id=eos_id, greedy=greedy,
+                             temperature=temperature, top_k=top_k,
+                             max_len=max_len)
+        super().__init__(workload, params, mesh=mesh, ring=ring,
+                         slots=slots, max_len=max_len, **kw)
+        self.model = model
+        self.tp = tp
+        self.eos_id = eos_id
+
+    @property
+    def cache(self):
+        return self.state
+
+    def submit(self, prompt, max_new_tokens: int = 32, **kw) -> Request:
+        return super().submit(prompt, max_new_tokens, **kw)
+
+
+def lm_decode_collective_bytes(arch: str = "tinyllama-1.1b-smoke", *,
+                               tp: int = 2, batch: int = 2,
+                               max_len: int = 32,
+                               ring: bool = False) -> dict:
+    """Lower+compile one sharded LM decode step on a ``(1, tp)`` mesh and
+    return its collective wire bytes by kind (plus ``"total"``), measured
+    from the optimized HLO by ``dist.hlo_analysis``.  Needs ``tp`` local
+    devices.  This is the decode-step collective *budget* probe: the
+    elastic bench asserts ``ring=True`` bytes stay within half the exact
+    f32 budget."""
+    from repro.configs import get_config
+    from repro.dist.hlo_analysis import analyze_hlo
+    from repro.models import build_model
+
+    mesh = meshctx.make_mesh((1, tp), ("data", "model"))
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    ctx = contextlib.ExitStack()
+    ctx.enter_context(meshctx.use_mesh(mesh))
+    if ring and tp > 1:
+        ctx.enter_context(kops.ring_tp())
+    with ctx:
+        params = model.init(jax.random.PRNGKey(0), tp=tp)
+        cache = model.init_cache(tp=tp, batch=batch, max_len=max_len)
+        params = jax.device_put(
+            params, sharding.named(sharding.partition_params(params,
+                                                             cfg.family),
+                                   mesh))
+        cache = jax.device_put(
+            cache, sharding.named(sharding.partition_cache(cache,
+                                                           cfg.family),
+                                  mesh))
+        tokens = jnp.zeros((batch, 1), jnp.int32)
+
+        def step(p, c, t):
+            return model.decode_step(p, c, t, tp=tp)
+
+        txt = jax.jit(step).lower(params, cache, tokens).compile().as_text()
+    rep = analyze_hlo(txt)
+    out = dict(rep.collectives.bytes_by_kind)
+    out["total"] = rep.collectives.total_bytes
+    return out

@@ -1,3 +1,5 @@
+import pytest
+
 from repro.dist.elastic import plan_rescale
 
 
@@ -21,3 +23,44 @@ def test_multi_pod():
 def test_tiny_survivor_degrades_tp():
     p = plan_rescale(8, target_global_batch=64, tp=16)
     assert p.model == 8 and p.n_devices == 8
+
+
+# -- ragged survivor counts (ISSUE 9): degrade, never crash ------------------
+
+
+def test_ragged_seven_of_eight():
+    # the motivating case: one device of eight dies under a tp=4 mesh —
+    # this used to raise out of the recovery path
+    p = plan_rescale(7, target_global_batch=64, tp=4)
+    assert p.model == 4 and p.data == 1 and p.idle_devices == 3
+    assert p.data * p.model * p.pods + p.idle_devices == 7
+    # tp=1 has no raggedness: seven one-device replicas all serve
+    p1 = plan_rescale(7, target_global_batch=64, tp=1)
+    assert p1.data == 7 and p1.idle_devices == 0
+
+
+def test_ragged_keeps_requested_tp():
+    # tp must survive raggedness: every replica group still needs exactly
+    # tp devices, so the data axis absorbs the degradation
+    p = plan_rescale(7, target_global_batch=64, tp=2)
+    assert p.model == 2 and p.data == 2 and p.idle_devices == 3
+
+
+@pytest.mark.parametrize("devices", list(range(1, 33)))
+@pytest.mark.parametrize("tp", [1, 2, 4, 8])
+def test_every_survivor_count_plans(devices, tp):
+    # the recovery path never raises and accounts for every device; exact
+    # factorizations use all survivors, ragged ones degrade to a
+    # power-of-two data axis and park the surplus
+    p = plan_rescale(devices, target_global_batch=64, tp=tp)
+    assert p.pods * p.data * p.model + p.idle_devices == devices
+    if p.idle_devices:
+        assert p.data & (p.data - 1) == 0
+    assert p.idle_devices >= 0
+    assert p.effective_batch >= 64
+
+
+def test_exact_counts_have_no_idle():
+    for devices, tp in [(8, 2), (16, 4), (4, 1), (256, 16)]:
+        assert plan_rescale(devices, target_global_batch=64,
+                            tp=tp).idle_devices == 0
