@@ -1,0 +1,187 @@
+"""Admission-pipeline benchmarks (ISSUE 10): bucketed AOT prefill, packed
+prompts, chunked prefill.
+
+Three scenarios on the dense smoke LM, each backing one acceptance claim:
+
+* **zero recompiles** — an engine warmed at construction serves a bursty
+  mix of 20 random-length prompts; the jit trace counters must not move
+  (``post_warmup_traces=0``): the bucket ladder closed the executable set.
+* **packed throughput** — the bursty short-prompt burst, admitted as
+  pack=4 bucketed prefill calls vs one-row-at-a-time calls (same warmed
+  executables).  The headline is admitted-requests/s; the gate pins
+  packed >= 1.5x sequential (full-shape run).
+* **chunked TTFT** — one 120-token prompt arrives with a stream of short
+  requests behind it, under a :class:`~repro.resil.policy.VirtualClock`
+  with a modeled per-admitted-token device cost (CPU emulation cannot show
+  prefill-length effects on wall clock).  Chunked admission (8-token
+  chunks interleaved with decode) must bound the short-request TTFT p99
+  below the unchunked monolithic-prefill baseline.
+
+REPRO_BENCH_TINY=1 shrinks iteration counts for the CI bench-smoke job.
+Committed record: benchmarks/BENCH_admission.json (full-shape run).
+"""
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.resil import VirtualClock
+from repro.serve.admission import AdmissionConfig
+from repro.serve.engine import ServeEngine
+
+_TINY = os.environ.get("REPRO_BENCH_TINY", "0") == "1"
+_ARCH = "tinyllama-1.1b-smoke"
+
+#: modeled device cost per admitted prompt token (virtual ms) — what makes
+#: a monolithic 128-bucket prefill visibly stall the tick on the clock
+_MS_PER_UNIT = 0.25
+#: modeled fused decode-step cost per tick (virtual ms)
+_MS_PER_STEP = 1.0
+
+_CACHE: dict = {}
+
+
+def _model():
+    if not _CACHE:
+        cfg = get_config(_ARCH)
+        m = build_model(cfg)
+        _CACHE["m"] = m
+        _CACHE["params"] = m.init(jax.random.PRNGKey(0), tp=1)
+    return _CACHE["m"], _CACHE["params"]
+
+
+def _prompts(n, lo, hi, seed):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, _CACHE["m"].cfg.vocab,
+                         int(rng.integers(lo, hi))).astype(np.int32)
+            for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# scenario 1: warmup closes the executable set
+# ---------------------------------------------------------------------------
+
+
+def _zero_recompile():
+    m, params = _model()
+    adm = AdmissionConfig(pack=2, chunk_tokens=8)
+    t0 = time.perf_counter()
+    eng = ServeEngine(m, params, slots=4, max_len=64, seed=0,
+                      admission=adm, emitter=False)
+    warm_us = (time.perf_counter() - t0) * 1e6
+    wl = eng.workload
+    before = dict(wl.trace_counts)
+    n = 6 if _TINY else 20
+    reqs = [eng.submit(p, 3)
+            for p in _prompts(n, 2, wl.admission.buckets[-1] - 3, seed=5)]
+    eng.run_until_drained()
+    post = sum(wl.trace_counts[k] - before.get(k, 0)
+               for k in wl.trace_counts)
+    ok = sum(1 for r in reqs if r.status == "ok")
+    yield ("adm.warmup", f"{warm_us:.1f}",
+           f"buckets={len(wl.admission.buckets)}")
+    yield ("adm.zero_recompile", "0",
+           f"post_warmup_traces={post};buckets={len(wl.admission.buckets)};"
+           f"prompts={n};ok={ok}")
+
+
+# ---------------------------------------------------------------------------
+# scenario 2: packed vs sequential admitted-requests/s
+# ---------------------------------------------------------------------------
+
+
+def _packed():
+    m, params = _model()
+    iters = 4 if _TINY else 30
+    lens = [3, 7, 11, 14]                      # one 16-bucket, four rows
+
+    def build(pack):
+        adm = AdmissionConfig(buckets=(16,), pack=pack, warmup=True)
+        eng = ServeEngine(m, params, slots=4, max_len=32, seed=0,
+                          admission=adm, emitter=False)
+        rng = np.random.default_rng(7)
+        reqs = [eng.submit(rng.integers(1, m.cfg.vocab, l).astype(np.int32),
+                           2) for l in lens]
+        # pull them back out of the queue: the bench times admission alone
+        eng.queue.clear()
+        return eng, reqs
+
+    def admit_all(eng, reqs, pack):
+        wl = eng.workload
+        for i in range(0, len(reqs), pack):
+            group = [(s, r) for s, r in enumerate(reqs[i:i + pack])]
+            eng.state, _ = wl.admit_batch(eng.params, eng.state, eng._feed,
+                                          group, eng._degree)
+        jax.block_until_ready(eng.state)
+
+    walls = {}
+    for pack in (4, 1):
+        eng, reqs = build(pack)
+        admit_all(eng, reqs, pack)             # warm the exact call pattern
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            for r in reqs:
+                r.cursor = 0
+            admit_all(eng, reqs, pack)
+        walls[pack] = time.perf_counter() - t0
+    n_req = len(lens) * iters
+    rps = {p: n_req / walls[p] for p in walls}
+    speedup = walls[1] / walls[4]
+    yield ("adm.packed_prefill", f"{walls[4] / iters * 1e6:.1f}",
+           f"rps={int(rps[4])}")
+    yield ("adm.sequential_prefill", f"{walls[1] / iters * 1e6:.1f}",
+           f"rps={int(rps[1])}")
+    yield ("adm.packed_speedup", "0", f"speedup_x100={int(speedup * 100)}")
+
+
+# ---------------------------------------------------------------------------
+# scenario 3: chunked prefill bounds short-request TTFT
+# ---------------------------------------------------------------------------
+
+
+def _ttft_run(chunk_tokens):
+    m, params = _model()
+    adm = AdmissionConfig(pack=1, chunk_tokens=chunk_tokens)
+    clock = VirtualClock()
+    eng = ServeEngine(m, params, slots=2, max_len=160, seed=0,
+                      admission=adm, emitter=False, clock=clock)
+    rng = np.random.default_rng(11)
+    long = eng.submit(rng.integers(1, m.cfg.vocab, 120).astype(np.int32), 4)
+    shorts = [eng.submit(rng.integers(1, m.cfg.vocab, 3).astype(np.int32), 2)
+              for _ in range(4)]
+    units_seen = 0.0
+    for _ in range(400):
+        eng.tick()
+        units = eng.stats.c_admit_units.value
+        clock.advance(((units - units_seen) * _MS_PER_UNIT
+                       + _MS_PER_STEP) / 1e3)
+        units_seen = units
+        if long.done and all(r.done for r in shorts):
+            break
+    ttfts = sorted((r.t_first_emit - r.t_enqueue) * 1e6 for r in shorts)
+    p99 = ttfts[max(int(np.ceil(len(ttfts) * 0.99)) - 1, 0)]
+    reqs = [long] + shorts
+    lost = len(reqs) - len(eng.done)
+    dup = len(eng.done) - len({r.rid for r in eng.done})
+    short = sum(1 for r in reqs
+                if r.status == "ok" and len(r.out) != r.budget)
+    return p99, f"lost={lost},dup={dup},short={short}"
+
+
+def _chunked_ttft():
+    p99_c, acct_c = _ttft_run(8)
+    p99_u, acct_u = _ttft_run(0)
+    yield ("adm.chunked_ttft", "0",
+           f"chunked_p99_us={int(p99_c)};unchunked_p99_us={int(p99_u)}")
+    yield ("adm.chunked_accounting", "0", f"{acct_c};{acct_u}")
+
+
+def rows():
+    out = []
+    out += list(_zero_recompile())
+    out += list(_packed())
+    out += list(_chunked_ttft())
+    return out

@@ -21,7 +21,8 @@ _JSON_MODULES = {"bench_kernels": "BENCH_kernels.json",
                  "bench_tune": "BENCH_tune.json",
                  "bench_stream": "BENCH_stream.json",
                  "bench_chaos": "BENCH_chaos.json",
-                 "bench_elastic": "BENCH_elastic.json"}
+                 "bench_elastic": "BENCH_elastic.json",
+                 "bench_admission": "BENCH_admission.json"}
 
 # bump when the record layout changes; repro.obs.regress pins this
 SCHEMA_VERSION = 2
@@ -75,14 +76,16 @@ def _write_record(name: str, rows: list) -> None:
 
 
 def main() -> None:
-    from benchmarks import (bench_chaos, bench_cnn, bench_dlsb, bench_dsp,
-                            bench_dynamic, bench_elastic, bench_gemm,
-                            bench_kernels, bench_pareto, bench_pr, bench_rad,
-                            bench_serving, bench_stream, bench_tune)
+    from benchmarks import (bench_admission, bench_chaos, bench_cnn,
+                            bench_dlsb, bench_dsp, bench_dynamic,
+                            bench_elastic, bench_gemm, bench_kernels,
+                            bench_pareto, bench_pr, bench_rad, bench_serving,
+                            bench_stream, bench_tune)
 
     mods = [bench_dlsb, bench_rad, bench_pr, bench_dynamic, bench_pareto,
             bench_dsp, bench_cnn, bench_kernels, bench_gemm, bench_tune,
-            bench_serving, bench_stream, bench_chaos, bench_elastic]
+            bench_serving, bench_stream, bench_chaos, bench_elastic,
+            bench_admission]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")
     failed = []

@@ -99,9 +99,13 @@ class FleetSupervisor:
                  tp: int = 1, clock=None, faults=None, policy=None,
                  registry: Optional[Registry] = None, tracer=None,
                  rescale_ms: float = 5.0,
-                 target_global_batch: Optional[int] = None):
+                 target_global_batch: Optional[int] = None,
+                 route_by: str = "slots"):
         if replicas < 1:
             raise ValueError("a fleet needs at least one replica")
+        if route_by not in ("slots", "backlog"):
+            raise ValueError("route_by must be 'slots' or 'backlog'")
+        self.route_by = route_by
         self.tp = int(tp)
         self._clock = clock if clock is not None else time.time
         self._tracer = (tracer if tracer is not None
@@ -159,9 +163,14 @@ class FleetSupervisor:
     # -- routing ----------------------------------------------------------
 
     def _route(self) -> Replica:
-        """Least-loaded live replica: queued + in-slot requests, ties to
-        the lowest rid (deterministic routing is part of the same-seed
-        recovery-trace contract)."""
+        """Least-loaded live replica, ties to the lowest rid (deterministic
+        routing is part of the same-seed recovery-trace contract).
+
+        ``route_by="slots"`` (default) counts requests: queued + in-slot.
+        ``route_by="backlog"`` counts admission work instead — queued
+        payload units plus the un-ingested remainder of every mid-admission
+        slot — so a replica grinding through one long chunked prompt stops
+        looking as cheap as one serving short decodes."""
         live = self.live
         if not live:
             raise RuntimeError("no live replicas")
@@ -169,6 +178,13 @@ class FleetSupervisor:
         def load(r: Replica) -> tuple:
             eng = r.engine
             busy = sum(1 for q in eng.slot_req if q is not None)
+            if self.route_by == "backlog":
+                wl = eng.workload
+                units = sum(q.payload_units for q in eng.queue)
+                units += sum(max(q.payload_units - 1 - q.cursor, 0)
+                             for q in eng.slot_req
+                             if q is not None and not wl.admit_complete(q))
+                return (units + busy, r.rid)
             return (len(eng.queue) + busy, r.rid)
 
         return min(live, key=load)
@@ -324,6 +340,9 @@ class FleetSupervisor:
                   for r in self.live) and ticks < max_ticks:
             self.tick()
             ticks += 1
+        for r in self.live:
+            if getattr(r.engine, "emitter", None) is not None:
+                r.engine.emitter.flush()
         return self.done
 
     # -- accounting -------------------------------------------------------

@@ -67,6 +67,22 @@ def _policy_from_args(args):
         brownout=args.brownout)
 
 
+def _admission_from_args(args):
+    """AdmissionConfig from the CLI flags, or None when no admission flag
+    is set (the engine then runs the legacy exact-length admission path).
+    ``--prefill-buckets auto`` derives the power-of-two ladder from the
+    engine's max_len."""
+    if not (args.prefill_buckets or args.pack > 1 or args.chunk_tokens):
+        return None
+    from repro.serve.admission import AdmissionConfig
+
+    buckets: tuple = ()
+    if args.prefill_buckets and args.prefill_buckets != "auto":
+        buckets = tuple(int(b) for b in args.prefill_buckets.split(","))
+    return AdmissionConfig(buckets=buckets, pack=max(args.pack, 1),
+                           chunk_tokens=args.chunk_tokens)
+
+
 def _resil_kwargs(args) -> dict:
     """Build the engine's resilience kwargs from the CLI flags (shared by
     both workloads — the resil subsystem is workload-generic).  Empty dict
@@ -246,6 +262,8 @@ def _serve_fleet(args) -> None:
         model = build_model(cfg, apolicy)
         params = model.init(jax.random.PRNGKey(0), tp=tp)
 
+        admission = _admission_from_args(args)
+
         def build(mesh, rid):
             qos = QoSController(ladder=[{"ebits": e} for e in (8, 7, 6, 5)],
                                 low_water=0.25, high_water=0.75,
@@ -254,7 +272,8 @@ def _serve_fleet(args) -> None:
                 model, params, mesh=mesh, ring=args.ring, max_len=512,
                 eos_id=args.eos_id, greedy=args.temperature <= 0,
                 temperature=max(args.temperature, 1e-6), top_k=args.top_k,
-                qos=qos, plan=plan, **engine_kwargs(rid))
+                qos=qos, plan=plan, admission=admission,
+                **engine_kwargs(rid))
 
         rng = np.random.default_rng(args.seed)
         payloads = [rng.integers(0, cfg.vocab, int(rng.integers(2, 10)))
@@ -264,7 +283,8 @@ def _serve_fleet(args) -> None:
 
     sup = FleetSupervisor(build, args.replicas, tp=tp, faults=fleet_plan,
                           policy=policy, registry=registry,
-                          rescale_ms=args.rescale_ms)
+                          rescale_ms=args.rescale_ms,
+                          route_by=args.route_by)
     t0 = time.time()
     for p in payloads:
         sup.submit(p, budget)
@@ -327,6 +347,30 @@ def main() -> None:
     ap.add_argument("--rescale-ms", type=float, default=5.0,
                     help="modeled survivor-mesh re-shard latency charged "
                          "per rescale (repro_rescale_seconds histogram)")
+    ap.add_argument("--route-by", default="slots",
+                    choices=("slots", "backlog"),
+                    help="fleet routing load signal: slots counts requests "
+                         "(queued + in-slot); backlog counts admission "
+                         "work in payload units, so chunked long prompts "
+                         "weigh what they cost")
+    # -- admission pipeline (repro.serve.admission; docs/serving.md) ------
+    ap.add_argument("--prefill-buckets", default=None, metavar="LIST",
+                    help="bucketed AOT prefill: comma list of ascending "
+                         "prompt-prefix lengths (e.g. 16,32,64,128), or "
+                         "'auto' for the power-of-two ladder up to "
+                         "max_len; every bucket executable is traced at "
+                         "startup, so no request compiles after warmup")
+    ap.add_argument("--pack", type=int, default=1, metavar="N",
+                    help="pack up to N short prompts into one bucketed "
+                         "prefill call (each row scatters into its own "
+                         "slot; bit-identical to sequential admission)")
+    ap.add_argument("--chunk-tokens", type=int, default=0, metavar="C",
+                    help="chunked prefill: split prompts longer than C "
+                         "into C-token chunks admitted across ticks, "
+                         "interleaved with decode, bounding short-request "
+                         "TTFT behind long arrivals (0 = off; dense "
+                         "full-attention archs only — others fall back to "
+                         "whole-prompt bucketed prefill)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; > 0 enables categorical sampling")
     ap.add_argument("--top-k", type=int, default=0,
@@ -446,6 +490,7 @@ def main() -> None:
                       top_k=args.top_k, seed=args.seed, qos=qos,
                       prepack=False, plan=plan, registry=registry,
                       quality_every=args.quality_every,
+                      admission=_admission_from_args(args),
                       **_resil_kwargs(args))
     rng = np.random.default_rng(args.seed)
     t0 = time.time()

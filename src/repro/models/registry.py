@@ -109,6 +109,47 @@ class Model:
         return transformer.lm_prefill(params, self.cfg, self.policy,
                                       cache, tokens, slot, tp, degree)
 
+    def prefill_batch(self, params, cache, tokens, slots, lengths,
+                      tp: int = 1, degree=None):
+        """Bucketed/packed prefill (serve admission pipeline, DESIGN.md §15):
+        ``tokens`` (N, Pb) rows padded to one bucket length, written into
+        ``slots`` (N,) with true ``lengths`` (N,).  Per-row bit-identical to
+        ``prefill`` at the exact length (MoE excluded — capacity routing
+        couples rows).  Dummy rows use slot >= B (scatters drop out-of-bounds
+        indices).  Returns the new cache only."""
+        if self.cfg.moe:
+            raise ValueError("bucketed prefill is exact-only for MoE "
+                             "(capacity routing couples packed rows)")
+        if self.cfg.family == "hybrid":
+            return rglru.hybrid_prefill_batch(params, self.cfg, self.policy,
+                                              cache, tokens, slots, lengths,
+                                              tp, degree)
+        if self.cfg.family == "ssm":
+            return ssm.ssm_prefill_batch(params, self.cfg, self.policy,
+                                         cache, tokens, slots, lengths,
+                                         tp, degree)
+        return transformer.lm_prefill_batch(params, self.cfg, self.policy,
+                                            cache, tokens, slots, lengths,
+                                            tp, degree)
+
+    def supports_chunked_prefill(self) -> bool:
+        """Chunked prefill is implemented for dense full-attention
+        transformers (no MoE, no sliding window, float KV cache)."""
+        return (self.cfg.family not in ("hybrid", "ssm")
+                and not self.cfg.moe and self.cfg.swa_window is None
+                and self.cfg.causal and self.cfg.frontend is None)
+
+    def prefill_chunk(self, params, cache, tokens, slot, offset, clen,
+                      tp: int = 1, degree=None):
+        """Incremental prefill of one chunk (``tokens`` (C,), ``clen`` real)
+        at position ``offset`` of ``slot``'s prompt.  Dense transformer
+        caches only — see ``supports_chunked_prefill``.  Returns the cache."""
+        if not self.supports_chunked_prefill():
+            raise ValueError(f"chunked prefill unsupported for {self.cfg.name}")
+        return transformer.lm_prefill_chunk(params, self.cfg, self.policy,
+                                            cache, tokens, slot, offset, clen,
+                                            tp, degree)
+
     def reset_slot(self, cache, slot):
         """Rewind one slot's cache region (KV/state and length) to init."""
         from repro.models.cache_ops import cache_reset_slot

@@ -91,13 +91,20 @@ def _rglru_scan(x: Array, a: Array, h0: Array | None = None):
 
 def rec_block_apply(bp, x: Array, cfg: ArchConfig, policy: ApproxPolicy,
                     path: str, degree=None,
-                    state: tuple[Array, Array] | None = None):
+                    state: tuple[Array, Array] | None = None,
+                    lengths: Array | None = None):
     """Pre-norm residual recurrent block.  state = (h (B,d), conv (B,3,d)) for
-    decode; None for train/prefill.  Returns (x_out, new_state_or_None)."""
+    decode; None for train/prefill.  Returns (x_out, new_state_or_None).
+
+    ``lengths`` (B,) gathers the returned recurrent/conv state at each row's
+    true length instead of the last position — the bucket-padded prefill path
+    (prefix results of the associative scan and causal conv are untouched by
+    a padded tail, so the gathered state is bit-identical to exact-length)."""
     h_in = L.rmsnorm_apply(bp["ln1"], x, cfg.norm_eps)
     xb = L.dense_apply(bp["wx"], h_in, policy, path + "/wx", degree)
     gb = L.dense_apply(bp["wg"], h_in, policy, path + "/wg", degree)
     conv_state = state[1] if state is not None else None
+    conv_in = xb
     xb, new_conv = L.conv1d_apply(bp["conv"], xb, conv_state)
     r = jax.nn.sigmoid(
         L.dense_apply(bp["wa"], h_in, policy, path + "/wa", degree).astype(jnp.float32))
@@ -108,7 +115,16 @@ def rec_block_apply(bp, x: Array, cfg: ArchConfig, policy: ApproxPolicy,
     gated_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xb.astype(jnp.float32))
     if state is None:
         hseq = _rglru_scan(gated_in, a)
-        new_h = hseq[:, -1]
+        if lengths is None:
+            new_h = hseq[:, -1]
+        else:
+            from repro.models.ssm import _conv_tail
+
+            idx = jnp.maximum(lengths - 1, 0)[:, None, None]
+            new_h = jnp.take_along_axis(hseq, idx, axis=1)[:, 0]
+            new_h = jnp.where(lengths[:, None] > 0, new_h, 0.0)
+            width = bp["conv"]["w"].shape[0]
+            new_conv = _conv_tail(conv_in, lengths, width)
     else:
         h_prev = state[0]
         hseq = (a[:, 0] * h_prev + gated_in[:, 0])[:, None]
@@ -309,6 +325,79 @@ def hybrid_prefill(params, cfg: ArchConfig, policy: ApproxPolicy,
     xl = L.rmsnorm_apply(params["ln_f"], x[:, -1:], cfg.norm_eps)
     logits = L.dense_apply(params["unembed"], xl, policy, "unembed", hdeg)
     return logits.astype(jnp.float32)[:, 0], new_cache
+
+
+def hybrid_prefill_batch(params, cfg: ArchConfig, policy: ApproxPolicy,
+                         cache: HybridCache, tokens: Array, slots: Array,
+                         lengths: Array, tp: int = 1, degree=None) -> HybridCache:
+    """Bucketed/packed prefill: rows (N, Pb) padded to one bucket length,
+    written into ``slots`` with true ``lengths``.  Recurrent/conv states are
+    gathered at each row's length (associative-scan prefixes are padding-
+    independent) and local-attention KV lands via a masked tail scatter —
+    per-row results are bit-identical to ``hybrid_prefill`` at the exact
+    length.  Dummy rows (slot >= B) are dropped.  Returns the cache only."""
+    gdeg, tdeg, _ = _group_degrees(degree, cfg)
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    pat = cfg.block_pattern
+    n_groups = cfg.n_layers // len(pat)
+    rec_per_group = sum(1 for p in pat if p == "rec")
+    N, Pb = tokens.shape
+    W = cache.k.shape[2]
+    ring = cfg.local_window is not None and cfg.local_window <= W
+    if Pb > W and not ring:
+        raise ValueError(f"bucket ({Pb}) exceeds cache capacity ({W})")
+    x = L.embed_apply(params["embed"], tokens, dtype)         # (N, Pb, d)
+    positions = jnp.broadcast_to(jnp.arange(Pb, dtype=jnp.int32)[None], (N, Pb))
+
+    def group_body(h, xs):
+        gp, dg = (xs, None) if gdeg is None else xs
+        nh, nc = [], []
+        gk = gv = None
+        for i, name in enumerate(pat):
+            bp = gp[f"{name}{i}"]
+            di = None if dg is None else dg[i]
+            if name == "rec":
+                h, (h_new, conv_new) = rec_block_apply(
+                    bp, h, cfg, policy, "g", di, lengths=lengths)
+                nh.append(h_new)
+                nc.append(conv_new)
+            else:
+                h, _, (gk, gv) = attn_block_apply(
+                    bp, h, cfg, tp, policy, "g", positions, di,
+                    return_kv=True)                        # k/v: (N, Pb, KVr, D)
+        return h, (gk, gv, jnp.stack(nh), jnp.stack(nc))
+
+    xs = params["groups"] if gdeg is None else (params["groups"], gdeg)
+    x, (ks, vs, nhs, ncs) = jax.lax.scan(group_body, x, xs)
+    # ks: (n_groups, N, Pb, KVr, D); nhs: (n_groups, rec_per_group, N, d)
+    new_h = [nhs.reshape(n_groups * rec_per_group, N, cfg.d_model)]
+    new_c = [ncs.reshape(n_groups * rec_per_group, N, 3, cfg.d_model)]
+    for i, bp in enumerate(params["tail"]):
+        x, (h_new, conv_new) = rec_block_apply(
+            bp, x, cfg, policy, "tail", kdispatch.site_degree(tdeg, i),
+            lengths=lengths)
+        new_h.append(h_new[None])
+        new_c.append(conv_new[None])
+    # masked tail scatter: last min(len, W) tokens at j % W, rest dropped OOB
+    j = jnp.arange(Pb, dtype=jnp.int32)[None]
+    ln = lengths[:, None]
+    valid = (j < ln) & (j >= ln - W)
+    dst = jnp.where(valid, j % W, W)                          # (N, Pb)
+    rows = jnp.arange(N)[:, None]
+    KVr, D = ks.shape[3], ks.shape[4]
+    cdt = cache.k.dtype
+    regk = jnp.zeros((n_groups, N, W, KVr, D), cdt).at[:, rows, dst].set(
+        ks.astype(cdt))
+    regv = jnp.zeros((n_groups, N, W, KVr, D), cdt).at[:, rows, dst].set(
+        vs.astype(cdt))
+    return HybridCache(
+        k=cache.k.at[:, slots].set(regk),
+        v=cache.v.at[:, slots].set(regv),
+        h=cache.h.at[:, slots].set(jnp.concatenate(new_h, axis=0)),
+        conv=cache.conv.at[:, slots].set(
+            jnp.concatenate(new_c, axis=0).astype(cache.conv.dtype)),
+        length=cache.length.at[slots].set(lengths),
+    )
 
 
 def hybrid_decode_step(params, cfg: ArchConfig, policy: ApproxPolicy,

@@ -78,14 +78,32 @@ def _segsum_decay(dtA: Array) -> tuple[Array, Array]:
     return cum, jnp.moveaxis(Lmat, -1, -3)               # (..., H, Q, Q)
 
 
+def _conv_tail(ci: Array, lengths: Array, width: int) -> Array:
+    """Per-row causal-conv state: the ``width - 1`` inputs ending at position
+    ``length - 1`` (zeros where the row is shorter).  Matches the tail slice
+    ``conv1d_apply`` keeps when every row spans the full sequence."""
+    B = ci.shape[0]
+    pad = jnp.zeros((B, width - 1, ci.shape[2]), ci.dtype)
+    xp = jnp.concatenate([pad, ci], axis=1)               # xp[t + w - 1] = ci[t]
+    idx = lengths[:, None] + jnp.arange(width - 1, dtype=jnp.int32)[None]
+    return jnp.take_along_axis(xp, idx[..., None], axis=1)
+
+
 def ssm_block_apply(bp, x_res: Array, cfg: ArchConfig, policy: ApproxPolicy,
                     path: str, degree=None,
                     state: tuple[Array, Array] | None = None,
-                    return_state: bool = False):
+                    return_state: bool = False, lengths: Array | None = None):
     """x_res: (B, S, d).  state = (h (B,H,P,N), conv (B,w-1,C)) for decode.
     Returns (out, new_state).  With ``return_state`` the chunked (train /
     prefill) path also returns the post-sequence (h, conv) state so decode
-    can continue from a fused prefill."""
+    can continue from a fused prefill.
+
+    The chunked path always uses the configured chunk length and pads the
+    tail internally with zero-dt steps (exp(0) = 1 decay, zero input — an
+    identity state update), so the chunk decomposition depends only on the
+    padded length, never on S.  With ``lengths`` (B,) the same dt masking is
+    applied per row, making a bucket-padded prefill bit-identical to the
+    exact-length one (states gathered at each row's true length)."""
     d_in, H, P, N = _dims(cfg)
     s = cfg.ssm
     B_, S, _ = x_res.shape
@@ -93,7 +111,8 @@ def ssm_block_apply(bp, x_res: Array, cfg: ArchConfig, policy: ApproxPolicy,
     proj = L.dense_apply(bp["in_proj"], xln, policy, path + "/in_proj", degree)
     z, xBC, dt_raw = _split_proj(proj, cfg)
     conv_state = state[1] if state is not None else None
-    xBC, new_conv = L.conv1d_apply(bp["conv"], jax.nn.silu(xBC), conv_state)
+    ci = jax.nn.silu(xBC)
+    xBC, new_conv = L.conv1d_apply(bp["conv"], ci, conv_state)
     X = xBC[..., :d_in].reshape(B_, S, H, P)
     Bm = xBC[..., d_in : d_in + N].astype(jnp.float32)
     Cm = xBC[..., d_in + N :].astype(jnp.float32)
@@ -112,10 +131,17 @@ def ssm_block_apply(bp, x_res: Array, cfg: ArchConfig, policy: ApproxPolicy,
         y = y.reshape(B_, 1, d_in)
         new_state = (h, new_conv)
     else:
-        Q = min(s.chunk, S)
-        while S % Q:
-            Q //= 2
-        nc = S // Q
+        Q = s.chunk
+        S_pad = -(-S // Q) * Q
+        nc = S_pad // Q
+        if lengths is not None:
+            vmask = jnp.arange(S, dtype=jnp.int32)[None] < lengths[:, None]
+            dt = jnp.where(vmask[..., None], dt, 0.0)
+        if S_pad != S:
+            Xf = jnp.pad(Xf, ((0, 0), (0, S_pad - S), (0, 0), (0, 0)))
+            Bm = jnp.pad(Bm, ((0, 0), (0, S_pad - S), (0, 0)))
+            Cm = jnp.pad(Cm, ((0, 0), (0, S_pad - S), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, S_pad - S), (0, 0)))
         Xc = Xf.reshape(B_, nc, Q, H, P)
         Bc = Bm.reshape(B_, nc, Q, N)
         Cc = Cm.reshape(B_, nc, Q, N)
@@ -145,8 +171,13 @@ def ssm_block_apply(bp, x_res: Array, cfg: ArchConfig, policy: ApproxPolicy,
         decay_in = jnp.exp(cum)                           # (B,nc,Q,H)
         Y = Y + jnp.einsum("bcqn,bchpn,bcqh->bcqhp", Cc, h_prevs, decay_in)
         Y = Y + bp["D"][None, None, None, :, None] * Xc
-        y = Y.reshape(B_, S, d_in)
-        new_state = (h_last, new_conv) if return_state else None
+        y = Y.reshape(B_, S_pad, d_in)[:, :S]
+        if return_state:
+            if lengths is not None:
+                new_conv = _conv_tail(ci, lengths, s.conv_width)
+            new_state = (h_last, new_conv)
+        else:
+            new_state = None
 
     y = y.astype(x_res.dtype) * jax.nn.silu(z)
     y = L.rmsnorm_apply(bp["gnorm"], y, cfg.norm_eps)
@@ -218,6 +249,13 @@ def ssm_prefill(params, cfg: ArchConfig, policy: ApproxPolicy,
 
     tokens: (P,) int32.  Returns (last-position logits (1, V) f32, cache with
     ``length[slot] = P``).  The slot region is reset first (reuse == fresh).
+
+    The prompt is padded to the chunk multiple at the TOKEN level and the true
+    length passed down as a mask, so this builds the same masked-graph program
+    shape as ``ssm_prefill_batch`` — XLA then compiles the identical chunk-scan
+    reduction for both, which is what makes bucket-padded admission bit-exact
+    against this path (a pad-shaped graph and a mask-shaped graph of the same
+    math may otherwise associate reductions differently, drifting by 1 ulp).
     """
     from repro.models.cache_ops import cache_reset_slot
 
@@ -225,12 +263,17 @@ def ssm_prefill(params, cfg: ArchConfig, policy: ApproxPolicy,
     dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
     cache = cache_reset_slot(cache, slot)
     P = tokens.shape[0]
-    x = L.embed_apply(params["embed"], tokens[None], dtype)   # (1, P, d)
+    Q = cfg.ssm.chunk
+    S_pad = -(-P // Q) * Q
+    if S_pad != P:
+        tokens = jnp.pad(tokens, (0, S_pad - P))
+    lengths = jnp.full((1,), P, jnp.int32)
+    x = L.embed_apply(params["embed"], tokens[None], dtype)   # (1, S_pad, d)
 
     def body(h, xs):
         lp, dg = (xs, None) if ldeg is None else xs
         h2, st = ssm_block_apply(lp, h, cfg, policy, "layer", dg,
-                                 return_state=True)
+                                 return_state=True, lengths=lengths)
         return h2, st
 
     xs = params["layers"] if ldeg is None else (params["layers"], ldeg)
@@ -240,9 +283,40 @@ def ssm_prefill(params, cfg: ArchConfig, policy: ApproxPolicy,
         conv=cache.conv.at[:, slot].set(nc[:, 0].astype(cache.conv.dtype)),
         length=cache.length.at[slot].set(P),
     )
-    xl = L.rmsnorm_apply(params["ln_f"], x[:, -1:], cfg.norm_eps)
+    xl = L.rmsnorm_apply(params["ln_f"], x[:, P - 1:P], cfg.norm_eps)
     logits = L.unembed_apply(params["embed"], xl, policy, "unembed", hdeg)
     return logits.astype(jnp.float32)[:, 0], new_cache
+
+
+def ssm_prefill_batch(params, cfg: ArchConfig, policy: ApproxPolicy,
+                      cache: SSMCache, tokens: Array, slots: Array,
+                      lengths: Array, tp: int = 1, degree=None) -> SSMCache:
+    """Bucketed/packed prefill: rows (N, Pb) padded to one bucket length,
+    written into ``slots`` with true ``lengths``.  Zero-dt tail masking in
+    ``ssm_block_apply`` makes each row's final (h, conv) state bit-identical
+    to ``ssm_prefill`` at the exact length whenever both pad to the same
+    chunk-aligned sequence (ssm_prefill pads n -> ceil(n/Q)*Q; here Pb ->
+    ceil(Pb/Q)*Q — equal for every n whose chunk count matches the bucket's,
+    and always numerically equivalent otherwise).  Dummy rows (slot >= B) and
+    empty rows (length 0, which write a reset state) are dropped/benign.
+    Returns the cache only."""
+    ldeg, _ = split_degree(degree, cfg.n_layers)
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x = L.embed_apply(params["embed"], tokens, dtype)     # (N, Pb, d)
+
+    def body(h, xs):
+        lp, dg = (xs, None) if ldeg is None else xs
+        h2, st = ssm_block_apply(lp, h, cfg, policy, "layer", dg,
+                                 return_state=True, lengths=lengths)
+        return h2, st
+
+    xs = params["layers"] if ldeg is None else (params["layers"], ldeg)
+    _, (nh, nc) = jax.lax.scan(body, x, xs)          # (Lyr, N, ...)
+    return SSMCache(
+        h=cache.h.at[:, slots].set(nh),
+        conv=cache.conv.at[:, slots].set(nc.astype(cache.conv.dtype)),
+        length=cache.length.at[slots].set(lengths),
+    )
 
 
 def ssm_decode_step(params, cfg: ArchConfig, policy: ApproxPolicy,

@@ -319,6 +319,132 @@ def lm_prefill(params, cfg: ArchConfig, policy: ApproxPolicy, cache,
     return logits.astype(jnp.float32)[:, 0], new_cache
 
 
+def lm_prefill_batch(params, cfg: ArchConfig, policy: ApproxPolicy, cache,
+                     tokens: Array, slots: Array, lengths: Array,
+                     tp: int = 1, degree=None):
+    """Bucketed/packed prefill: ``tokens`` is (N, Pb) — N prompt rows padded
+    to one bucket length Pb — written into ``slots`` (N,) with true lengths
+    ``lengths`` (N,).  Compilation is per (N, Pb) only, so a fixed bucket
+    ladder gives a fixed executable set (DESIGN.md §15).
+
+    Per-row results are bit-identical to ``lm_prefill`` at the exact length:
+    every op below attention is position-local, and causal/windowed attention
+    over a padded suffix leaves prefix rows untouched.  (MoE layers are the
+    exception — capacity routing couples tokens — so the adapter keeps MoE
+    on the exact-length path.)
+
+    Rows may be dummies: ``slot >= B`` scatters are dropped by JAX semantics,
+    and ``length == 0`` rows only reset their slot.  Returns the new cache
+    (no logits — admission feeds the last prompt token through decode).
+    """
+    ldeg, _ = split_degree(degree, cfg.n_layers)
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    N, Pb = tokens.shape
+    quant = isinstance(cache, LMCacheQ)
+    T = cache.k.shape[2]
+    ring = cfg.swa_window is not None and cfg.swa_window <= T
+    if Pb > T and not ring:
+        raise ValueError(f"bucket ({Pb}) exceeds cache capacity ({T})")
+    x = L.embed_apply(params["embed"], tokens, dtype)             # (N, Pb, d)
+    positions = jnp.broadcast_to(jnp.arange(Pb, dtype=jnp.int32)[None], (N, Pb))
+
+    def body(h, xs):
+        lp, dg = (xs, None) if ldeg is None else xs
+        h2, _, kv = block_apply(lp, h, cfg, tp, policy, "layer", positions,
+                                dg, return_kv=True)
+        return h2, kv
+
+    xs = params["layers"] if ldeg is None else (params["layers"], ldeg)
+    _, (ks, vs) = jax.lax.scan(body, x, xs)              # (Lyr, N, Pb, KVr, D)
+    Lyr, _, _, KVr, D = ks.shape
+    # masked tail scatter: keep the last min(len, T) tokens of each row at
+    # position j % T; everything else lands at T and is dropped (OOB).
+    j = jnp.arange(Pb, dtype=jnp.int32)[None]                     # (1, Pb)
+    ln = lengths[:, None]                                         # (N, 1)
+    valid = (j < ln) & (j >= ln - T)
+    dst = jnp.where(valid, j % T, T)                              # (N, Pb)
+    rows = jnp.arange(N)[:, None]
+    if quant:
+        kq, ksc = attn._q8(ks)
+        vq, vsc = attn._q8(vs)
+        regk = jnp.zeros((Lyr, N, T, KVr, D), jnp.int8).at[:, rows, dst].set(kq)
+        regv = jnp.zeros((Lyr, N, T, KVr, D), jnp.int8).at[:, rows, dst].set(vq)
+        regks = jnp.zeros((Lyr, N, T, KVr), jnp.float32).at[:, rows, dst].set(ksc)
+        regvs = jnp.zeros((Lyr, N, T, KVr), jnp.float32).at[:, rows, dst].set(vsc)
+        return LMCacheQ(
+            cache.k.at[:, slots].set(regk),
+            cache.v.at[:, slots].set(regv),
+            cache.ks.at[:, slots].set(regks),
+            cache.vs.at[:, slots].set(regvs),
+            cache.length.at[slots].set(lengths),
+        )
+    cdt = cache.k.dtype
+    regk = jnp.zeros((Lyr, N, T, KVr, D), cdt).at[:, rows, dst].set(ks.astype(cdt))
+    regv = jnp.zeros((Lyr, N, T, KVr, D), cdt).at[:, rows, dst].set(vs.astype(cdt))
+    return LMCache(
+        cache.k.at[:, slots].set(regk),
+        cache.v.at[:, slots].set(regv),
+        cache.length.at[slots].set(lengths),
+    )
+
+
+def lm_prefill_chunk(params, cfg: ArchConfig, policy: ApproxPolicy,
+                     cache: LMCache, tokens: Array, slot, offset, clen,
+                     tp: int = 1, degree=None) -> LMCache:
+    """Incremental prefill of one chunk: ``tokens`` (C,) continues ``slot``'s
+    prompt at position ``offset`` (traced), with ``clen <= C`` real tokens.
+    Chunk KV is written at ``offset + j`` (pad tail dropped OOB) and each
+    chunk position attends over the slot's cache rows — so long prompts can
+    be admitted across ticks, interleaved with decode, at one executable per
+    chunk size.  Dense full-attention caches only (no ring, no quant, no
+    MoE); the adapter gates eligibility.  Deterministic, but not bit-exact
+    vs one-shot prefill (cache-precision attention, T-length reductions).
+    Updates ``length[slot] = offset + clen``; returns the cache only.
+    """
+    ldeg, _ = split_degree(degree, cfg.n_layers)
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    pd = cfg.padded(tp)
+    C = tokens.shape[0]
+    T = cache.k.shape[2]
+    kvh = cache.k.shape[3]
+    x = L.embed_apply(params["embed"], tokens[None], dtype)       # (1, C, d)
+    j = jnp.arange(C, dtype=jnp.int32)
+    positions = (offset + j)[None]                                # (1, C)
+    dst = jnp.where(j < clen, offset + j, T)                      # (C,)
+    qmask = (jnp.arange(T, dtype=jnp.int32)[None, :] <= (offset + j)[:, None])
+
+    def body(h, xs):
+        if ldeg is None:
+            lp, ck, cv = xs
+            dg = None
+        else:
+            lp, ck, cv, dg = xs
+        hn = L.rmsnorm_apply(lp["ln1"], h, cfg.norm_eps)
+        q, k, v = _qkv(lp, hn, cfg, pd, policy, "layer", positions, dg)
+        ck2 = ck.at[slot, dst].set(k[0].astype(ck.dtype))
+        cv2 = cv.at[slot, dst].set(v[0].astype(cv.dtype))
+        keys = ck2[slot]                                          # (T, KVr, D)
+        vals = cv2[slot]
+        qg = attn._group_q(q, kvh)                                # (1,C,KV,G,D)
+        s = jnp.einsum("bqkgd,btkd->bkgqt", qg.astype(jnp.float32),
+                       keys[None].astype(jnp.float32)) / math.sqrt(cfg.head_dim)
+        s = jnp.where(qmask[None, None, None], s, attn.NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgqt,btkd->bqkgd", p, vals[None].astype(jnp.float32))
+        o = o.reshape(1, C, pd.n_heads * cfg.head_dim).astype(h.dtype)
+        h = L.dense_apply(lp["wo"], o, policy, "layer/wo", dg, residual=h)
+        hn = L.rmsnorm_apply(lp["ln2"], h, cfg.norm_eps)
+        h = L.gated_mlp_apply(lp["mlp"], hn, policy, "layer/mlp", cfg.act,
+                              dg, residual=h)
+        return h, (ck2, cv2)
+
+    xs = (params["layers"], cache.k, cache.v)
+    if ldeg is not None:
+        xs = xs + (ldeg,)
+    _, (nk, nv) = jax.lax.scan(body, x, xs)
+    return LMCache(nk, nv, cache.length.at[slot].set(offset + clen))
+
+
 def lm_decode_step(params, cfg: ArchConfig, policy: ApproxPolicy, cache: LMCache,
                    tokens: Array, tp: int = 1, degree=None,
                    active=None) -> tuple[Array, LMCache]:

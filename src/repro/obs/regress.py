@@ -50,6 +50,7 @@ BENCH_RECORDS = {
     "bench_stream": "BENCH_stream.json",
     "bench_chaos": "BENCH_chaos.json",
     "bench_elastic": "BENCH_elastic.json",
+    "bench_admission": "BENCH_admission.json",
 }
 
 #: current record schema (benchmarks/run.py stamps this)
@@ -515,6 +516,72 @@ def _check_elastic(rec: dict, tiny: bool) -> list:
     return errs
 
 
+def _check_admission(rec: dict, tiny: bool) -> list:
+    """Admission-pipeline invariants (ISSUE 10) — all scale-invariant:
+
+    * **closed executable set** — ``post_warmup_traces`` must be 0 over the
+      bursty mixed-length prompt run: the bucket ladder + warmup traced
+      every prefill/chunk/step executable at startup, so no live request
+      ever compiles.  Non-vacuity: >= 2 buckets warmed, >= 1 prompt served.
+    * **packed throughput** — admitted-requests/s via pack=4 bucketed
+      prefill calls must be >= 1.5x the one-row-at-a-time baseline
+      (>= 1.0x on tiny CI shapes, where iteration counts are too small to
+      pin a ratio).
+    * **chunked TTFT** — under the modeled-cost virtual clock, the
+      short-request TTFT p99 behind a long arrival must be strictly lower
+      with chunked admission than with the monolithic-prefill baseline.
+    * **exactly-once accounting** — every ``lost= / dup= / short=``
+      counter across both TTFT runs must be 0.
+    """
+    errs = []
+    rows = rows_by_name(rec)
+    zr = rows.get("adm.zero_recompile")
+    if zr is None:
+        errs.append("missing row adm.zero_recompile")
+    else:
+        kv = _kv_ints(zr[1])
+        if kv.get("post_warmup_traces", -1) != 0:
+            errs.append(f"post-warmup recompiles: {zr[1]!r} — the bucket "
+                        f"ladder no longer closes the executable set")
+        if kv.get("buckets", 0) < 2:
+            errs.append(f"fewer than 2 buckets warmed ({zr[1]!r}) — the "
+                        f"zero-recompile claim is vacuous")
+        if kv.get("prompts", 0) < 1 or kv.get("ok", 0) < 1:
+            errs.append(f"no prompts served ok in the recompile probe "
+                        f"({zr[1]!r})")
+    sp = rows.get("adm.packed_speedup")
+    if sp is None:
+        errs.append("missing row adm.packed_speedup")
+    else:
+        x100 = _kv_ints(sp[1]).get("speedup_x100", 0)
+        floor = 100 if tiny else 150
+        if x100 < floor:
+            errs.append(f"packed admission speedup {x100 / 100:.2f}x < "
+                        f"{floor / 100:.1f}x sequential — prompt packing "
+                        f"regressed")
+    tt = rows.get("adm.chunked_ttft")
+    if tt is None:
+        errs.append("missing row adm.chunked_ttft")
+    else:
+        kv = _kv_ints(tt[1])
+        c, u = kv.get("chunked_p99_us", -1), kv.get("unchunked_p99_us", 0)
+        if c < 0 or u <= 0:
+            errs.append(f"TTFT p99s not positive ({tt[1]!r})")
+        elif c >= u:
+            errs.append(f"chunked TTFT p99 {c}us >= unchunked {u}us — "
+                        f"chunked prefill no longer bounds short-request "
+                        f"latency")
+    acct = rows.get("adm.chunked_accounting")
+    if acct is None:
+        errs.append("missing row adm.chunked_accounting")
+    else:
+        bad = {k: v for k, v in _kv_ints(acct[1]).items() if v != 0}
+        if bad:
+            errs.append(f"admission accounting nonzero: {bad} (lost/"
+                        f"duplicated/short-changed requests)")
+    return errs
+
+
 _CHECKS: dict = {
     "bench_kernels": _check_kernels,
     "bench_serving": _check_serving,
@@ -523,6 +590,7 @@ _CHECKS: dict = {
     "bench_stream": _check_stream,
     "bench_chaos": _check_chaos,
     "bench_elastic": _check_elastic,
+    "bench_admission": _check_admission,
 }
 
 

@@ -56,6 +56,12 @@ class ServePolicy:
     max_queue_age_ms: Optional[float] = None
     #: degrade down the QoS ladder before shedding (needs qos= on engine)
     brownout: bool = True
+    #: modeled per-admission-call latency (ms) for the doomed-request
+    #: check: a queued request whose remaining TTFT budget cannot cover
+    #: ``workload.admit_calls(req) * admit_eta_ms`` is shed early
+    #: (status "shed", reason "doomed") instead of burning device calls
+    #: on an admission that must miss (None = check disabled)
+    admit_eta_ms: Optional[float] = None
 
     def backoff_s(self, retries: int) -> float:
         """Capped exponential backoff (seconds) before retry #``retries``."""

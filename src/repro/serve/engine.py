@@ -149,7 +149,8 @@ class ServeCore:
                  qos: Optional[QoSController] = None,
                  degree=None, prepack: bool = True, plan=None,
                  registry=None, tracer=None, quality_every: int = 0,
-                 faults=None, guards=None, policy=None, clock=None):
+                 faults=None, guards=None, policy=None, clock=None,
+                 emitter=None):
         self.workload = workload
         self.params = workload.prepack(params) if prepack else params
         self.slots = slots
@@ -258,6 +259,43 @@ class ServeCore:
             self._step = jax.jit(workload.step)
         if faults is not None:
             faults.bind(self.state, self.params, slots)
+        # -- admission pipeline (DESIGN.md §15): bucketed AOT prefill, ----
+        # packed prompts, chunked prefill, async emit.  None = the legacy
+        # exact-length admission path, bit-identical to prior engines.
+        self._admission = getattr(workload, "admission", None)
+        self.emitter = None
+        if self._admission is not None and emitter is not False:
+            from repro.serve.emitq import AsyncEmitter
+            self.emitter = emitter if emitter is not None else AsyncEmitter()
+        # warmup traces every admission executable + the fused step so no
+        # request compiles after startup; ShardedServeCore defers it until
+        # params/state carry their final shardings (a resharded arg would
+        # otherwise retrace at first live call)
+        if not getattr(self, "_defer_warmup", False):
+            self._maybe_warmup()
+
+    def _maybe_warmup(self) -> None:
+        a = self._admission
+        if a is None or not a.warmup:
+            return
+        with self._tracer.span("admission_warmup", track="engine",
+                               buckets=list(a.buckets), pack=a.pack,
+                               chunk=a.chunk_tokens):
+            self.workload.warmup_admission(self.params, self.state,
+                                           self._feed, self._degree)
+            # the fused decode-step executable, with a throwaway key and an
+            # all-free mask (state updates are masked out and discarded)
+            mask = jnp.zeros(self.slots, bool)
+            key = jax.random.PRNGKey(0)
+            feed = jnp.asarray(self._feed)
+            if self.guards is not None:
+                out = self._step(self.params, self.state, feed, mask, key,
+                                 self._degree, jnp.asarray(self._fault_vec))
+            else:
+                out = self._step(self.params, self.state, feed, mask, key,
+                                 self._degree)
+            jax.block_until_ready(out)
+        self.stats.c_warmups.inc()
 
     # ------------------------------------------------------------------
 
@@ -315,6 +353,89 @@ class ServeCore:
         self.slot_req[slot] = req
         self.slot_budget[slot] = req.budget
         self.stats.c_admitted.inc()
+
+    # ---- admission pipeline (DESIGN.md §15) ---------------------------
+
+    def _chunk_call(self, slot: int, req: Request) -> None:
+        """One chunked-prefill device call advancing ``req``'s admission."""
+        wl = self.workload
+        with self._tracer.span(wl.admit_span, track="engine", rid=req.rid,
+                               slot=slot, chunk=True, cursor=req.cursor):
+            self.state, n = wl.admit_chunk(self.params, self.state,
+                                           self._feed, slot, req,
+                                           self._degree)
+        req.admitted_units += int(n)
+        if n > 0:
+            self.stats.c_admit_units.inc(int(n))
+        self.stats.c_admit_calls.inc()
+        self.stats.c_chunk_calls.inc()
+        if wl.admit_site:
+            self._count_route(wl.admit_site)
+
+    def _flush_batch(self, pairs: list) -> None:
+        """Admit up to ``pack`` requests in one bucketed prefill call."""
+        if not pairs:
+            return
+        wl = self.workload
+        with self._tracer.span(wl.admit_span, track="engine",
+                               rid=pairs[0][1].rid, slot=pairs[0][0],
+                               packed=len(pairs)):
+            self.state, ingested = wl.admit_batch(self.params, self.state,
+                                                  self._feed, pairs,
+                                                  self._degree)
+        total = 0
+        for (_, req), n in zip(pairs, ingested):
+            req.admitted_units = int(n)
+            total += int(n)
+        if total > 0:
+            self.stats.c_admit_units.inc(total)
+        self.stats.c_admit_calls.inc()
+        if len(pairs) > 1:
+            self.stats.c_packed_rows.inc(len(pairs))
+        bucket = getattr(wl, "last_admit_bucket", None)
+        if bucket is not None:
+            self.stats.c_admit_bucket.labels(bucket=str(bucket)).inc()
+        if wl.admit_site:
+            self._count_route(wl.admit_site)
+
+    def _admit_pipeline(self, now: float) -> None:
+        """Bucketed/packed/chunked admission: first advance mid-admission
+        chunked slots (bounded calls per tick, so long-prompt ingestion
+        interleaves with decode instead of stalling short-request TTFT),
+        then fill free slots — chunked requests take their slot alone,
+        short ones pack into one bucketed prefill call."""
+        wl = self.workload
+        a = self._admission
+        for s in range(self.slots):
+            req = self.slot_req[s]
+            if req is None or wl.admit_complete(req):
+                continue
+            for _ in range(a.chunk_calls_per_tick):
+                self._chunk_call(s, req)
+                if wl.admit_complete(req):
+                    break
+        batch: list = []
+        for s in range(self.slots):
+            if self.slot_req[s] is not None:
+                continue
+            if self.policy is None:
+                req = self.queue.popleft() if self.queue else None
+            else:
+                req = self._next_admittable(now)
+            if req is None:
+                break
+            req.t_admitted = now
+            self.slot_req[s] = req
+            self.slot_budget[s] = req.budget
+            self.stats.c_admitted.inc()
+            if wl.wants_chunked(req):
+                self._chunk_call(s, req)
+            else:
+                batch.append((s, req))
+                if len(batch) >= a.pack:
+                    self._flush_batch(batch)
+                    batch = []
+        self._flush_batch(batch)
 
     def _update_degree(self, n_active: int):
         """Feed the QoS controller a load-headroom signal: overload drives
@@ -433,13 +554,36 @@ class ServeCore:
                 self._finish(req, "deadline", now)
                 self.stats.c_deadline_miss.labels(edge="queue").inc()
                 self._resil_event("deadline_miss", edge="queue", rid=req.rid)
-            elif (p.max_queue_age_ms is not None
+                continue
+            if req.ttft_deadline_s is not None and req.t_first_emit == 0.0:
+                # TTFT measures from ENQUEUE, so a queued request spends
+                # its budget while waiting: past the deadline it can no
+                # longer emit in time, and one whose remaining budget
+                # cannot cover its admission call count (chunked prompts
+                # need several device calls) is doomed — shed it now
+                # instead of burning device time on a guaranteed miss
+                if age > req.ttft_deadline_s:
+                    self._finish(req, "deadline", now)
+                    self.stats.c_deadline_miss.labels(edge="queue_ttft").inc()
+                    self._resil_event("deadline_miss", edge="queue_ttft",
+                                      rid=req.rid)
+                    continue
+                if p.admit_eta_ms is not None:
+                    eta = (self.workload.admit_calls(req)
+                           * p.admit_eta_ms / 1e3)
+                    if age + eta > req.ttft_deadline_s:
+                        self._finish(req, "shed", now)
+                        self.stats.c_shed.labels(reason="doomed").inc()
+                        self._resil_event("shed", reason="doomed",
+                                          rid=req.rid)
+                        continue
+            if (p.max_queue_age_ms is not None
                     and age * 1e3 > p.max_queue_age_ms):
                 self._finish(req, "shed", now)
                 self.stats.c_shed.labels(reason="stale").inc()
                 self._resil_event("shed", reason="stale", rid=req.rid)
-            else:
-                keep.append(req)
+                continue
+            keep.append(req)
         self.queue = keep
         if p.max_queue is None or len(self.queue) <= p.max_queue:
             return
@@ -521,21 +665,32 @@ class ServeCore:
             self._enforce_queue_policy(now)
             self._enforce_active_deadlines(now)
         # FIFO admission into free slots
-        for s in range(self.slots):
-            if self.slot_req[s] is None and self.queue:
-                if self.policy is None:
-                    self._admit(s, self.queue.popleft())
-                else:
-                    req = self._next_admittable(now)
-                    if req is None:
-                        break
-                    self._admit(s, req)
+        if self._admission is None:
+            for s in range(self.slots):
+                if self.slot_req[s] is None and self.queue:
+                    if self.policy is None:
+                        self._admit(s, self.queue.popleft())
+                    else:
+                        req = self._next_admittable(now)
+                        if req is None:
+                            break
+                        self._admit(s, req)
+        else:
+            self._admit_pipeline(now)
         if self.guards is not None and self.guards.scrub_every > 0 \
                 and self._ticks and self._ticks % self.guards.scrub_every == 0:
             self._scrub("periodic")
-        active = [s for s in range(self.slots) if self.slot_req[s] is not None]
-        if not active:
+        busy = [s for s in range(self.slots) if self.slot_req[s] is not None]
+        if not busy:
             return 0
+        # a slot mid-way through chunked admission holds a request but has
+        # no decodable state yet: it stays out of the fused step's mask
+        # until its payload is fully ingested
+        active = [s for s in busy if wl.admit_complete(self.slot_req[s])]
+        if not active:
+            # admission-only tick: chunk calls progressed, nothing decodes
+            self._ticks += 1
+            return len(busy)
         if self.qos is not None:
             self._update_degree(len(active))
         # scheduled faults land before the step: state/param flips are what
@@ -606,6 +761,10 @@ class ServeCore:
                     self._tracer.event(wl.first_event, track="engine",
                                        rid=req.rid, slot=s,
                                        ttft_ms=round(req.ttft * 1e3, 3))
+                if self.emitter is not None:
+                    # detokenize/deliver off-thread: harvest returns to the
+                    # device step without waiting on host-side emit work
+                    self.emitter.push(req, req.out[-1])
                 self.slot_budget[s] -= 1
             if finished or self.slot_budget[s] <= 0:
                 req.done = True
@@ -627,6 +786,8 @@ class ServeCore:
                 and ticks < max_ticks:
             self.tick()
             ticks += 1
+        if self.emitter is not None:
+            self.emitter.flush()
         return self.done
 
 

@@ -29,6 +29,7 @@ import numpy as np
 from repro.models.cache_ops import cache_mask_update
 from repro.models.registry import Model
 from repro.serve import engine as _engine
+from repro.serve.admission import AdmissionConfig, bucket_for
 from repro.serve.sampling import sample_tokens
 from repro.serve.servable import ServableModel
 
@@ -82,7 +83,8 @@ class LMAdapter(ServableModel):
 
     def __init__(self, model: Model, *, tp: int = 1, eos_id: int = -1,
                  greedy: bool = True, temperature: float = 1.0,
-                 top_k: int = 0, max_len: int = 512):
+                 top_k: int = 0, max_len: int = 512,
+                 admission: Optional[AdmissionConfig] = None):
         self.model = model
         self.cfg = model.cfg
         self.tp = tp
@@ -98,8 +100,15 @@ class LMAdapter(ServableModel):
         else:
             self._max_prompt = max_len
         vocab = cfg.vocab
+        #: python-side executable census: each key counts TRACES (the
+        #: counter lives inside the staged function body, so it bumps once
+        #: per compilation, not per call) — the compile-count regression
+        #: tests pin admission to the bucket ladder with this
+        self.trace_counts = {"prefill": 0, "prefill_batch": 0,
+                             "prefill_chunk": 0, "step": 0}
 
         def serve_step(p, cache, tokens, active, key, deg):
+            self.trace_counts["step"] += 1
             logits, new_cache = model.decode_step(p, cache, tokens, tp=tp,
                                                   degree=deg, active=active)
             # free slots are masked out: length frozen, region unwritten
@@ -116,6 +125,7 @@ class LMAdapter(ServableModel):
             from repro.kernels import dispatch as kdispatch
             from repro.resil import guards
 
+            self.trace_counts["step"] += 1
             logits, new_cache = model.decode_step(p, cache, tokens, tp=tp,
                                                   degree=deg, active=active)
             new_cache = cache_mask_update(cache, new_cache, active)
@@ -130,10 +140,41 @@ class LMAdapter(ServableModel):
 
         self._serve_step = serve_step
         self._guarded_serve_step = guarded_serve_step
-        self._prefill = jax.jit(
-            lambda p, c, t, s, deg: model.prefill(p, c, t, s, tp=tp,
-                                                  degree=deg))
+
+        def _prefill_impl(p, c, t, s, deg):
+            self.trace_counts["prefill"] += 1
+            return model.prefill(p, c, t, s, tp=tp, degree=deg)
+
+        self._prefill = jax.jit(_prefill_impl)
         self._reset = jax.jit(model.reset_slot)
+
+        # ---- bucketed/packed/chunked admission (DESIGN.md §15) --------
+        self.admission = admission.resolved(max_len) if admission else None
+        if self.admission is not None and getattr(cfg, "moe", None):
+            # MoE capacity routing couples tokens ACROSS packed rows (the
+            # per-expert capacity is computed over the whole call), so a
+            # bucketed/packed prefill would not be bit-identical to
+            # sequential admission — MoE keeps the exact-length path
+            self.admission = None
+        self._chunk_ok = False
+        if self.admission is not None:
+            import os
+
+            def _prefill_batch_impl(p, c, t, s, ln, deg):
+                self.trace_counts["prefill_batch"] += 1
+                return model.prefill_batch(p, c, t, s, ln, tp=tp, degree=deg)
+
+            self._prefill_batch = jax.jit(_prefill_batch_impl)
+            self._chunk_ok = (self.admission.chunk_tokens > 0
+                              and model.supports_chunked_prefill()
+                              and os.environ.get("REPRO_KV_INT8", "0") != "1")
+            if self._chunk_ok:
+                def _prefill_chunk_impl(p, c, t, s, off, n, deg):
+                    self.trace_counts["prefill_chunk"] += 1
+                    return model.prefill_chunk(p, c, t, s, off, n, tp=tp,
+                                               degree=deg)
+
+                self._prefill_chunk = jax.jit(_prefill_chunk_impl)
 
     # ---- weights / slot state ----------------------------------------
 
@@ -185,7 +226,109 @@ class LMAdapter(ServableModel):
             cache = self._reset(cache, sl)
             ingested = 0
         feed[slot, 0] = int(prompt[-1])
+        req.cursor = ingested
         return cache, ingested
+
+    # ---- bucketed / packed / chunked admission ------------------------
+
+    def admit_batch(self, params, cache, feed, pairs, degree):
+        """Pack up to ``admission.pack`` prompt prefixes into ONE bucketed
+        prefill call.  Calls are padded to exactly ``pack`` rows with
+        dummies (slot = B, dropped out-of-bounds), so the executable set is
+        one per bucket.  Prefixes longer than the largest bucket (unbounded
+        window/SSM ingest) fall back to the exact-length path."""
+        a = self.admission
+        if a is None:
+            return super().admit_batch(params, cache, feed, pairs, degree)
+        B = feed.shape[0]
+        ingested = {}
+        bucketed = []
+        for slot, req in pairs:
+            n = req.payload_units - 1
+            if n > a.buckets[-1]:
+                cache, ingested[id(req)] = self.admit(params, cache, feed,
+                                                      slot, req, degree)
+            else:
+                bucketed.append((slot, req))
+        for i in range(0, len(bucketed), a.pack):
+            group = bucketed[i:i + a.pack]
+            lens = [r.payload_units - 1 for _, r in group]
+            Pb = bucket_for(max(lens + [1]), a.buckets)
+            toks = np.zeros((a.pack, Pb), np.int32)
+            slots = np.full((a.pack,), B, np.int32)
+            lengths = np.zeros((a.pack,), np.int32)
+            for row, ((slot, req), n) in enumerate(zip(group, lens)):
+                toks[row, :n] = req.payload[:-1]
+                slots[row] = slot
+                lengths[row] = n
+                feed[slot, 0] = int(req.payload[-1])
+                req.cursor = n
+                ingested[id(req)] = n
+            cache = self._prefill_batch(params, cache, jnp.asarray(toks),
+                                        jnp.asarray(slots),
+                                        jnp.asarray(lengths), degree)
+            self.last_admit_bucket = Pb
+        return cache, [ingested[id(r)] for _, r in pairs]
+
+    def admit_chunk(self, params, cache, feed, slot, req, degree):
+        """Advance one ``chunk_tokens`` chunk of ``req``'s prompt prefix;
+        ``req.cursor`` carries progress (quarantine/rewind zero it).  The
+        final prompt token rides the decode feed once the prefix lands."""
+        a = self.admission
+        C = a.chunk_tokens
+        prompt = req.payload
+        target = prompt.size - 1
+        sl = jnp.asarray(slot, jnp.int32)
+        if req.cursor == 0:
+            cache = self._reset(cache, sl)
+        take = min(C, target - req.cursor)
+        toks = np.zeros((C,), np.int32)
+        toks[:take] = prompt[req.cursor:req.cursor + take]
+        cache = self._prefill_chunk(params, cache, jnp.asarray(toks), sl,
+                                    jnp.asarray(req.cursor, jnp.int32),
+                                    jnp.asarray(take, jnp.int32), degree)
+        req.cursor += take
+        if req.cursor >= target:
+            feed[slot, 0] = int(prompt[-1])
+        return cache, take
+
+    def admit_complete(self, req) -> bool:
+        if self.admission is None:
+            return True
+        return req.cursor >= max(req.payload_units - 1, 0)
+
+    def wants_chunked(self, req) -> bool:
+        return (self._chunk_ok
+                and req.payload_units - 1 > self.admission.chunk_tokens)
+
+    def admit_calls(self, req) -> int:
+        n = req.payload_units - 1
+        if self.admission is not None and self.wants_chunked(req):
+            return -(-n // self.admission.chunk_tokens)
+        return 1
+
+    def warmup_admission(self, params, cache, feed, degree) -> None:
+        """Trace one executable per bucket (+ the chunk and slot-reset
+        executables) with all-dummy rows: slot = B scatters are dropped, so
+        the live state is untouched and the results are discarded."""
+        a = self.admission
+        if a is None:
+            return
+        B = feed.shape[0]
+        dummy = jnp.asarray(B, jnp.int32)
+        for Pb in a.buckets:
+            out = self._prefill_batch(
+                params, cache, jnp.zeros((a.pack, Pb), jnp.int32),
+                jnp.full((a.pack,), B, jnp.int32),
+                jnp.zeros((a.pack,), jnp.int32), degree)
+            jax.block_until_ready(out)
+        if self._chunk_ok:
+            zero = jnp.asarray(0, jnp.int32)
+            out = self._prefill_chunk(
+                params, cache, jnp.zeros((a.chunk_tokens,), jnp.int32),
+                dummy, zero, zero, degree)
+            jax.block_until_ready(out)
+        jax.block_until_ready(self._reset(cache, dummy))
 
     def step(self, params, cache, feed, active, key, degree):
         return self._serve_step(params, cache, feed, active, key, degree)
@@ -226,10 +369,11 @@ class ServeEngine(_engine.ServeCore):
                  greedy: bool = True, temperature: float = 1.0,
                  top_k: int = 0, seed: int = 0, qos=None, degree=None,
                  prepack: bool = True, plan=None, registry=None,
-                 tracer=None, quality_every: int = 0, **resil_kw):
+                 tracer=None, quality_every: int = 0,
+                 admission: Optional[AdmissionConfig] = None, **resil_kw):
         workload = LMAdapter(model, tp=tp, eos_id=eos_id, greedy=greedy,
                              temperature=temperature, top_k=top_k,
-                             max_len=max_len)
+                             max_len=max_len, admission=admission)
         super().__init__(workload, params, slots=slots, max_len=max_len,
                          seed=seed, qos=qos, degree=degree, prepack=prepack,
                          plan=plan, registry=registry, tracer=tracer,

@@ -70,6 +70,11 @@ class ServableModel:
     #: leave (LM: a logit limit; stream: the Q-format range)
     guard_limit: Optional[float] = None
 
+    #: admission pipeline config (serve/admission.py) — None keeps the
+    #: legacy exact-length one-request-at-a-time admission path; the engine
+    #: reads this to drive bucketed/packed/chunked admission
+    admission = None
+
     # ---- weights ------------------------------------------------------
     def prepack(self, params):
         """Quantize-once residency hook (DESIGN.md §9); identity by default."""
@@ -112,6 +117,46 @@ class ServableModel:
         ``ingested`` units count toward the admission counters (0 when the
         payload rides the step feed only)."""
         raise NotImplementedError
+
+    # ---- budgeted admission (pipeline edge, DESIGN.md §15) ------------
+    # The engine only calls these when :attr:`admission` is set; the
+    # defaults preserve legacy single-call semantics so workloads opt in
+    # incrementally.
+
+    def admit_batch(self, params, state, feed, pairs, degree):
+        """Admit several requests in one device call: ``pairs`` is a list of
+        ``(slot, req)``.  Returns ``(state, ingested_list)``.  Default:
+        sequential :meth:`admit` calls (no packing win, same semantics)."""
+        ingested = []
+        for slot, req in pairs:
+            state, n = self.admit(params, state, feed, slot, req, degree)
+            ingested.append(n)
+        return state, ingested
+
+    def admit_chunk(self, params, state, feed, slot: int, req, degree):
+        """Advance one chunk of ``req``'s admission into ``slot`` (progress
+        carried in ``req.cursor``; the engine's rewind path resets it).
+        Returns ``(state, ingested)``."""
+        raise NotImplementedError(f"{type(self).__name__} cannot chunk")
+
+    def admit_complete(self, req) -> bool:
+        """Whether ``req``'s payload is fully ingested — a slot only joins
+        the fused decode batch once this holds."""
+        return True
+
+    def wants_chunked(self, req) -> bool:
+        """Whether this request should admit via :meth:`admit_chunk`."""
+        return False
+
+    def admit_calls(self, req) -> int:
+        """Device calls needed to admit ``req`` (doomed-shed estimate in
+        resil.policy: calls x admit_eta_ms vs remaining TTFT budget)."""
+        return 1
+
+    def warmup_admission(self, params, state, feed, degree) -> None:
+        """Trace every admission executable (bucket ladder, chunk size) with
+        dummy rows so no request compiles after startup.  Must not mutate
+        ``state``/``feed`` observably.  Default: nothing to warm."""
 
     def step(self, params, state, feed, active, key, degree):
         """ONE fused step over all slots (the engine jits this once):

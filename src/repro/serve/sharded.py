@@ -64,6 +64,11 @@ class ShardedServeCore(ServeCore):
                  **kw):
         self.mesh = mesh if mesh is not None else meshctx.get_mesh()
         self.ring = bool(ring) and _model_axis(self.mesh) > 1
+        # admission warmup must trace against the FINAL shardings: run it
+        # after the device_puts below, not inside super().__init__ (a
+        # warmup over replicated args would compile executables the first
+        # live call immediately retraces)
+        self._defer_warmup = True
         with self._mesh_ctx():
             super().__init__(workload, params, **kw)
             family = getattr(workload.cfg, "family", "") or ""
@@ -78,6 +83,7 @@ class ShardedServeCore(ServeCore):
                 # must restore placement along with the bits (rebinding the
                 # host copy would silently re-replicate the params)
                 self._golden = self.params
+            self._maybe_warmup()
 
     def _mesh_ctx(self):
         """Every trace under this engine's mesh + ring lever: construction
@@ -103,12 +109,13 @@ class ShardedServeEngine(ShardedServeCore):
     def __init__(self, model, params, *, mesh=None, ring: bool = False,
                  slots: int = 8, max_len: int = 512, eos_id: int = -1,
                  tp: Optional[int] = None, greedy: bool = True,
-                 temperature: float = 1.0, top_k: int = 0, **kw):
+                 temperature: float = 1.0, top_k: int = 0,
+                 admission=None, **kw):
         mesh = mesh if mesh is not None else meshctx.get_mesh()
         tp = _model_axis(mesh) if tp is None else tp
         workload = LMAdapter(model, tp=tp, eos_id=eos_id, greedy=greedy,
                              temperature=temperature, top_k=top_k,
-                             max_len=max_len)
+                             max_len=max_len, admission=admission)
         super().__init__(workload, params, mesh=mesh, ring=ring,
                          slots=slots, max_len=max_len, **kw)
         self.model = model

@@ -45,11 +45,13 @@ def settings(max_examples: int = 12, deadline=None, **_kw):
 
 def given(*strats):
     def deco(fn):
-        n = getattr(fn, "_fallback_max_examples", 12)
-
         # no functools.wraps: pytest must see a zero-arg signature, not the
         # strategy parameters (it would hunt for fixtures named after them)
         def wrapper():
+            # read max_examples at call time: @settings may sit either above
+            # @given (sets it on this wrapper) or below it (sets it on fn)
+            n = getattr(wrapper, "_fallback_max_examples",
+                        getattr(fn, "_fallback_max_examples", 12))
             rng = np.random.default_rng(0)
             for i in range(n):
                 fn(*(s.draw(i, rng) for s in strats))

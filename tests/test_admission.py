@@ -1,0 +1,427 @@
+"""Production admission pipeline (ISSUE 10): bucketed AOT prefill, packed
+prompts, chunked prefill, async emit, and the policy/routing edges.
+
+Covers the config primitives (ladder/bucket lookup), the zero-post-warmup
+compile contract (trace_counts census), the compile-count regression bound
+(20 random prompt lengths compile at most len(buckets) executables), the
+background emit queue, the queue-TTFT deadline + doomed-shed policy fixes,
+admission-backlog-aware fleet routing, and the sharded-engine warmup
+ordering.  The hypothesis-style bit-identity properties live in
+test_admission_props.py.
+"""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.resil import ServePolicy, VirtualClock
+from repro.serve.admission import AdmissionConfig, bucket_for, bucket_ladder
+from repro.serve.emitq import AsyncEmitter, default_detok
+from repro.serve.engine import ServeEngine
+
+_CACHE: dict = {}
+
+
+def _setup(arch: str = "tinyllama-1.1b-smoke"):
+    if arch not in _CACHE:
+        cfg = get_config(arch)
+        m = build_model(cfg)
+        params = m.init(jax.random.PRNGKey(0), tp=1)
+        _CACHE[arch] = (m, params)
+    return _CACHE[arch]
+
+
+def _prompts(n, lens=None, seed=0, vocab=512):
+    rng = np.random.default_rng(seed)
+    if lens is None:
+        lens = rng.integers(2, 30, n)
+    return [rng.integers(1, vocab, int(ln)).astype(np.int32) for ln in lens]
+
+
+# ---------------------------------------------------------------------------
+# config primitives
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_ladder_powers_of_two():
+    assert bucket_ladder(512) == (16, 32, 64, 128, 256, 512)
+    assert bucket_ladder(64) == (16, 32, 64)
+    assert bucket_ladder(17) == (16,)
+    assert bucket_ladder(18) == (16, 18)              # capped at max_len
+
+
+def test_bucket_ladder_caps_at_cache_capacity():
+    # a non-power-of-two max_len must never get a bucket the dense cache
+    # cannot hold (Pb > T would raise at warmup trace)
+    assert bucket_ladder(48) == (16, 32, 48)
+    assert max(bucket_ladder(100)) <= 100
+    assert bucket_ladder(8) == (8,)
+
+
+def test_bucket_for_smallest_cover_and_overflow():
+    buckets = (16, 32, 64)
+    assert bucket_for(1, buckets) == 16
+    assert bucket_for(16, buckets) == 16
+    assert bucket_for(17, buckets) == 32
+    assert bucket_for(64, buckets) == 64
+    with pytest.raises(ValueError):
+        bucket_for(65, buckets)
+
+
+def test_admission_config_validation_and_resolve():
+    with pytest.raises(ValueError):
+        AdmissionConfig(pack=0)
+    with pytest.raises(ValueError):
+        AdmissionConfig(chunk_tokens=-1)
+    with pytest.raises(ValueError):
+        AdmissionConfig(buckets=(32, 16))
+    a = AdmissionConfig(pack=3, chunk_tokens=8).resolved(64)
+    assert a.buckets == (16, 32, 64) and a.pack == 3 and a.chunk_tokens == 8
+    pinned = AdmissionConfig(buckets=(8, 24)).resolved(64)
+    assert pinned.buckets == (8, 24)      # explicit buckets win
+
+
+# ---------------------------------------------------------------------------
+# AOT warmup + compile-count regression
+# ---------------------------------------------------------------------------
+
+
+def test_warmup_compiles_everything_no_post_warmup_traces():
+    """The warmup pass must trace every bucket + the chunk + the step
+    executable; serving 20 mixed-length prompts afterwards compiles
+    NOTHING new."""
+    m, params = _setup()
+    adm = AdmissionConfig(pack=2, chunk_tokens=16)
+    eng = ServeEngine(m, params, slots=4, max_len=64, seed=3, admission=adm)
+    wl = eng.workload
+    assert wl.trace_counts["prefill_batch"] == len(wl.admission.buckets)
+    assert wl.trace_counts["prefill_chunk"] == 1
+    assert wl.trace_counts["step"] == 1
+    assert int(eng.stats.c_warmups.value) == 1
+    before = dict(wl.trace_counts)
+    for p in _prompts(20, lens=np.random.default_rng(7).integers(2, 60, 20)):
+        eng.submit(p, 3)
+    eng.run_until_drained()
+    assert wl.trace_counts == before, "a request triggered a compile"
+
+
+def test_compile_count_bounded_by_bucket_ladder():
+    """Without warmup, 20 random prompt lengths may compile lazily — but
+    never more than one executable per bucket (satellite 3)."""
+    m, params = _setup()
+    adm = AdmissionConfig(pack=2, warmup=False)
+    eng = ServeEngine(m, params, slots=4, max_len=64, seed=3, admission=adm)
+    wl = eng.workload
+    assert wl.trace_counts["prefill_batch"] == 0      # warmup disabled
+    for p in _prompts(20, lens=np.random.default_rng(9).integers(2, 60, 20)):
+        eng.submit(p, 2)
+    eng.run_until_drained()
+    assert 1 <= wl.trace_counts["prefill_batch"] <= len(wl.admission.buckets)
+    assert wl.trace_counts["step"] == 1
+
+
+def test_warmup_leaves_live_state_untouched():
+    """Warmup's dummy rows (slot = B, out of bounds) must be dropped by
+    scatter: tokens from a warmed engine match a legacy engine exactly."""
+    m, params = _setup()
+    prompts = _prompts(6, seed=4)
+    legacy = ServeEngine(m, params, slots=3, max_len=64, seed=11)
+    r0 = [legacy.submit(p, 5) for p in prompts]
+    legacy.run_until_drained()
+    adm = AdmissionConfig(pack=2, chunk_tokens=16)
+    warmed = ServeEngine(m, params, slots=3, max_len=64, seed=11,
+                         admission=adm)
+    r1 = [warmed.submit(p, 5) for p in prompts]
+    warmed.run_until_drained()
+    assert [r.out for r in r1] == [r.out for r in r0]
+
+
+def test_oversize_prompt_falls_back_to_exact_path():
+    """A prefix longer than the largest bucket admits through the legacy
+    exact-length prefill (same tokens), not a bucket call."""
+    m, params = _setup()
+    adm = AdmissionConfig(buckets=(8,))
+    eng = ServeEngine(m, params, slots=2, max_len=64, seed=5, admission=adm)
+    wl = eng.workload
+    long_p = _prompts(1, lens=[20], seed=6)[0]
+    short_p = _prompts(1, lens=[5], seed=7)[0]
+    r_long = eng.submit(long_p, 4)
+    r_short = eng.submit(short_p, 4)
+    eng.run_until_drained()
+    assert wl.trace_counts["prefill"] == 1            # the fallback traced
+    ref = ServeEngine(m, params, slots=2, max_len=64, seed=5)
+    q_long = ref.submit(long_p, 4)
+    q_short = ref.submit(short_p, 4)
+    ref.run_until_drained()
+    assert r_long.out == q_long.out and r_short.out == q_short.out
+
+
+def test_moe_family_keeps_exact_admission():
+    """MoE capacity routing couples packed rows, so the adapter must
+    silently drop the admission config and serve the exact path."""
+    m, params = _setup("qwen2-moe-a2.7b-smoke")
+    adm = AdmissionConfig(pack=2)
+    eng = ServeEngine(m, params, slots=2, max_len=32, seed=0, admission=adm)
+    assert eng.workload.admission is None
+    assert eng._admission is None
+    req = eng.submit(_prompts(1, lens=[6], seed=1)[0], 3)
+    eng.run_until_drained()
+    assert len(req.out) == 3 and req.status == "ok"
+
+
+def test_bucket_metrics_exported():
+    m, params = _setup()
+    adm = AdmissionConfig(pack=2)
+    eng = ServeEngine(m, params, slots=4, max_len=64, seed=0, admission=adm)
+    for p in _prompts(4, lens=[3, 5, 20, 25], seed=8):
+        eng.submit(p, 2)
+    eng.run_until_drained()
+    assert int(eng.stats.c_packed_rows.value) == 4
+    by_bucket = {k: int(c.value)
+                 for k, c in eng.stats.c_admit_bucket.children.items()}
+    assert sum(by_bucket.values()) == 2              # two packed flushes
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill scheduling
+# ---------------------------------------------------------------------------
+
+
+def test_chunked_prefill_interleaves_with_decode():
+    """While a long prompt admits chunk-by-chunk, co-resident short
+    requests must keep decoding — the long arrival cannot freeze them."""
+    m, params = _setup()
+    adm = AdmissionConfig(pack=1, chunk_tokens=8, chunk_calls_per_tick=1)
+    eng = ServeEngine(m, params, slots=2, max_len=64, seed=2, admission=adm)
+    short = eng.submit(_prompts(1, lens=[3], seed=1)[0], 8)
+    long_r = eng.submit(_prompts(1, lens=[50], seed=2)[0], 4)
+    # short decodes while long is still admitting (49 prefix / 8 = 7 calls)
+    progressed = False
+    for _ in range(5):
+        eng.tick()
+        if short.out and not eng.workload.admit_complete(long_r):
+            progressed = True
+    assert progressed, "short request starved behind chunked admission"
+    eng.run_until_drained()
+    assert short.status == "ok" and long_r.status == "ok"
+    assert len(long_r.out) == 4
+    assert int(eng.stats.c_chunk_calls.value) == 7
+
+
+def test_chunk_calls_per_tick_budget():
+    m, params = _setup()
+    adm = AdmissionConfig(chunk_tokens=8, chunk_calls_per_tick=2)
+    eng = ServeEngine(m, params, slots=1, max_len=64, seed=2, admission=adm)
+    req = eng.submit(_prompts(1, lens=[40], seed=3)[0], 2)
+    eng.tick()                     # first chunk rides the admit tick
+    assert req.cursor == 8
+    eng.tick()                     # then 2 chunk calls per tick
+    assert req.cursor == 24
+    eng.run_until_drained()
+    assert req.status == "ok" and len(req.out) == 2
+
+
+def test_admission_only_tick_advances_clock_not_step():
+    m, params = _setup()
+    adm = AdmissionConfig(chunk_tokens=8)
+    eng = ServeEngine(m, params, slots=1, max_len=64, seed=2, admission=adm)
+    eng.submit(_prompts(1, lens=[30], seed=4)[0], 2)
+    steps0 = int(eng.stats.c_steps.value)
+    busy = eng.tick()
+    assert busy == 1                         # slot held, nothing decodable
+    assert int(eng.stats.c_steps.value) == steps0   # no fused step ran
+
+
+# ---------------------------------------------------------------------------
+# background emit queue
+# ---------------------------------------------------------------------------
+
+
+def test_async_emitter_order_and_flush():
+    class R:
+        pass
+
+    got = []
+    em = AsyncEmitter(on_emit=lambda req, piece: got.append(piece))
+    r = R()
+    for i in range(50):
+        em.push(r, i)
+    assert em.flush(timeout=5.0)
+    assert r.detok == [f"<{i}>" for i in range(50)]   # per-request order
+    assert got == r.detok
+    assert em.emitted == 50 and em.errors == 0
+    em.close()
+    with pytest.raises(RuntimeError):
+        em.push(r, 0)
+    em.close()                                        # idempotent
+
+
+def test_async_emitter_survives_detok_errors():
+    def bad(item):
+        if int(item) == 2:
+            raise RuntimeError("boom")
+        return default_detok(item)
+
+    class R:
+        pass
+
+    em = AsyncEmitter(detok=bad)
+    r = R()
+    for i in range(4):
+        em.push(r, i)
+    assert em.flush(timeout=5.0)
+    assert em.errors == 1 and em.emitted == 3
+    assert r.detok == ["<0>", "<1>", "<3>"]
+    em.close()
+
+
+def test_engine_emits_in_background():
+    m, params = _setup()
+    adm = AdmissionConfig(pack=2)
+    eng = ServeEngine(m, params, slots=2, max_len=64, seed=1, admission=adm)
+    reqs = [eng.submit(p, 4) for p in _prompts(3, seed=5)]
+    eng.run_until_drained()                 # drain flushes the emitter
+    for r in reqs:
+        assert r.detok == [f"<{t}>" for t in r.out]
+    assert eng.emitter.emitted == sum(len(r.out) for r in reqs)
+
+
+def test_engine_emitter_opt_out():
+    m, params = _setup()
+    eng = ServeEngine(m, params, slots=2, max_len=64,
+                      admission=AdmissionConfig(), emitter=False)
+    assert eng.emitter is None
+    req = eng.submit(_prompts(1, seed=6)[0], 3)
+    eng.run_until_drained()
+    assert not hasattr(req, "detok")
+
+
+# ---------------------------------------------------------------------------
+# policy fixes: queue-TTFT deadline + doomed-shed (satellite 4)
+# ---------------------------------------------------------------------------
+
+
+def test_queue_ttft_deadline_measured_from_enqueue():
+    """A queued request past its TTFT budget terminates with the
+    queue_ttft edge — it cannot emit in time even if admitted now.
+    Regression: the old queue check only looked at the e2e deadline."""
+    m, params = _setup()
+    clock = VirtualClock()
+    adm = AdmissionConfig(chunk_tokens=8)
+    eng = ServeEngine(m, params, slots=1, max_len=64, seed=0, admission=adm,
+                      policy=ServePolicy(), clock=clock)
+    occupant = eng.submit(_prompts(1, lens=[50], seed=1)[0], 20)
+    starved = eng.submit(_prompts(1, lens=[3], seed=2)[0], 4,
+                         ttft_deadline_ms=6.0)
+    for _ in range(40):
+        eng.tick()
+        clock.advance(0.002)               # 2 virtual ms per tick
+        if starved.done:
+            break
+    assert starved.status == "deadline" and starved.out == []
+    assert int(eng.stats.c_deadline_miss.labels(edge="queue_ttft").value) == 1
+    assert occupant.status != "deadline" or occupant.done
+
+
+def test_doomed_request_shed_before_admission():
+    """A queued request whose remaining TTFT budget cannot cover its
+    admission call count (admit_calls x admit_eta_ms) sheds early with
+    reason=doomed instead of burning device calls on a guaranteed miss."""
+    m, params = _setup()
+    clock = VirtualClock()
+    adm = AdmissionConfig(chunk_tokens=8)
+    eng = ServeEngine(m, params, slots=1, max_len=64, seed=0, admission=adm,
+                      policy=ServePolicy(admit_eta_ms=2.0), clock=clock)
+    occupant = eng.submit(_prompts(1, lens=[3], seed=1)[0], 6)
+    # 50-token prompt -> ceil(49/8) = 7 chunk calls x 2 ms = 14 ms of
+    # admission; a 10 ms TTFT budget can never be met
+    doomed = eng.submit(_prompts(1, lens=[50], seed=2)[0], 4,
+                        ttft_deadline_ms=10.0)
+    chunk0 = int(eng.stats.c_chunk_calls.value)
+    for _ in range(30):
+        eng.tick()
+        clock.advance(0.001)
+        if doomed.done:
+            break
+    assert doomed.status == "shed"
+    assert int(eng.stats.c_shed.labels(reason="doomed").value) == 1
+    assert int(eng.stats.c_chunk_calls.value) == chunk0   # zero device work
+    shed_events = [dict(a) for _, n, a in eng.resil_log if n == "shed"]
+    assert any(e.get("reason") == "doomed" for e in shed_events)
+    eng.run_until_drained()
+    assert occupant.status == "ok"
+    assert len(eng.done) == 2                             # exactly-once
+
+
+def test_feasible_request_not_doomed():
+    """The doomed check must not fire when the budget covers admission."""
+    m, params = _setup()
+    clock = VirtualClock()
+    adm = AdmissionConfig(chunk_tokens=8)
+    eng = ServeEngine(m, params, slots=1, max_len=64, seed=0, admission=adm,
+                      policy=ServePolicy(admit_eta_ms=0.1), clock=clock)
+    req = eng.submit(_prompts(1, lens=[50], seed=3)[0], 2,
+                     ttft_deadline_ms=500.0)
+    for _ in range(40):
+        eng.tick()
+        clock.advance(0.0005)
+        if req.done:
+            break
+    assert req.status == "ok"
+    assert int(eng.stats.c_shed.labels(reason="doomed").value) == 0
+
+
+# ---------------------------------------------------------------------------
+# fleet routing + sharded warmup
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_backlog_routing_weighs_admission_work():
+    from repro.dist.fleet import FleetSupervisor
+
+    m, params = _setup()
+    adm = AdmissionConfig(chunk_tokens=8)
+
+    def build(mesh, rid):
+        return ServeEngine(m, params, slots=2, max_len=64, seed=rid,
+                           admission=adm, emitter=False)
+
+    sup = FleetSupervisor(build, 2, route_by="backlog")
+    grinder = sup.replicas[0].engine
+    busy = sup.replicas[1].engine
+    # replica 0: ONE long prompt mid-chunked-admission (heavy backlog,
+    # light request count); replica 1: two short decoding requests
+    grinder.submit(_prompts(1, lens=[60], seed=1)[0], 8)
+    grinder.tick()                                  # first chunk only
+    busy.submit(_prompts(1, lens=[3], seed=2)[0], 8)
+    busy.submit(_prompts(1, lens=[4], seed=3)[0], 8)
+    busy.tick()
+    assert sup._route().rid == 1                    # backlog: avoid grinder
+    sup.route_by = "slots"
+    assert sup._route().rid == 0                    # legacy: fewer requests
+    sup.route_by = "backlog"
+    done = sup.run_until_drained()
+    assert len(done) == 3 and all(r.status == "ok" for r in done)
+
+
+def test_sharded_engine_admission_warms_after_device_put():
+    """ShardedServeCore must defer warmup until params/state carry their
+    final shardings — the first live call then retraces nothing."""
+    from repro.serve.sharded import ShardedServeEngine
+    from repro.dist import meshctx
+
+    m, params = _setup()
+    mesh = meshctx.make_mesh((1, 1), ("data", "model"))
+    adm = AdmissionConfig(pack=2, chunk_tokens=16)
+    eng = ShardedServeEngine(m, params, mesh=mesh, slots=2, max_len=64,
+                             admission=adm)
+    wl = eng.workload
+    before = dict(wl.trace_counts)
+    assert before["prefill_batch"] == len(wl.admission.buckets)
+    reqs = [eng.submit(p, 3) for p in _prompts(4, seed=9)]
+    eng.run_until_drained()
+    assert wl.trace_counts == before        # zero post-warmup compiles
+    assert all(r.status == "ok" and len(r.out) == 3 for r in reqs)

@@ -1,0 +1,238 @@
+"""Property tests over the admission pipeline (ISSUE 10 satellites 1-2).
+
+Hypothesis-style properties (the container has no hypothesis wheel, so the
+deterministic _hypothesis_fallback shim drives the draws):
+
+  * bucket-padded prefill is BIT-identical to exact-length prefill across
+    all three LM families (dense / SSM / hybrid) — cache contents AND the
+    greedy decode continuation;
+  * packed multi-row admission is bit-identical to sequential admission
+    for random packings;
+  * chunked prefill interleaved with decode preserves exactly-once
+    {ok,failed,shed,deadline} accounting and same-seed determinism under
+    a fault storm.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container image has no hypothesis wheel
+    from _hypothesis_fallback import given, settings, st
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.resil import FaultPlan, FaultSpec, ServePolicy, VirtualClock
+from repro.serve.admission import AdmissionConfig
+from repro.serve.engine import ServeEngine
+
+FAMILIES = ["tinyllama-1.1b-smoke", "mamba2-370m-smoke",
+            "recurrentgemma-2b-smoke"]
+
+# Many-example property sweeps over three model families: minutes on CPU.
+# Tier-1 (`pytest -q`) runs them; CI's fast lane deselects with -m 'not slow'.
+pytestmark = pytest.mark.slow
+
+_CACHE: dict = {}
+
+
+def _setup(arch):
+    if arch not in _CACHE:
+        cfg = get_config(arch)
+        m = build_model(cfg)
+        params = m.init(jax.random.PRNGKey(0), tp=1)
+        _CACHE[arch] = (m, params)
+    return _CACHE[arch]
+
+
+def _assert_cache_equal(a, b, msg=""):
+    for name in a._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(a, name)),
+                                      np.asarray(getattr(b, name)),
+                                      err_msg=f"{msg}: cache.{name}")
+
+
+# ---------------------------------------------------------------------------
+# bucket-padded prefill == exact-length prefill, bit for bit (satellite 1)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_padded_bucket_prefill_bit_identical(arch):
+    m, params = _setup(arch)
+    Pb, slots, max_len = 16, 4, 32
+
+    @settings(max_examples=5, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def prop(seed):
+        rng = np.random.default_rng(seed)
+        lens = rng.integers(1, Pb + 1, 3)
+        rows = [rng.integers(1, m.cfg.vocab, int(n)).astype(np.int32)
+                for n in lens]
+        # exact: one sequential prefill per row into its slot
+        exact = m.init_cache(tp=1, batch=slots, max_len=max_len)
+        for i, row in enumerate(rows):
+            _, exact = m.prefill(params, exact,
+                                 jnp.asarray(row), jnp.asarray(i, jnp.int32),
+                                 tp=1)
+        # padded: one bucketed call, every row padded to Pb
+        toks = np.zeros((len(rows), Pb), np.int32)
+        for i, row in enumerate(rows):
+            toks[i, :row.size] = row
+        padded = m.prefill_batch(
+            params, m.init_cache(tp=1, batch=slots, max_len=max_len),
+            jnp.asarray(toks), jnp.arange(len(rows), dtype=jnp.int32),
+            jnp.asarray(lens, jnp.int32), tp=1)
+        _assert_cache_equal(exact, padded, f"{arch} seed={seed}")
+        # the decode continuation must also agree bit-for-bit
+        nxt = rng.integers(1, m.cfg.vocab, (slots, 1)).astype(np.int32)
+        le, _ = m.decode_step(params, exact, jnp.asarray(nxt), tp=1)
+        lp, _ = m.decode_step(params, padded, jnp.asarray(nxt), tp=1)
+        np.testing.assert_array_equal(np.asarray(le), np.asarray(lp),
+                                      err_msg=f"{arch} decode seed={seed}")
+
+    prop()
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_dummy_pack_rows_leave_cache_untouched(arch):
+    """Out-of-bounds dummy rows (slot = batch) must be dropped entirely by
+    scatter.  Both calls run the SAME (pack=3, bucket=16) executable — only
+    the dummy rows' garbage content differs — so the caches must be
+    bit-identical: dummy content can never influence served state."""
+    m, params = _setup(arch)
+    Pb, slots, max_len = 16, 3, 32
+
+    @settings(max_examples=4, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def prop(seed):
+        rng = np.random.default_rng(seed)
+        row = rng.integers(1, m.cfg.vocab, 7).astype(np.int32)
+        slot_vec = jnp.asarray([1, slots, slots], jnp.int32)  # OOB dummies
+        len_vec = jnp.asarray([7, 0, 0], jnp.int32)
+        caches = []
+        for _ in range(2):                 # two different garbage fills
+            toks = np.zeros((3, Pb), np.int32)
+            toks[0, :7] = row
+            toks[1:] = rng.integers(1, m.cfg.vocab, (2, Pb))
+            caches.append(m.prefill_batch(
+                params, m.init_cache(tp=1, batch=slots, max_len=max_len),
+                jnp.asarray(toks), slot_vec, len_vec, tp=1))
+        _assert_cache_equal(caches[0], caches[1], f"{arch} seed={seed}")
+        # and the real row still decodes: scatter dropped rows, not data
+        nxt = rng.integers(1, m.cfg.vocab, (slots, 1)).astype(np.int32)
+        l0, _ = m.decode_step(params, caches[0], jnp.asarray(nxt), tp=1)
+        l1, _ = m.decode_step(params, caches[1], jnp.asarray(nxt), tp=1)
+        np.testing.assert_array_equal(np.asarray(l0), np.asarray(l1),
+                                      err_msg=f"{arch} decode seed={seed}")
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# packed admission == sequential admission at the engine (satellite 1)
+# ---------------------------------------------------------------------------
+
+
+def test_packed_admission_bit_identical_to_sequential():
+    m, params = _setup("tinyllama-1.1b-smoke")
+
+    @settings(max_examples=4, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def prop(seed):
+        rng = np.random.default_rng(seed)
+        prompts = [rng.integers(1, m.cfg.vocab,
+                                int(rng.integers(2, 30))).astype(np.int32)
+                   for _ in range(6)]
+        outs = {}
+        for pack in (1, 3):
+            adm = AdmissionConfig(pack=pack, warmup=False)
+            eng = ServeEngine(m, params, slots=4, max_len=64, seed=13,
+                              admission=adm, emitter=False)
+            reqs = [eng.submit(p, 4) for p in prompts]
+            eng.run_until_drained()
+            outs[pack] = [r.out for r in reqs]
+        assert outs[1] == outs[3], f"seed={seed}"
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill: exactly-once accounting + determinism (satellite 2)
+# ---------------------------------------------------------------------------
+
+
+def test_chunked_storm_exactly_once_and_deterministic():
+    m, params = _setup("tinyllama-1.1b-smoke")
+    adm = AdmissionConfig(pack=2, chunk_tokens=8, warmup=False)
+
+    def run(storm_seed):
+        clock = VirtualClock()
+        eng = ServeEngine(
+            m, params, slots=2, max_len=64, seed=3, admission=adm,
+            emitter=False, clock=clock,
+            faults=FaultPlan(FaultSpec(nan=0.15, drop=0.1),
+                             seed=storm_seed),
+            policy=ServePolicy(max_retries=8, backoff_ms=0.01))
+        rng = np.random.default_rng(42)
+        reqs = []
+        for ln in (3, 50, 5, 40, 2):      # two chunked long prompts
+            reqs.append(eng.submit(
+                rng.integers(1, m.cfg.vocab, ln).astype(np.int32), 3))
+        for _ in range(400):
+            eng.tick()
+            clock.advance(0.001)
+            if all(r.done for r in reqs):
+                break
+        return eng, reqs
+
+    @settings(max_examples=3, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def prop(storm_seed):
+        eng, reqs = run(storm_seed)
+        # exactly-once: every request terminates once, with a valid status
+        assert all(r.done for r in reqs)
+        assert len(eng.done) == len(reqs)
+        assert len({r.rid for r in eng.done}) == len(reqs)
+        assert {r.status for r in reqs} <= {"ok", "failed", "shed",
+                                            "deadline"}
+        for r in reqs:
+            assert len(r.out) <= r.budget
+            if r.status == "ok":
+                assert len(r.out) == 3
+        # same-seed determinism: identical recovery trace and outputs
+        eng2, reqs2 = run(storm_seed)
+        assert eng2.resil_log == eng.resil_log
+        assert [r.out for r in reqs2] == [r.out for r in reqs]
+        assert eng2.faults.injected == eng.faults.injected
+
+    prop()
+
+
+def test_quarantine_mid_chunk_rewinds_cursor():
+    """A guard trip against a request whose slot already finished chunked
+    admission must rewind cursor to zero — the retry re-admits from
+    scratch, bit-identical to a fresh run."""
+    from repro.resil import FaultEvent
+
+    m, params = _setup("tinyllama-1.1b-smoke")
+    adm = AdmissionConfig(chunk_tokens=8, warmup=False)
+    # nan lands on the first decode tick AFTER the 4-call chunked admission
+    events = [FaultEvent(tick=5, kind="nan", slot=0, value=float("nan"))]
+    eng = ServeEngine(m, params, slots=1, max_len=64, seed=5, admission=adm,
+                      emitter=False, faults=FaultPlan(events=events),
+                      policy=ServePolicy(backoff_ms=0.01))
+    prompt = np.random.default_rng(8).integers(
+        1, m.cfg.vocab, 30).astype(np.int32)
+    req = eng.submit(prompt, 4)
+    eng.run_until_drained()
+    assert req.status == "ok" and req.retries == 1
+    events_seen = [n for _, n, _ in eng.resil_log]
+    assert "retry" in events_seen
+    ref = ServeEngine(m, params, slots=1, max_len=64, seed=5, admission=adm,
+                      emitter=False)
+    rr = ref.submit(prompt, 4)
+    ref.run_until_drained()
+    assert req.out == rr.out              # recovery == never-faulted run

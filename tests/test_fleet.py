@@ -274,3 +274,49 @@ def test_same_seed_recovery_trace_is_deterministic():
                              for r in done)))
 
     assert run() == run()
+
+
+def test_replica_loss_mid_chunked_admission_rewinds_and_recovers():
+    """Hard-killing a replica while an LM request is mid-chunked-prefill
+    must rewind the admission cursor to zero and front-requeue the request
+    onto a survivor, where it re-admits from scratch and finishes with the
+    same payload as a never-faulted run."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serve.admission import AdmissionConfig
+    from repro.serve.engine import ServeEngine
+
+    cfg = get_config("tinyllama-1.1b-smoke")
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0), tp=1)
+    adm = AdmissionConfig(chunk_tokens=8, warmup=False)
+
+    def build(mesh, rid):
+        return ServeEngine(m, params, slots=1, max_len=64, seed=7,
+                           admission=adm, emitter=False)
+
+    sup = FleetSupervisor(build, 2, tp=1, policy=_policy(), rescale_ms=0.0)
+    prompt = np.random.default_rng(5).integers(
+        1, cfg.vocab, 40).astype(np.int32)
+    req = sup.submit(prompt, 3)
+    eng0 = sup.replicas[0].engine           # ties route to replica 0
+    eng0.tick()                             # first chunk only
+    assert req in eng0.slot_req
+    assert 0 < req.cursor < req.payload_units - 1
+    assert not eng0.workload.admit_complete(req)
+
+    sup.kill(0)
+    assert req.cursor == 0                  # rewound: fresh re-admission
+    assert req in sup.replicas[1].engine.queue
+    done = sup.run_until_drained()
+    assert [r.rid for r in done] == [req.rid] and req.status == "ok"
+    names = [n for _, n, _ in sup.resil_log]
+    assert "replica_lost" in names and "rewind" in names
+
+    ref_eng = ServeEngine(m, params, slots=1, max_len=64, seed=7,
+                          admission=adm, emitter=False)
+    ref = ref_eng.submit(prompt, 3)
+    ref_eng.run_until_drained()
+    assert req.out == ref.out               # recovery == clean run

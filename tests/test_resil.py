@@ -455,3 +455,44 @@ def test_dropped_tick_charges_nothing():
     assert int(eng.stats.c_dropped_ticks.value) == 1
     # the dropped tick ran no step: steps == frames, not frames + 1
     assert int(eng.stats.c_steps.value) == 3
+
+
+def test_nan_against_decoding_slot_during_chunked_admission():
+    """A guard trip on a DECODING slot while a neighbour slot is still
+    chunk-admitting a long prompt: the victim retries and recovers, the
+    mid-admission slot is untouched, accounting stays exactly-once, and
+    both payloads match a fault-free run."""
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serve.admission import AdmissionConfig
+    from repro.serve.engine import ServeEngine
+
+    cfg = get_config("tinyllama-1.1b-smoke")
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0), tp=1)
+    adm = AdmissionConfig(chunk_tokens=8, warmup=False)
+    rng = np.random.default_rng(21)
+    short = rng.integers(1, cfg.vocab, 3).astype(np.int32)
+    long = rng.integers(1, cfg.vocab, 40).astype(np.int32)
+
+    def run(faults):
+        eng = ServeEngine(m, params, slots=2, max_len=64, seed=11,
+                          admission=adm, emitter=False, faults=faults,
+                          policy=ServePolicy(backoff_ms=0.01))
+        rs = eng.submit(short, 4)
+        rl = eng.submit(long, 4)
+        eng.run_until_drained()
+        return eng, rs, rl
+
+    # tick 1 admits the short row + first chunk of the long one; the nan at
+    # tick 3 lands while the long prompt is still mid-admission
+    plan = FaultPlan(events=[FaultEvent(tick=3, kind="nan", slot=0,
+                                        value=float("nan"))])
+    eng, rs, rl = run(plan)
+    assert rs.status == "ok" and rl.status == "ok"
+    assert rs.retries == 1 and rl.retries == 0
+    assert len(eng.done) == 2
+    names = [n for _, n, _ in eng.resil_log]
+    assert "guard_tripped" in names and "retry" in names
+    _, crs, crl = run(None)
+    assert rs.out == crs.out and rl.out == crl.out
